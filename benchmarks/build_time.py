@@ -1,0 +1,43 @@
+"""§3.3 complexity — build-phase cost split (calibration vs refinement) and
+Online-MCGI's bootstrap shortcut, on a fixed dataset."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks import common
+from repro.core import build, lid, mapping, online
+
+
+def run(csv: common.Csv, scale: str = "small"):
+    x, _, _ = common.dataset("sift-proxy", scale)
+    x = x[:8000]
+    cfg = build.BuildConfig(degree=24, beam_width=48, iters=1, batch=512,
+                            max_hops=96)
+
+    t0 = time.perf_counter()
+    profile = lid.estimate_dataset_lid(x, k=cfg.lid_k)
+    jax.block_until_ready(profile.lid)
+    t_cal = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    alpha = mapping.AlphaMapping(mu=profile.mu, sigma=profile.sigma)(profile.lid)
+    adj = build.build_with_alpha(x, alpha, cfg)
+    jax.block_until_ready(adj)
+    t_ref = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    mu, sigma = lid.bootstrap_stats(x, jax.random.PRNGKey(1), sample=1024,
+                                    k=cfg.lid_k)
+    jax.block_until_ready(mu)
+    t_boot = time.perf_counter() - t0
+
+    csv.add("build/calibration", t_cal, f"n={x.shape[0]} full LID pass")
+    csv.add("build/refinement", t_ref, f"iters={cfg.iters}")
+    csv.add("build/bootstrap", t_boot,
+            f"online-mcgi stats; speedup_vs_calibration={t_cal/max(t_boot,1e-9):.1f}x")
+    csv.add("build/phase_ratio", 0.0,
+            f"calibration/refinement={t_cal/max(t_ref,1e-9):.2f} "
+            "(paper: calibration must not dominate)")
+    return {"cal": t_cal, "ref": t_ref, "boot": t_boot}

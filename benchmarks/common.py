@@ -1,0 +1,111 @@
+"""Shared benchmark plumbing: dataset/index caches, timing, CSV emission.
+
+Benchmarks execute the *full algorithms* at reduced N (this host is one CPU
+core); billion-scale behaviour is exercised structurally by the dry-run.
+``--scale small`` (default, used by ``python -m benchmarks.run``) keeps the
+whole suite to minutes; ``--scale paper`` runs the registry-size proxies.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build, distance, online
+from repro.core.hnsw import HnswIndex, build_hnsw
+from repro.core.ivf import IvfIndex, build_ivf
+from repro.data import synthetic
+from repro.index import TieredIndex, build_tiered_index, load_index, save_index
+
+CACHE = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "bench_cache"
+
+SMALL_SPECS = {
+    "sift-proxy": dataclasses.replace(
+        synthetic.REGISTRY["sift1m-proxy"], name="sift-proxy", n=12_000,
+        n_queries=200),
+    "glove-proxy": dataclasses.replace(
+        synthetic.REGISTRY["glove-proxy"], name="glove-proxy-s", n=12_000,
+        n_queries=200),
+    "gist-proxy": dataclasses.replace(
+        synthetic.REGISTRY["gist1m-proxy"], name="gist-proxy-s", n=8_000,
+        d=480, n_queries=150),
+    "sift1b-proxy": dataclasses.replace(
+        synthetic.REGISTRY["sift1b-proxy"], name="sift1b-proxy-s", n=20_000,
+        n_queries=200),
+    "t2i-proxy": dataclasses.replace(
+        synthetic.REGISTRY["t2i-proxy"], name="t2i-proxy-s", n=20_000,
+        n_queries=200),
+}
+
+BUILD_CFG = build.BuildConfig(degree=32, beam_width=64, iters=2, batch=512,
+                              max_hops=128)
+
+
+def dataset(name: str, scale: str = "small"):
+    spec = SMALL_SPECS[name] if scale == "small" else synthetic.REGISTRY[
+        {"sift-proxy": "sift1m-proxy", "glove-proxy": "glove-proxy",
+         "gist-proxy": "gist1m-proxy", "sift1b-proxy": "sift1b-proxy",
+         "t2i-proxy": "t2i-proxy"}[name]]
+    x, q = synthetic.make_dataset(spec, seed=0)
+    gt_d, gt_i = distance.brute_force_topk(q, x, k=10)
+    return x, q, gt_i
+
+
+def _cache_path(tag: str) -> pathlib.Path:
+    CACHE.mkdir(parents=True, exist_ok=True)
+    return CACHE / f"{tag}.npz"
+
+
+def cached_graph(tag: str, builder: Callable[[], "build.GraphIndex"]):
+    """Graph indexes are expensive on 1 core — cache across benchmark runs."""
+    from repro.core.types import GraphIndex
+
+    p = _cache_path(tag)
+    if p.exists():
+        with np.load(p) as z:
+            return GraphIndex(
+                adj=jnp.asarray(z["adj"]), entry=jnp.asarray(z["entry"]),
+                alpha=jnp.asarray(z["alpha"]), lid=jnp.asarray(z["lid"]),
+                mu=jnp.asarray(z["mu"]), sigma=jnp.asarray(z["sigma"]),
+            )
+    idx = builder()
+    np.savez_compressed(
+        p, adj=np.asarray(idx.adj), entry=np.asarray(idx.entry),
+        alpha=np.asarray(idx.alpha), lid=np.asarray(idx.lid),
+        mu=np.asarray(idx.mu), sigma=np.asarray(idx.sigma),
+    )
+    return idx
+
+
+def timed(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> tuple:
+    """(result, seconds_per_call) with jit warmup + block_until_ready."""
+    out = None
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    dt = (time.perf_counter() - t0) / iters
+    return out, dt
+
+
+class Csv:
+    """The contract of benchmarks.run: ``name,us_per_call,derived`` rows."""
+
+    def __init__(self):
+        self.rows: list[tuple[str, float, str]] = []
+
+    def add(self, name: str, seconds: float, derived: str = ""):
+        self.rows.append((name, seconds * 1e6, derived))
+        print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+
+    def extend(self, other: "Csv"):
+        self.rows.extend(other.rows)

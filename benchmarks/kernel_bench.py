@@ -1,0 +1,44 @@
+"""Kernel microbenchmarks: the framework's hot ops vs their jnp oracles
+(CPU timings are indicative only; the TPU path is the Pallas kernel — see
+EXPERIMENTS.md §Perf for the compiled-artifact analysis)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.kernels import ref
+from repro.pq import adc_distances, build_lut, pq_encode, train_pq
+
+
+def run(csv: common.Csv, scale: str = "small"):
+    key = jax.random.PRNGKey(0)
+    n, d, nq = 50_000, 128, 64
+    x = jax.random.normal(key, (n, d))
+    q = jax.random.normal(jax.random.fold_in(key, 1), (nq, d))
+
+    f = jax.jit(ref.l2_distance_ref)
+    _, dt = common.timed(f, q, x)
+    csv.add("kernels/bulk_l2", dt,
+            f"{nq}x{n}x{d} gflops={2*nq*n*d/dt/1e9:.1f}")
+
+    book = train_pq(x[:8192], m=16, iters=4)
+    codes = pq_encode(x, book)
+    luts = build_lut(q, book.centroids)
+    f = jax.jit(adc_distances)
+    _, dt = common.timed(f, luts, codes)
+    csv.add("kernels/pq_adc_scan", dt,
+            f"{nq}x{n} codes/s={nq*n/dt:.2e}")
+
+    f = jax.jit(functools.partial(ref.topk_ref, k=10))
+    dmat = jax.random.uniform(key, (nq, n))
+    _, dt = common.timed(lambda: f(dmat))
+    csv.add("kernels/topk", dt, f"k=10 over {nq}x{n}")
+
+    d2 = jnp.sort(jax.random.uniform(key, (n, 16)), axis=1) + 0.01
+    f = jax.jit(ref.lid_ref)
+    _, dt = common.timed(f, d2)
+    csv.add("kernels/lid_estimate", dt, f"{n} points")
+    return {}

@@ -1,0 +1,42 @@
+"""Fig. 2c — query latency distribution at the high-recall operating point.
+
+Tail latency is I/O-count-driven on disk; we report measured per-query wall
+time (CPU) and the modelled SSD time per query (hops x read latency), with
+mean / p95 / p99.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import build, distance, search
+from repro.index.disk import DiskTierModel
+
+
+def run(csv: common.Csv, scale: str = "small"):
+    x, q, gt = common.dataset("gist-proxy", scale)
+    model = DiskTierModel()
+    mcgi = common.cached_graph(
+        f"gist-proxy-{scale}-mcgi", lambda: build.build_mcgi(x, common.BUILD_CFG))
+    vam = common.cached_graph(
+        f"gist-proxy-{scale}-vamana",
+        lambda: build.build_vamana(x, 1.2, common.BUILD_CFG))
+    out = {}
+    for tag, idx in (("mcgi", mcgi), ("diskann", vam)):
+        ids, _, stats = search.beam_search_exact(
+            x, idx.adj, q, idx.entry, beam_width=64, max_hops=256, k=10)
+        r = float(distance.recall_at_k(ids, gt))
+        lat_us = np.asarray(model.latency_us(stats.hops))
+        row = {
+            "recall": r,
+            "mean_ms": float(lat_us.mean()) / 1e3,
+            "p95_ms": float(np.percentile(lat_us, 95)) / 1e3,
+            "p99_ms": float(np.percentile(lat_us, 99)) / 1e3,
+        }
+        out[tag] = row
+        csv.add(f"latency/{tag}", 0.0,
+                f"recall={r:.4f} ssd mean={row['mean_ms']:.2f}ms "
+                f"p95={row['p95_ms']:.2f} p99={row['p99_ms']:.2f}")
+    csv.add("fig2c/tail_reduction", 0.0,
+            f"p99 diskann/mcgi={out['diskann']['p99_ms']/out['mcgi']['p99_ms']:.2f}x")
+    return out

@@ -1,0 +1,32 @@
+"""§3.1 validation — LID estimator accuracy on known-intrinsic-dim data +
+per-dataset LID population statistics (the paper's Table 3 mu/sigma analog).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import lid
+from repro.data.synthetic import gaussian_subspace_clusters, uniform_hypercube
+
+
+def run(csv: common.Csv, scale: str = "small"):
+    key = jax.random.PRNGKey(0)
+    out = {}
+    for d_true in (2, 4, 8, 16):
+        x = gaussian_subspace_clusters(
+            jax.random.fold_in(key, d_true), 4000, 64, d_intrinsic=d_true,
+            n_clusters=1, noise=0.0)
+        (prof), dt = common.timed(lambda: lid.estimate_dataset_lid(x, k=20))
+        med = float(jnp.median(prof.lid))
+        out[d_true] = med
+        csv.add(f"lid_accuracy/d={d_true}", dt,
+                f"median_lid={med:.2f} rel_err={abs(med-d_true)/d_true:.2f}")
+    # Population stats per benchmark dataset (Table 3 analog).
+    for ds in ("sift-proxy", "gist-proxy", "t2i-proxy"):
+        x, _, _ = common.dataset(ds, scale)
+        prof = lid.estimate_dataset_lid(x[:4000], k=16)
+        csv.add(f"lid_stats/{ds}", 0.0,
+                f"mu={float(prof.mu):.2f} sigma={float(prof.sigma):.2f}")
+    return out

@@ -1,0 +1,126 @@
+"""Analytic MODEL_FLOPS per (arch x shape) — the "useful work" numerator of
+§Roofline's MODEL_FLOPS / HLO_FLOPs ratio.
+
+Conventions:
+  * LM train:   6 * N_active * tokens   (fwd 2ND + bwd 4ND)
+  * LM prefill: 2 * N_active * tokens + attention term
+  * LM decode:  2 * N_active * batch + KV-cache attention term
+    attention term (causal, per layer): GQA qk+av = 4 * B * S_kv * Hq * d_h
+    per new token; train/prefill use the causal half-sum.
+  * GNN: per layer 2*N*d_in*d_out (projection) + 4*E*H*F (SDDMM+SpMM); x3
+    for training (bwd ~ 2x fwd).
+  * RecSys: MLP/interaction matmul counts; x3 for training.
+  * MCGI serve: queries * hops * degree * (2*M adds for ADC) + rerank
+    (beam * 2D) + merge — measured hops come from benchmarks, the dry-run
+    uses max_hops as the budget bound.
+"""
+from __future__ import annotations
+
+from repro.configs import base as cfg_base
+
+
+def _lm_attention_flops(cfg, batch: int, s_kv: int, causal_prefill: bool,
+                        new_tokens: int) -> float:
+    if cfg.attention == "mla":
+        h, dh = cfg.mla.n_heads, cfg.mla.qk_nope_dim + cfg.mla.qk_rope_dim
+        dv = cfg.mla.v_head_dim
+    else:
+        h, dh, dv = cfg.n_heads, cfg.d_head, cfg.d_head
+    per_token_pair = 2 * h * dh + 2 * h * dv  # qk + av MACs*2
+    if causal_prefill:
+        pairs = batch * s_kv * (s_kv + 1) / 2
+    else:
+        pairs = batch * new_tokens * s_kv
+    return per_token_pair * pairs * cfg.n_layers
+
+
+def lm_flops(arch_id: str, shape: str) -> float:
+    spec = cfg_base.get(arch_id)
+    cfg = spec.config
+    cell = spec.cell(shape)
+    n_active = cfg.n_active_params()
+    b, s = cell.meta["batch"], cell.meta["seq"]
+    if cell.kind == cfg_base.TRAIN:
+        dense = 6.0 * n_active * b * s
+        attn = 3.0 * _lm_attention_flops(cfg, b, s, True, 0)
+        return dense + attn
+    if cell.kind == cfg_base.PREFILL:
+        return 2.0 * n_active * b * s + _lm_attention_flops(cfg, b, s, True, 0)
+    # decode: one token against an S-long cache
+    return 2.0 * n_active * b + _lm_attention_flops(cfg, b, s, False, 1)
+
+
+def gnn_flops(arch_id: str, shape: str) -> float:
+    spec = cfg_base.get(arch_id)
+    cell = spec.cell(shape)
+    m = cell.meta
+    cfgs = spec.config
+    if m["level"] == "graph":
+        n = m["n_nodes"] * m["batch_graphs"]
+        e = m["n_edges"] * m["batch_graphs"]
+    else:
+        n, e = m["n_nodes"], m["n_edges"]
+    h, f = cfgs.n_heads, cfgs.d_hidden
+    l1 = 2 * n * m["d_feat"] * h * f + 4 * e * h * f
+    l2 = 2 * n * (h * f) * m["n_classes"] + 4 * e * m["n_classes"]
+    return 3.0 * (l1 + l2)  # train step
+
+
+def recsys_flops(arch_id: str, shape: str) -> float:
+    spec = cfg_base.get(arch_id)
+    cfg = spec.config
+    cell = spec.cell(shape)
+    b = cell.meta.get("batch", 1)
+    c = cell.meta.get("n_candidates", 0)
+
+    def mlp_flops(sizes, rows):
+        return sum(2 * sizes[i] * sizes[i + 1] for i in range(len(sizes) - 1)) * rows
+
+    if arch_id == "dlrm-mlperf":
+        per_row = (mlp_flops((cfg.n_dense,) + cfg.bot_mlp, 1)
+                   + 2 * 27 * 27 * cfg.embed_dim
+                   + mlp_flops((cfg.n_interact + cfg.bot_mlp[-1],) + cfg.top_mlp, 1))
+    elif arch_id == "deepfm":
+        per_row = (4 * cfg.n_fields * cfg.embed_dim
+                   + mlp_flops((cfg.n_fields * cfg.embed_dim,) + cfg.mlp + (1,), 1))
+    elif arch_id == "mind":
+        per_row = (2 * cfg.hist_len * cfg.embed_dim ** 2          # S map
+                   + cfg.capsule_iters * 4 * cfg.hist_len
+                   * cfg.n_interests * cfg.embed_dim)
+        if c:
+            per_row += 2 * c * cfg.n_interests * cfg.embed_dim / max(b, 1)
+    else:  # bert4rec
+        d = cfg.embed_dim
+        per_layer = (2 * cfg.seq_len * d * 3 * d + 4 * cfg.seq_len ** 2 * d
+                     + 2 * cfg.seq_len * d * d
+                     + 2 * cfg.seq_len * d * cfg.d_ff_mult * d * 2)
+        per_row = cfg.n_blocks * per_layer
+        if c:
+            per_row += 2 * c * d / max(b, 1)
+    rows = b if cell.kind != cfg_base.RETRIEVAL else max(b, 1)
+    total = per_row * rows
+    if cell.kind == cfg_base.RETRIEVAL and arch_id in ("dlrm-mlperf", "deepfm"):
+        total = per_row * c  # full-model scoring of every candidate
+    if cell.kind == cfg_base.TRAIN:
+        total *= 3.0
+    return total
+
+
+def mcgi_flops(arch_id: str, shape: str) -> float:
+    spec = cfg_base.get(arch_id)
+    cfg = spec.config
+    nq = cfg.queries
+    m = cfg.m_pq or 0
+    per_hop = cfg.degree * (2 * m if m else 2 * cfg.d)
+    search = nq * cfg.max_hops * per_hop
+    rerank = nq * cfg.l_search * 2 * cfg.d
+    lut = nq * (m * 256 * 2 * (cfg.d // max(m, 1)) if m else 0)
+    return float(search + rerank + lut)
+
+
+def model_flops(arch_id: str, shape: str) -> float:
+    family = cfg_base.get(arch_id).family
+    return {
+        "lm": lm_flops, "gnn": gnn_flops, "recsys": recsys_flops,
+        "mcgi": mcgi_flops,
+    }[family](arch_id, shape)

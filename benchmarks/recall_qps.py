@@ -1,0 +1,104 @@
+"""Fig. 1 / Table 1 — Recall@10 vs QPS for MCGI, DiskANN(Vamana), IVF-Flat,
+HNSW on the SIFT/GloVe/GIST proxies.
+
+Emits per-operating-point rows and the Table-1 summary (peak QPS at
+recall >= 0.95 per algorithm), plus the paper's headline ratio
+MCGI/DiskANN QPS at 95% recall on the GIST-like (high-LID) dataset.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import build, distance, search
+from repro.core.hnsw import build_hnsw, search_hnsw
+from repro.core.ivf import build_ivf, search_ivf
+
+L_SWEEP = (8, 16, 24, 32, 48, 64, 96)
+NPROBE_SWEEP = (1, 2, 4, 8, 16, 32)
+
+
+def _graph_ops(x, q, gt, idx, tag, csv, sweep=L_SWEEP):
+    points = []
+    for L in sweep:
+        fn = functools.partial(
+            search.beam_search_exact, x, idx.adj, q, idx.entry,
+            beam_width=L, max_hops=4 * L, k=10,
+        )
+        (ids, _, stats), dt = common.timed(lambda: fn())
+        r = float(distance.recall_at_k(ids, gt))
+        qps = q.shape[0] / dt
+        hops = float(stats.hops.mean())
+        csv.add(f"recall_qps/{tag}/L={L}", dt / q.shape[0],
+                f"recall={r:.4f} qps={qps:.1f} io_hops={hops:.1f}")
+        points.append((r, qps, hops))
+    return points
+
+
+def peak_qps_at(points, target=0.95):
+    ok = [qps for r, qps, _ in points if r >= target]
+    return max(ok) if ok else float("nan")
+
+
+def io_at(points, target=0.95):
+    ok = [h for r, _, h in points if r >= target]
+    return min(ok) if ok else float("nan")
+
+
+def run(csv: common.Csv, scale: str = "small"):
+    summary = {}
+    for ds in ("sift-proxy", "glove-proxy", "gist-proxy"):
+        x, q, gt = common.dataset(ds, scale)
+        n = x.shape[0]
+
+        mcgi = common.cached_graph(
+            f"{ds}-{scale}-mcgi", lambda: build.build_mcgi(x, common.BUILD_CFG))
+        vam = common.cached_graph(
+            f"{ds}-{scale}-vamana",
+            lambda: build.build_vamana(x, 1.2, common.BUILD_CFG))
+
+        pts_m = _graph_ops(x, q, gt, mcgi, f"{ds}/mcgi", csv)
+        pts_v = _graph_ops(x, q, gt, vam, f"{ds}/diskann", csv)
+
+        ivf = build_ivf(x, nlist=max(32, n // 256), iters=6)
+        pts_i = []
+        for np_ in NPROBE_SWEEP:
+            fn = functools.partial(search_ivf, ivf, x, q, nprobe=np_, k=10)
+            (ids, _, scanned), dt = common.timed(lambda: fn())
+            r = float(distance.recall_at_k(ids, gt))
+            csv.add(f"recall_qps/{ds}/ivf/nprobe={np_}", dt / q.shape[0],
+                    f"recall={r:.4f} qps={q.shape[0]/dt:.1f} "
+                    f"scanned={float(scanned.mean()):.0f}")
+            pts_i.append((r, q.shape[0] / dt, float(scanned.mean())))
+
+        hnsw = build_hnsw(x, m=16, ef_construction=100)
+        pts_h = []
+        for ef in (16, 32, 64, 96):
+            fn = functools.partial(search_hnsw, hnsw, x, q, ef=ef, k=10)
+            (ids, _, stats), dt = common.timed(lambda: fn())
+            r = float(distance.recall_at_k(ids, gt))
+            csv.add(f"recall_qps/{ds}/hnsw/ef={ef}", dt / q.shape[0],
+                    f"recall={r:.4f} qps={q.shape[0]/dt:.1f}")
+            pts_h.append((r, q.shape[0] / dt, 0.0))
+
+        summary[ds] = {
+            "mcgi": peak_qps_at(pts_m), "diskann": peak_qps_at(pts_v),
+            "ivf": peak_qps_at(pts_i), "hnsw": peak_qps_at(pts_h),
+            "mcgi_io@95": io_at(pts_m), "diskann_io@95": io_at(pts_v),
+        }
+
+    for ds, row in summary.items():
+        ratio = row["mcgi"] / row["diskann"] if row["diskann"] else float("nan")
+        io_ratio = (row["diskann_io@95"] / row["mcgi_io@95"]
+                    if row["mcgi_io@95"] else float("nan"))
+        csv.add(
+            f"table1/{ds}", 0.0,
+            f"peakQPS@95 mcgi={row['mcgi']:.1f} diskann={row['diskann']:.1f} "
+            f"ivf={row['ivf']:.1f} hnsw={row['hnsw']:.1f} "
+            f"mcgi/diskann={ratio:.2f}x io_reduction={io_ratio:.2f}x",
+        )
+    return summary

@@ -1,0 +1,34 @@
+"""Fig. 2b — recall trajectory vs search list size L (MCGI must track
+DiskANN: the adaptive build must not degrade search-quality-per-L)."""
+from __future__ import annotations
+
+import functools
+
+from benchmarks import common
+from repro.core import build, distance, search
+
+
+def run(csv: common.Csv, scale: str = "small"):
+    x, q, gt = common.dataset("gist-proxy", scale)
+    mcgi = common.cached_graph(
+        f"gist-proxy-{scale}-mcgi", lambda: build.build_mcgi(x, common.BUILD_CFG))
+    vam = common.cached_graph(
+        f"gist-proxy-{scale}-vamana",
+        lambda: build.build_vamana(x, 1.2, common.BUILD_CFG))
+    rows = {}
+    for tag, idx in (("mcgi", mcgi), ("diskann", vam)):
+        traj = []
+        for L in (10, 20, 40, 80, 120):
+            ids, _, _ = search.beam_search_exact(
+                x, idx.adj, q, idx.entry, beam_width=L, max_hops=4 * L, k=10)
+            r = float(distance.recall_at_k(ids, gt))
+            traj.append((L, r))
+            csv.add(f"recall_vs_L/{tag}/L={L}", 0.0, f"recall={r:.4f}")
+        rows[tag] = traj
+    # Parity metric (signed): the paper's claim is MCGI never trails
+    # DiskANN's recall-per-L; a positive "worst" means MCGI dominates.
+    worst = min(a[1] - b[1] for a, b in zip(rows["mcgi"], rows["diskann"]))
+    best = max(a[1] - b[1] for a, b in zip(rows["mcgi"], rows["diskann"]))
+    csv.add("fig2b/parity", 0.0,
+            f"recall_delta(mcgi-diskann) worst={worst:+.4f} best={best:+.4f}")
+    return rows

@@ -1,0 +1,94 @@
+"""§Roofline — turn dry-run artifacts into the per-(arch x shape x mesh)
+roofline table: three terms in seconds, dominant bottleneck, MODEL_FLOPS /
+HLO_FLOPs useful-work ratio, and a one-line "what would move the dominant
+term" note.
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun), writes
+experiments/roofline.csv + a markdown table for EXPERIMENTS.md.
+
+Run: PYTHONPATH=src python -m benchmarks.roofline
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.model_flops import model_flops
+
+DRYRUN = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+OUT = pathlib.Path(__file__).resolve().parents[1] / "experiments"
+
+_MOVE_NOTES = {
+    "compute_s": "compute-bound: raise MXU utilisation (fuse small ops, "
+                 "bf16 everywhere, cut masked/redundant FLOPs)",
+    "memory_s": "HBM-bound: shrink bytes/step (dtype, remat policy, fusion, "
+                "better layouts to avoid spills/transposes)",
+    "collective_s": "ICI-bound: re-shard to cut all-gather/all-reduce volume, "
+                    "overlap collectives with compute, compress payloads",
+}
+
+
+def load_records() -> list[dict]:
+    recs = []
+    for p in sorted(DRYRUN.glob("*.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def summarise(rec: dict) -> dict:
+    terms = rec["roofline"]
+    mf = model_flops(rec["arch"], rec["shape"])
+    hlo_total = rec["cost"]["flops_per_device"] * rec["n_chips"]
+    ratio = mf / hlo_total if hlo_total else float("nan")
+    bound = terms["bound_s"]
+    # Roofline fraction: useful work at peak over the bound time.
+    ideal_s = mf / (rec["n_chips"] * 197e12)
+    frac = ideal_s / bound if bound else float("nan")
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": "x".join(map(str, rec["mesh"])),
+        "compute_s": terms["compute_s"],
+        "memory_s": terms["memory_s"],
+        "collective_s": terms["collective_s"],
+        "dominant": terms["dominant"],
+        "model_flops": mf,
+        "hlo_flops_total": hlo_total,
+        "useful_ratio": ratio,
+        "roofline_fraction": frac,
+        "note": _MOVE_NOTES[terms["dominant"]],
+    }
+
+
+def main() -> None:
+    rows = [summarise(r) for r in load_records()]
+    if not rows:
+        print("no dry-run artifacts found; run repro.launch.dryrun first")
+        return
+    csv_path = OUT / "roofline.csv"
+    cols = list(rows[0].keys())
+    with csv_path.open("w") as f:
+        f.write(",".join(cols) + "\n")
+        for r in rows:
+            f.write(",".join(str(r[c]) for c in cols) + "\n")
+    md_path = OUT / "roofline.md"
+    with md_path.open("w") as f:
+        f.write("| arch | shape | mesh | compute_s | memory_s | collective_s "
+                "| dominant | useful ratio | roofline frac |\n")
+        f.write("|---|---|---|---|---|---|---|---|---|\n")
+        for r in rows:
+            f.write(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+                f"| {r['collective_s']:.3e} | {r['dominant'].replace('_s','')} "
+                f"| {r['useful_ratio']:.2f} | {r['roofline_fraction']:.2%} |\n"
+            )
+    print(f"wrote {csv_path} and {md_path} ({len(rows)} cells)")
+    for r in rows:
+        print(f"{r['arch']:24s} {r['shape']:14s} {r['mesh']:9s} "
+              f"dom={r['dominant']:13s} useful={r['useful_ratio']:.2f} "
+              f"frac={r['roofline_fraction']:.1%}")
+
+
+if __name__ == "__main__":
+    main()

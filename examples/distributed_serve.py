@@ -1,0 +1,77 @@
+"""Distributed MCGI serving on a virtual 8-device mesh: shard the index,
+fan out queries, merge global top-k, then kill a shard and watch the hedged
+merge degrade gracefully — the fault-tolerance story at example scale.
+
+    PYTHONPATH=src python examples/distributed_serve.py
+(sets XLA_FLAGS itself; run as a script, not inside another jax process)
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import AxisType, NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.core import BuildConfig, brute_force_topk, recall_at_k  # noqa: E402
+from repro.core import build  # noqa: E402
+from repro.data import make_dataset  # noqa: E402
+from repro.distributed import sharded_search as ss  # noqa: E402
+from repro.pq import pq_encode, train_pq  # noqa: E402
+
+
+def main():
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+    n_shards = mesh.devices.size
+    x, queries = make_dataset("tiny-mixture", seed=0)
+    queries = queries[:64]
+    n = (x.shape[0] // n_shards) * n_shards
+    x = x[:n]
+    per = n // n_shards
+    print(f"[dist] {n} points over {n_shards} shards ({per}/shard)")
+
+    cfg = BuildConfig(degree=16, beam_width=32, iters=1, batch=256, max_hops=64)
+    adj = jnp.concatenate([
+        build.build_with_alpha(x[s * per:(s + 1) * per],
+                               jnp.full((per,), 1.2, jnp.float32), cfg)
+        for s in range(n_shards)
+    ])
+    book = train_pq(x, m=8, iters=4)
+    codes = pq_encode(x, book)
+    row = NamedSharding(mesh, P(("data", "model"), None))
+    arrays = {
+        "adj": jax.device_put(adj, row),
+        "codes": jax.device_put(codes, row),
+        "vectors": jax.device_put(x, row),
+        "centroids": jax.device_put(book.centroids, NamedSharding(mesh, P())),
+    }
+    gt_d, gt_ids = brute_force_topk(queries, x, k=10)
+
+    d2, shard_ids, local_ids = ss.distributed_search(
+        mesh, arrays, queries, beam_width=32, max_hops=64, k=10,
+        query_chunk=16)
+    gids = np.asarray(shard_ids) * per + np.asarray(local_ids)
+    print(f"[dist] all shards up:   recall@10="
+          f"{float(recall_at_k(jnp.asarray(gids), gt_ids)):.4f}")
+
+    # Straggler/fault injection: shard 5 misses its deadline.
+    ok = jnp.ones((n_shards,), jnp.bool_).at[5].set(False)
+    ok = jax.device_put(ok, NamedSharding(mesh, P(("data", "model"))))
+    d2, shard_ids, local_ids = ss.distributed_search(
+        mesh, arrays, queries, shard_ok=ok, beam_width=32, max_hops=64,
+        k=10, query_chunk=16)
+    gids = np.asarray(shard_ids) * per + np.asarray(local_ids)
+    r = float(recall_at_k(jnp.asarray(gids), gt_ids))
+    print(f"[dist] shard 5 dropped: recall@10={r:.4f} "
+          f"(graceful: lost ~1/{n_shards} of the data, no recompilation, "
+          f"no stall)")
+    assert (np.asarray(shard_ids) != 5).all()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Architecture registry: one module per assigned architecture (exact
+published configs) plus the paper's own dataset configs. ``--arch <id>``
+resolution goes through repro.configs.base.get()."""
+from repro.configs.base import ArchSpec, ShapeCell, all_archs, get  # noqa: F401

@@ -1,0 +1,125 @@
+"""Config-system core: architecture specs, shape cells, the registry.
+
+Every assigned architecture registers an :class:`ArchSpec` binding
+  * its exact published configuration (``config``),
+  * a reduced same-family smoke configuration (``smoke_config``),
+  * its shape-cell set (each cell knows which step kind it lowers).
+
+``launch/cells.py`` turns (spec, cell, mesh) into a concrete
+(step_fn, arg_specs) pair for the dry-run; ``launch/train.py`` /
+``serve.py`` use the same specs to run real steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+# Step kinds a shape cell can lower.
+TRAIN = "train"            # train_step (fwd+bwd+optimizer)
+PREFILL = "prefill"        # LM prefill forward
+DECODE = "decode"          # LM single-token decode vs KV cache
+SERVE = "serve"            # recsys forward scoring
+RETRIEVAL = "retrieval"    # 1 user vs n_candidates scoring
+GNN_TRAIN = "gnn_train"    # full-graph or sampled-block train step
+MCGI_SEARCH = "mcgi_search"  # distributed beam search (the paper's serving)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str
+    meta: dict[str, Any]
+    note: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    family: str                       # "lm" | "gnn" | "recsys" | "mcgi"
+    config: Any
+    smoke_config: Any
+    shapes: tuple[ShapeCell, ...]
+    source: str = ""                  # provenance tag from the assignment
+
+    def cell(self, name: str) -> ShapeCell:
+        for c in self.shapes:
+            if c.name == name:
+                return c
+        raise KeyError(f"{self.arch_id} has no shape {name!r}: "
+                       f"{[c.name for c in self.shapes]}")
+
+
+_REGISTRY: dict[str, ArchSpec] = {}
+
+
+def register(spec: ArchSpec) -> ArchSpec:
+    assert spec.arch_id not in _REGISTRY, spec.arch_id
+    _REGISTRY[spec.arch_id] = spec
+    return spec
+
+
+def get(arch_id: str) -> ArchSpec:
+    _ensure_loaded()
+    if arch_id not in _REGISTRY:
+        raise KeyError(
+            f"unknown arch {arch_id!r}; known: {sorted(_REGISTRY)}"
+        )
+    return _REGISTRY[arch_id]
+
+
+def all_archs() -> dict[str, ArchSpec]:
+    _ensure_loaded()
+    return dict(_REGISTRY)
+
+
+_LOADED = False
+
+
+def _ensure_loaded() -> None:
+    global _LOADED
+    if _LOADED:
+        return
+    # Importing the config modules populates the registry.
+    from repro.configs import (  # noqa: F401
+        bert4rec,
+        deepfm,
+        deepseek_coder_33b,
+        deepseek_v2_lite_16b,
+        dlrm_mlperf,
+        gat_cora,
+        mcgi_datasets,
+        mind,
+        minicpm_2b,
+        qwen2_7b,
+        qwen3_moe_30b_a3b,
+    )
+
+    _LOADED = True
+
+
+def pad_to(n: int, multiple: int) -> int:
+    return ((n + multiple - 1) // multiple) * multiple
+
+
+# The four LM shape cells shared by all five LM archs (assignment block).
+def lm_shapes(*, sub_quadratic: bool = False) -> tuple[ShapeCell, ...]:
+    note_500k = (
+        "decode vs 524288-token KV cache is O(S)/step and runs; a 500k "
+        "*prefill* would be quadratic — full-attention archs skip that "
+        "(DESIGN.md §4)."
+    )
+    return (
+        ShapeCell("train_4k", TRAIN, {"seq": 4096, "batch": 256}),
+        ShapeCell("prefill_32k", PREFILL, {"seq": 32768, "batch": 32}),
+        ShapeCell("decode_32k", DECODE, {"seq": 32768, "batch": 128}),
+        ShapeCell("long_500k", DECODE, {"seq": 524288, "batch": 1},
+                  note=note_500k),
+    )
+
+
+RECSYS_SHAPES = (
+    ShapeCell("train_batch", TRAIN, {"batch": 65536}),
+    ShapeCell("serve_p99", SERVE, {"batch": 512}),
+    ShapeCell("serve_bulk", SERVE, {"batch": 262144}),
+    ShapeCell("retrieval_cand", RETRIEVAL, {"batch": 1, "n_candidates": 1_000_000}),
+)

@@ -1,0 +1,62 @@
+"""The paper's own dataset configurations (Table 2/3) as dry-run archs.
+
+These lower the *distributed MCGI search step* at the paper's full N —
+SIFT1B / T2I-1B at 10^9 points on the production mesh — proving the sharded
+serving path is coherent at billion scale even though this host can only
+*execute* reduced-N benchmarks. Build parameters (R, L_build, alpha range,
+m_PQ) are the paper's Table 2 values.
+"""
+import dataclasses
+
+from repro.configs import base
+
+
+@dataclasses.dataclass(frozen=True)
+class McgiDatasetConfig:
+    name: str
+    n: int
+    d: int
+    degree: int          # R
+    l_build: int         # L_build
+    m_pq: int | None     # PQ bytes (None = full precision in memory tier)
+    data_dtype: str      # "float32" | "uint8"
+    alpha_min: float = 1.0
+    alpha_max: float = 1.5
+    queries: int = 4096          # global query batch for the serve step
+    l_search: int = 128
+    k: int = 10
+    max_hops: int = 192
+
+
+_DATASETS = (
+    McgiDatasetConfig("mcgi-sift1m", 1_000_000, 128, 64, 100, None, "float32"),
+    McgiDatasetConfig("mcgi-glove100", 1_200_000, 100, 64, 100, None, "float32"),
+    McgiDatasetConfig("mcgi-gist1m", 1_000_000, 960, 96, 150, None, "float32"),
+    McgiDatasetConfig("mcgi-sift1b", 1_000_000_000, 128, 32, 50, 16, "uint8"),
+    McgiDatasetConfig("mcgi-t2i1b", 1_000_000_000, 200, 32, 50, 16, "float32"),
+)
+
+
+def _smoke(cfg: McgiDatasetConfig) -> McgiDatasetConfig:
+    return dataclasses.replace(
+        cfg, name=cfg.name + "-smoke", n=4096, queries=64, l_search=32,
+        max_hops=64, degree=min(cfg.degree, 16), d=min(cfg.d, 64),
+    )
+
+
+for _cfg in _DATASETS:
+    base.register(
+        base.ArchSpec(
+            arch_id=_cfg.name,
+            family="mcgi",
+            config=_cfg,
+            smoke_config=_smoke(_cfg),
+            shapes=(
+                base.ShapeCell(
+                    "serve", base.MCGI_SEARCH,
+                    {"queries": _cfg.queries, "k": _cfg.k},
+                ),
+            ),
+            source="paper Table 2/3",
+        )
+    )

@@ -1,0 +1,19 @@
+"""MCGI core — the paper's primary contribution plus its baselines.
+
+Public surface:
+  * LID estimation + calibration      — :mod:`repro.core.lid`
+  * Phi mapping (LID -> alpha)        — :mod:`repro.core.mapping`
+  * Adaptive robust prune             — :mod:`repro.core.prune`
+  * Offline build (Algorithm 1)       — :mod:`repro.core.build`
+  * Online build  (Algorithm 2)       — :mod:`repro.core.online`
+  * Batched beam search (exact / PQ)  — :mod:`repro.core.search`
+  * Baselines: Vamana / IVF / HNSW    — build.py / ivf.py / hnsw.py
+  * Theory oracles (Prop. 4.3)        — :mod:`repro.core.theory`
+"""
+from repro.core.build import BuildConfig, build_mcgi, build_vamana  # noqa: F401
+from repro.core.distance import brute_force_topk, knn_graph, recall_at_k  # noqa: F401
+from repro.core.lid import LidProfile, calibrate, estimate_dataset_lid, lid_from_dists  # noqa: F401
+from repro.core.mapping import ALPHA_MAX, ALPHA_MIN, AlphaMapping, phi  # noqa: F401
+from repro.core.online import build_online_mcgi  # noqa: F401
+from repro.core.search import SearchStats, beam_search_exact, beam_search_pq, medoid  # noqa: F401
+from repro.core.types import GraphIndex  # noqa: F401

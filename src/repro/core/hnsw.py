@@ -1,0 +1,201 @@
+"""HNSW baseline (Malkov & Yashunin) — the in-memory graph-index ceiling.
+
+Build is the inherently sequential insertion procedure; it runs on the host in
+numpy (index construction is offline — what the paper benchmarks online is
+*search*). Search runs in JAX over the flattened per-layer adjacency arrays:
+greedy descent (beam 1) through the upper layers, then the standard ef-width
+beam on layer 0, reusing the framework's batched beam-search machinery.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import search as search_mod
+
+Array = jax.Array
+INVALID = -1
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class HnswIndex:
+    layers: Array      # (n_layers, N, M) int32 adjacency per layer, INVALID pad
+    entry: Array       # scalar int32 — top-layer entry point
+    n_layers: int = dataclasses.field(metadata=dict(static=True), default=1)
+
+
+def _select_heuristic(
+    cand: list[int], dists: dict[int, float], x: np.ndarray, m: int
+) -> list[int]:
+    """HNSW Algorithm 4 neighbour-selection heuristic (keep diverse set)."""
+    out: list[int] = []
+    for c in sorted(cand, key=lambda i: dists[i]):
+        if len(out) >= m:
+            break
+        d_cq = dists[c]
+        ok = True
+        for s in out:
+            diff = x[c] - x[s]
+            if float(diff @ diff) < d_cq:
+                ok = False
+                break
+        if ok:
+            out.append(c)
+    return out
+
+
+def _search_layer_np(
+    x: np.ndarray, adj: np.ndarray, q: np.ndarray, entry: int, ef: int
+) -> dict[int, float]:
+    """Host-side ef-search on one layer during construction."""
+    import heapq
+
+    def d(i):
+        diff = x[i] - q
+        return float(diff @ diff)
+
+    visited = {entry}
+    d0 = d(entry)
+    cand = [(d0, entry)]       # min-heap of frontier
+    best = [(-d0, entry)]      # max-heap of result set
+    while cand:
+        dc, c = heapq.heappop(cand)
+        if dc > -best[0][0] and len(best) >= ef:
+            break
+        for nb in adj[c]:
+            if nb < 0 or nb in visited:
+                continue
+            visited.add(int(nb))
+            dn = d(int(nb))
+            if len(best) < ef or dn < -best[0][0]:
+                heapq.heappush(cand, (dn, int(nb)))
+                heapq.heappush(best, (-dn, int(nb)))
+                if len(best) > ef:
+                    heapq.heappop(best)
+    return {i: -nd for nd, i in best}
+
+
+def build_hnsw(
+    x_jax: Array, m: int = 16, ef_construction: int = 100, seed: int = 0
+) -> HnswIndex:
+    """Sequential HNSW insertion (paper's [27]); numpy host build."""
+    x = np.asarray(x_jax)
+    n = x.shape[0]
+    rng = np.random.default_rng(seed)
+    ml = 1.0 / math.log(m)
+    levels = np.minimum(
+        (-np.log(rng.uniform(size=n, low=1e-12, high=1.0)) * ml).astype(np.int64), 8
+    )
+    n_layers = int(levels.max()) + 1
+    m0 = 2 * m  # layer-0 degree, per the paper
+    adj = [
+        np.full((n, m0 if l == 0 else m), INVALID, dtype=np.int32)
+        for l in range(n_layers)
+    ]
+    entry, entry_level = 0, int(levels[0])
+
+    for i in range(1, n):
+        li = int(levels[i])
+        ep = entry
+        # Greedy descent through layers above li.
+        for l in range(entry_level, li, -1):
+            if l >= n_layers:
+                continue
+            improved = True
+            while improved:
+                improved = False
+                for nb in adj[l][ep]:
+                    if nb < 0:
+                        continue
+                    if float((x[nb] - x[i]) @ (x[nb] - x[i])) < float(
+                        (x[ep] - x[i]) @ (x[ep] - x[i])
+                    ):
+                        ep = int(nb)
+                        improved = True
+        # Insert on layers min(li, entry_level) .. 0.
+        for l in range(min(li, entry_level), -1, -1):
+            found = _search_layer_np(x, adj[l], x[i], ep, ef_construction)
+            cap = m0 if l == 0 else m
+            nbrs = _select_heuristic(list(found), found, x, cap)
+            adj[l][i, : len(nbrs)] = nbrs
+            for nb in nbrs:
+                row = adj[l][nb]
+                slot = np.argmax(row == INVALID) if (row == INVALID).any() else -1
+                if row[slot] == INVALID and slot != -1:
+                    row[slot] = i
+                else:
+                    # Overfull: re-select among existing + new.
+                    cand = [int(v) for v in row if v >= 0] + [i]
+                    dists = {
+                        c: float((x[c] - x[nb]) @ (x[c] - x[nb])) for c in cand
+                    }
+                    sel = _select_heuristic(cand, dists, x, cap)
+                    row[:] = INVALID
+                    row[: len(sel)] = sel
+            ep = nbrs[0] if nbrs else ep
+        if li > entry_level:
+            entry, entry_level = i, li
+
+    # Pad every layer to the layer-0 width for a single stacked array.
+    width = m0
+    stacked = np.full((n_layers, n, width), INVALID, dtype=np.int32)
+    for l in range(n_layers):
+        stacked[l, :, : adj[l].shape[1]] = adj[l]
+    return HnswIndex(
+        layers=jnp.asarray(stacked), entry=jnp.int32(entry), n_layers=n_layers
+    )
+
+
+def search_hnsw(
+    index: HnswIndex, x: Array, queries: Array, ef: int, k: int = 10
+) -> tuple[Array, Array, search_mod.SearchStats]:
+    """Layered search: greedy on upper layers, beam ef on layer 0."""
+
+    def descend(q, entry):
+        def layer_step(ep, l):
+            # One full greedy walk on layer l (bounded hops).
+            def body(state):
+                ep, improved = state
+                nbrs = index.layers[l, ep]
+                valid = nbrs != INVALID
+                vecs = x[jnp.maximum(nbrs, 0)]
+                d = jnp.where(
+                    valid, jnp.sum((vecs - q[None, :]) ** 2, axis=-1), jnp.inf
+                )
+                j = jnp.argmin(d)
+                d_ep = jnp.sum((x[ep] - q) ** 2)
+                better = d[j] < d_ep
+                return (jnp.where(better, nbrs[j], ep), better)
+
+            def cond(state):
+                return state[1]
+
+            ep, _ = jax.lax.while_loop(cond, body, (ep, jnp.bool_(True)))
+            return ep, None
+
+        eps, _ = jax.lax.scan(
+            layer_step, entry, jnp.arange(index.n_layers - 1, 0, -1)
+        )
+        return eps
+
+    entries = jax.vmap(lambda q: descend(q, index.entry))(queries)
+    # Layer-0 beam search re-uses the shared machinery with per-query entries.
+    layer0 = index.layers[0]
+
+    def one(q, e):
+        def eval_dists(qq, ids, valid):
+            vecs = x[ids]
+            return jnp.sum((vecs - qq[None, :]) ** 2, axis=-1)
+
+        return search_mod._search_one(
+            q, adj=layer0, entry=e, eval_dists=eval_dists,
+            n=x.shape[0], beam_width=ef, max_hops=4 * ef,
+        )
+
+    beam_ids, beam_d, stats = jax.vmap(one)(queries, entries)
+    return beam_ids[:, :k], beam_d[:, :k], stats

@@ -1,0 +1,152 @@
+"""Local Intrinsic Dimensionality estimation (paper §3.1).
+
+Implements the MLE / Hill estimator of Definition 3.3 (Eq. 5):
+
+    LID_hat(x) = - ( (1/k) * sum_i ln(r_i / r_k) )^{-1}
+
+over the k nearest-neighbour distances r_1 <= ... <= r_k of x, plus the
+population calibration (mu, sigma) of §3.2 used by the mapping function.
+
+The estimator is exposed in three granularities:
+  * :func:`lid_from_sorted_dists` — one neighbourhood, the literal Eq. 5;
+  * :func:`lid_from_dists`        — batched, unsorted inputs (sorts internally);
+  * :func:`estimate_dataset_lid`  — Phase 1 of Algorithm 1: exact k-NN over the
+    dataset then batched estimation.
+
+A Pallas-kernel version of the batched estimator lives in
+``repro.kernels.lid_kernel`` and is validated against this module.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import distance as dist_mod
+
+Array = jax.Array
+
+# Numerical guards: zero/duplicate distances would send ln(r_i/r_k) to -inf.
+_EPS = 1e-12
+# Clamp of the estimate range; LID estimates beyond ambient dimensionality of
+# typical data (<= 2048 here) are estimator noise and would destabilise the
+# z-score calibration.
+_LID_MAX = 4096.0
+
+
+def lid_from_sorted_dists(r: Array) -> Array:
+    """Eq. 5 on one ascending distance vector ``r`` of shape (k,).
+
+    Accepts *true* (not squared) distances. Returns a scalar LID estimate.
+    """
+    r = jnp.maximum(r, _EPS)
+    rk = r[-1]
+    log_ratio = jnp.log(r / rk)  # <= 0
+    mean = jnp.mean(log_ratio)
+    # mean == 0 happens when all k distances are identical (degenerate
+    # neighbourhood, e.g. duplicated points): treat as maximally complex.
+    lid = -1.0 / jnp.minimum(mean, -1.0 / _LID_MAX)
+    return lid
+
+
+def lid_from_dists(dists: Array, *, squared: bool = True) -> Array:
+    """Batched Eq. 5.
+
+    Args:
+      dists: (B, k) neighbour distances per point, any order, possibly squared.
+      squared: if True, inputs are squared-L2 (the native output of
+        :mod:`repro.core.distance`); sqrt is applied to recover r_i.
+    Returns:
+      (B,) LID estimates.
+    """
+    d = jnp.sort(dists, axis=-1)
+    if squared:
+        d = jnp.sqrt(jnp.maximum(d, 0.0))
+    return jax.vmap(lid_from_sorted_dists)(d)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class LidProfile:
+    """The "frozen geometric profile" of Phase 1 (paper §3.3).
+
+    Attributes:
+      lid:   (N,) per-point LID estimates.
+      mu:    scalar population mean (Eq. 7).
+      sigma: scalar population std (Eq. 7).
+    """
+
+    lid: Array
+    mu: Array
+    sigma: Array
+
+    def zscore(self, lid: Array) -> Array:
+        return (lid - self.mu) / jnp.maximum(self.sigma, 1e-6)
+
+
+def calibrate(lid: Array) -> LidProfile:
+    """Aggregate population statistics over per-point LID estimates."""
+    mu = jnp.mean(lid)
+    sigma = jnp.std(lid)
+    return LidProfile(lid=lid, mu=mu, sigma=sigma)
+
+
+def estimate_dataset_lid(
+    x: Array, k: int = 16, chunk_q: int = 1024, metric: str = dist_mod.L2
+) -> LidProfile:
+    """Phase 1 (Geometric Calibration) of Algorithm 1.
+
+    Exact k-NN for every point (O(N^2 / chunk) scan, the paper's O(N log N)
+    bound assumes an auxiliary index; the framework also supports sampled
+    calibration via :func:`bootstrap_stats` for large N) followed by batched
+    MLE estimation and population aggregation.
+    """
+    d, _ = dist_mod.knn_graph(x, k=k, metric=metric, chunk_q=chunk_q)
+    lid = lid_from_dists(d, squared=(metric == dist_mod.L2))
+    return calibrate(lid)
+
+
+def bootstrap_stats(
+    x: Array, key: Array, sample: int = 2048, k: int = 16, metric: str = dist_mod.L2
+) -> tuple[Array, Array]:
+    """Online-MCGI Phase 1 (Algorithm 2): bootstrap (mu, sigma) from a sample.
+
+    The sampled points are queried against the *full* dataset so the
+    neighbourhood radii (and thus the statistics) are unbiased; only the set of
+    reference points is subsampled.
+    """
+    n = x.shape[0]
+    sample = min(sample, n)
+    idx = jax.random.choice(key, n, shape=(sample,), replace=False)
+    q = x[idx]
+    d, ids = dist_mod.brute_force_topk(q, x, k=k + 1, metric=metric)
+    # Drop self matches.
+    is_self = ids == idx[:, None]
+    d = jnp.where(is_self, jnp.inf, d)
+    d = jnp.sort(d, axis=1)[:, :k]
+    lid = lid_from_dists(d, squared=(metric == dist_mod.L2))
+    return jnp.mean(lid), jnp.std(lid)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def online_lid(cand_dists: Array, k: int) -> Array:
+    """On-the-fly LID from a greedy-search candidate pool (Algorithm 2).
+
+    Args:
+      cand_dists: (B, C) squared distances of each node's candidate pool;
+        invalid entries padded with +inf.
+      k: neighbourhood size to use (<= C).
+    Returns:
+      (B,) LID estimates from the k closest valid candidates.
+    """
+    d = jnp.sort(cand_dists, axis=-1)[:, :k]
+    # Neighbourhoods with fewer than k valid candidates: replace inf tail with
+    # the largest finite value so ln(r_i/r_k) stays finite (conservative:
+    # repeats shrink the estimate's denominator -> higher LID -> stricter
+    # alpha, which is the safe direction per §3.2).
+    finite = jnp.isfinite(d)
+    max_finite = jnp.max(jnp.where(finite, d, -jnp.inf), axis=-1, keepdims=True)
+    d = jnp.where(finite, d, max_finite)
+    return lid_from_dists(d, squared=True)

@@ -1,0 +1,112 @@
+"""Online-MCGI — Algorithm 2 of the paper.
+
+Differences from the offline Algorithm 1:
+  * Phase 1 only *bootstraps* the population statistics (mu, sigma) from a
+    random sample instead of estimating LID for every point (negligible
+    pre-processing cost at billion scale, §3.3);
+  * during refinement, each node's LID is estimated *on the fly* from its
+    current greedy-search candidate pool C, and alpha_u recomputed each round —
+    noisy early, converging as neighbour quality improves.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build as build_mod
+from repro.core import lid as lid_mod
+from repro.core import mapping as mapping_mod
+from repro.core import prune as prune_mod
+from repro.core import search as search_mod
+from repro.core.types import GraphIndex
+
+Array = jax.Array
+INVALID = build_mod.INVALID
+
+
+def _rewire_batch_online(
+    x: Array,
+    adj: Array,
+    mu: Array,
+    sigma: Array,
+    entry: Array,
+    node_ids: Array,
+    cfg: build_mod.BuildConfig,
+) -> tuple[Array, Array, Array]:
+    """One online refinement step: search -> online LID -> alpha_u -> prune.
+
+    Returns (new_rows, new_d2, alpha_u) for the batch.
+    """
+    queries = x[node_ids]
+    beam_ids, beam_d2, _ = search_mod.beam_search_exact(
+        x, adj, queries, entry,
+        beam_width=cfg.beam_width, max_hops=cfg.max_hops, k=cfg.beam_width,
+    )
+    # Exclude the node itself from its own LID neighbourhood.
+    self_mask = beam_ids == node_ids[:, None]
+    d2 = jnp.where(self_mask | (beam_ids == INVALID), jnp.inf, beam_d2)
+    lid_u = lid_mod.online_lid(d2, k=min(cfg.lid_k, cfg.beam_width))
+    alpha_u = mapping_mod.phi(lid_u, mu, sigma, cfg.alpha_min, cfg.alpha_max)
+
+    pool = jnp.concatenate([beam_ids, adj[node_ids]], axis=1)
+    rows, rows_d2 = prune_mod.robust_prune_batch(
+        x, node_ids, pool, alpha_u, cfg.degree
+    )
+    return rows, rows_d2, alpha_u
+
+
+def build_online_mcgi(
+    x: Array, cfg: build_mod.BuildConfig = build_mod.BuildConfig(),
+    sample: int = 2048, progress=None,
+) -> GraphIndex:
+    """Algorithm 2 — bootstrap stats + on-the-fly LID adaptation."""
+    n = x.shape[0]
+    key = jax.random.PRNGKey(cfg.seed)
+    mu, sigma = lid_mod.bootstrap_stats(
+        x, jax.random.fold_in(key, 17), sample=sample, k=cfg.lid_k
+    )
+    if progress:
+        progress(f"bootstrap: mu={float(mu):.2f} sigma={float(sigma):.2f}")
+
+    adj = build_mod.random_graph(n, cfg.degree, key)
+    entry = search_mod.medoid(x)
+    alpha_final = jnp.full((n,), 0.5 * (cfg.alpha_min + cfg.alpha_max), jnp.float32)
+    lid_final = jnp.zeros((n,), jnp.float32)
+
+    rewire = jax.jit(
+        _rewire_batch_online, static_argnames=("cfg",)
+    )
+
+    for it in range(cfg.iters):
+        perm = np.asarray(jax.random.permutation(jax.random.fold_in(key, it + 1), n))
+        for start in range(0, n, cfg.batch):
+            ids_np = perm[start : start + cfg.batch]
+            if ids_np.size < cfg.batch:
+                ids_np = np.concatenate([ids_np, perm[: cfg.batch - ids_np.size]])
+            node_ids = jnp.asarray(ids_np)
+            rows, _, alpha_u = rewire(x, adj, mu, sigma, entry, node_ids, cfg)
+            adj = adj.at[node_ids].set(rows)
+            alpha_final = alpha_final.at[node_ids].set(alpha_u)
+            dest, cand = build_mod._reverse_pairs(
+                ids_np, np.asarray(rows), cfg.reverse_cap
+            )
+            for ds in range(0, dest.shape[0], cfg.batch):
+                dslice = dest[ds : ds + cfg.batch]
+                cslice = cand[ds : ds + cfg.batch]
+                if dslice.size < cfg.batch:
+                    pad = cfg.batch - dslice.size
+                    dslice = np.concatenate([dslice, dslice[:1].repeat(pad)])
+                    cslice = np.concatenate(
+                        [cslice, np.full((pad, cfg.reverse_cap), INVALID, np.int32)]
+                    )
+                adj = build_mod._insert_reverse(
+                    x, adj, alpha_final, jnp.asarray(dslice), jnp.asarray(cslice), cfg
+                )
+        if progress:
+            progress(f"online refinement round {it + 1}/{cfg.iters} done")
+
+    return GraphIndex(
+        adj=adj, entry=entry, alpha=alpha_final,
+        lid=lid_final, mu=mu, sigma=sigma,
+    )

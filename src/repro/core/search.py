@@ -1,0 +1,225 @@
+"""Batched greedy beam search over a proximity graph (paper §3.3 / §4.1).
+
+TPU-native adaptation of DiskANN's pointer-chasing loop: the beam is a dense
+fixed-shape (L,) state, the visited set a bitmask, and the hop loop a
+``lax.while_loop`` with masked convergence — vmapped over the query batch.
+
+Two distance regimes:
+  * exact       — full-precision vectors (in-memory benchmark mode);
+  * PQ-routed   — LUT/ADC distances steer the walk, the final beam is
+    re-ranked with full-precision vectors; each node *expansion* counts as one
+    slow-tier I/O (DiskANN's SSD read), which is the quantity Figures 2a/2c
+    are about.
+
+I/O accounting is carried in :class:`SearchStats` and surfaced by every
+benchmark.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+INVALID = -1
+
+# eval_dists(query_ctx, ids, valid_mask) -> (len(ids),) squared distances.
+DistEval = Callable[[Array, Array, Array], Array]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SearchStats:
+    """Per-query work counters (the paper's resource-efficiency metrics)."""
+
+    hops: Array        # nodes expanded == slow-tier reads (DiskANN I/O model)
+    dist_evals: Array  # distance computations (compute-side cost, RQ4/T2I)
+
+    def mean(self) -> "SearchStats":
+        return SearchStats(hops=self.hops.mean(), dist_evals=self.dist_evals.mean())
+
+
+def _beam_merge(
+    beam_ids, beam_d, beam_exp, new_ids, new_d, beam_width
+):
+    """Merge R freshly evaluated candidates into the beam; keep best L."""
+    cat_ids = jnp.concatenate([beam_ids, new_ids])
+    cat_d = jnp.concatenate([beam_d, new_d])
+    cat_exp = jnp.concatenate([beam_exp, jnp.zeros(new_ids.shape, dtype=bool)])
+    order = jnp.argsort(cat_d)[:beam_width]
+    return cat_ids[order], cat_d[order], cat_exp[order]
+
+
+def _search_one(
+    query_ctx: Array,
+    adj: Array,
+    entry: Array,
+    eval_dists: DistEval,
+    n: int,
+    beam_width: int,
+    max_hops: int,
+) -> tuple[Array, Array, SearchStats]:
+    """Beam search for a single query context; vmap over the batch.
+
+    The visited set is a *bit-packed* uint32 array (n/32 words): 8x less
+    working-set memory and HBM traffic than a bool mask — at billion-scale
+    shards (3.9M points/device, 128-query chunks) this is the difference
+    between a 500 MB and a 62 MB visited buffer (§Perf, mcgi serve cells).
+    Requires duplicate-free adjacency rows (the pruner dedups; random init
+    graphs are dedup'd at construction).
+    """
+    r = adj.shape[1]
+    nw = (n + 31) // 32
+
+    entry_d = eval_dists(query_ctx, entry[None], jnp.ones((1,), dtype=bool))[0]
+    beam_ids = jnp.full((beam_width,), INVALID, dtype=jnp.int32).at[0].set(entry)
+    beam_d = jnp.full((beam_width,), jnp.inf, dtype=jnp.float32).at[0].set(entry_d)
+    beam_exp = jnp.zeros((beam_width,), dtype=bool)
+    visited = jnp.zeros((nw,), dtype=jnp.uint32).at[entry >> 5].set(
+        jnp.uint32(1) << (entry.astype(jnp.uint32) & 31)
+    )
+
+    def cond(state):
+        _, _, beam_exp, _, hops, _ = state
+        frontier_open = jnp.any((~beam_exp) & (state[0] != INVALID))
+        return (hops < max_hops) & frontier_open
+
+    def body(state):
+        beam_ids, beam_d, beam_exp, visited, hops, evals = state
+        # Closest unexpanded beam entry.
+        cand_d = jnp.where(beam_exp | (beam_ids == INVALID), jnp.inf, beam_d)
+        j = jnp.argmin(cand_d)
+        u = beam_ids[j]
+        beam_exp = beam_exp.at[j].set(True)
+
+        nbrs = adj[jnp.maximum(u, 0)]  # (R,)
+        valid = (nbrs != INVALID) & (u != INVALID)
+        safe = jnp.maximum(nbrs, 0)
+        word_idx = safe >> 5
+        bit = jnp.uint32(1) << (safe.astype(jnp.uint32) & 31)
+        seen = (visited[word_idx] & bit) != 0
+        valid = valid & (~seen)
+        d = eval_dists(query_ctx, safe, valid)
+        d = jnp.where(valid, d, jnp.inf)
+        # Distinct ids set distinct bits, so scatter-add implements the OR.
+        visited = visited.at[word_idx].add(jnp.where(valid, bit, 0))
+
+        nbr_ids = jnp.where(valid, nbrs, INVALID)
+        beam_ids, beam_d, beam_exp = _beam_merge(
+            beam_ids, beam_d, beam_exp, nbr_ids, d, beam_width
+        )
+        return beam_ids, beam_d, beam_exp, visited, hops + 1, evals + valid.sum()
+
+    state = (beam_ids, beam_d, beam_exp, visited, jnp.int32(0), jnp.int32(0))
+    beam_ids, beam_d, beam_exp, visited, hops, evals = jax.lax.while_loop(
+        cond, body, state
+    )
+    return beam_ids, beam_d, SearchStats(hops=hops, dist_evals=evals)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("beam_width", "max_hops", "k")
+)
+def beam_search_exact(
+    x: Array,
+    adj: Array,
+    queries: Array,
+    entry: Array,
+    beam_width: int,
+    max_hops: int = 2048,
+    k: int = 10,
+) -> tuple[Array, Array, SearchStats]:
+    """Exact-distance beam search, batched over (Q, D) queries.
+
+    Returns (ids, d2, stats): (Q, k) ascending results + per-query counters.
+    """
+    n = x.shape[0]
+
+    def eval_dists(q, ids, valid):
+        vecs = x[ids]
+        diff = vecs - q[None, :]
+        return jnp.sum(diff * diff, axis=-1)
+
+    run = functools.partial(
+        _search_one,
+        adj=adj,
+        entry=entry,
+        eval_dists=eval_dists,
+        n=n,
+        beam_width=beam_width,
+        max_hops=max_hops,
+    )
+    beam_ids, beam_d, stats = jax.vmap(run)(queries)
+    return beam_ids[:, :k], beam_d[:, :k], stats
+
+
+@functools.partial(
+    jax.jit, static_argnames=("beam_width", "max_hops", "k", "rerank")
+)
+def beam_search_pq(
+    codes: Array,
+    luts: Array,
+    x_slow: Array,
+    adj: Array,
+    queries: Array,
+    entry: Array,
+    beam_width: int,
+    max_hops: int = 2048,
+    k: int = 10,
+    rerank: bool = True,
+) -> tuple[Array, Array, SearchStats]:
+    """PQ-routed beam search + optional full-precision re-rank.
+
+    Args:
+      codes:  (N, M) uint8 PQ codes — the fast-tier (HBM) representation.
+      luts:   (Q, M, K) per-query ADC lookup tables
+        (``repro.pq.adc.build_lut``).
+      x_slow: (N, D) full-precision vectors — the slow tier; touched only for
+        the final beam re-rank (one batched read of ``beam_width`` nodes,
+        mirroring DiskANN's read-along-the-path + rerank).
+      adj:    (N, R) graph.
+    """
+    n = codes.shape[0]
+
+    def eval_dists(lut, ids, valid):
+        # lut: (M, K); codes[ids]: (R, M) -> sum_m lut[m, code[r, m]]
+        c = codes[ids].astype(jnp.int32)
+        m = lut.shape[0]
+        gathered = jax.vmap(lambda row: lut[jnp.arange(m), row])(c)
+        return gathered.sum(axis=-1)
+
+    run = functools.partial(
+        _search_one,
+        adj=adj,
+        entry=entry,
+        eval_dists=eval_dists,
+        n=n,
+        beam_width=beam_width,
+        max_hops=max_hops,
+    )
+    beam_ids, beam_d, stats = jax.vmap(run)(luts)
+
+    if rerank:
+        safe = jnp.maximum(beam_ids, 0)
+        vecs = x_slow[safe]  # (Q, L, D) — the batched slow-tier read
+        diff = vecs - queries[:, None, :]
+        d2 = jnp.sum(diff * diff, axis=-1)
+        d2 = jnp.where(beam_ids == INVALID, jnp.inf, d2)
+        order = jnp.argsort(d2, axis=-1)[:, :k]
+        return (
+            jnp.take_along_axis(beam_ids, order, axis=1),
+            jnp.take_along_axis(d2, order, axis=1),
+            stats,
+        )
+    return beam_ids[:, :k], beam_d[:, :k], stats
+
+
+def medoid(x: Array) -> Array:
+    """Entry point: the point closest to the dataset centroid (DiskANN's
+    choice; O(N·D) instead of the O(N^2) true medoid)."""
+    c = jnp.mean(x, axis=0, keepdims=True)
+    diff = x - c
+    return jnp.argmin(jnp.sum(diff * diff, axis=-1)).astype(jnp.int32)

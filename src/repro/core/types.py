@@ -1,0 +1,55 @@
+"""Index datastructures shared across builders, searchers and the disk tier."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class GraphIndex:
+    """A built proximity-graph index.
+
+    Attributes:
+      adj:   (N, R) int32 out-neighbour lists, -1 padded.
+      entry: scalar int32 entry point (medoid).
+      alpha: (N,) per-node pruning parameter actually used at build time
+             (constant array for the Vamana baseline).
+      lid:   (N,) LID estimates from calibration (zeros when not calibrated,
+             e.g. Vamana / Online-MCGI bootstrap-only).
+      mu, sigma: population LID statistics (Eq. 7).
+    """
+
+    adj: Array
+    entry: Array
+    alpha: Array
+    lid: Array
+    mu: Array
+    sigma: Array
+
+    @property
+    def n(self) -> int:
+        return self.adj.shape[0]
+
+    @property
+    def degree_cap(self) -> int:
+        return self.adj.shape[1]
+
+    def out_degrees(self) -> Array:
+        return (self.adj != -1).sum(axis=1)
+
+    def undirected_edge_set(self) -> set[tuple[int, int]]:
+        """Host-side edge set (small graphs only — theory oracles/tests)."""
+        import numpy as np
+
+        adj = np.asarray(self.adj)
+        edges = set()
+        for u in range(adj.shape[0]):
+            for v in adj[u]:
+                if v >= 0:
+                    edges.add((min(u, int(v)), max(u, int(v))))
+        return edges

@@ -1,0 +1,8 @@
+from repro.data.synthetic import (  # noqa: F401
+    DatasetSpec,
+    gaussian_subspace_clusters,
+    make_dataset,
+    mixture_of_manifolds,
+    swiss_roll_hd,
+    uniform_hypercube,
+)

@@ -1,0 +1,5 @@
+from repro.distributed.sharded_search import (  # noqa: F401
+    ShardedIndexSpecs,
+    distributed_search,
+    sharded_index_specs,
+)

@@ -1,0 +1,261 @@
+"""Distributed MCGI serving: sharded beam search + global top-k merge.
+
+Layout (DESIGN.md §5): base points are sharded into n_shards = |data|x|model|
+(x|pod|) partitions; every shard holds its *own locally built* MCGI sub-graph
+(adjacency with shard-local ids), its PQ codes and its full-precision
+vectors. A query fans out to all shards, each runs the PQ-routed beam search
++ local exact rerank on its sub-index, and the per-shard top-k are merged
+into the global top-k with one all_gather + sort — the standard
+scatter-gather ANN serving pattern expressed as jax collectives inside
+``shard_map``.
+
+Straggler mitigation: the merge takes a per-shard ``shard_ok`` mask; a shard
+that misses its deadline (or is down) contributes +inf distances and the
+merge degrades gracefully (recall loss ~ its data fraction) instead of
+stalling the query — the hedged-read policy of production ANN serving. The
+mask is a runtime input, so dropping shards needs no recompilation.
+
+Memory discipline at N=10^9: per device the shard is ~3.9M points; queries
+are processed in ``query_chunk`` groups under ``lax.map`` so the visited
+bitmap stays at chunk x N_local bools.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import search as search_mod
+
+Array = jax.Array
+INVALID = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedIndexSpecs:
+    """ShapeDtypeStructs (with shardings) of a sharded tiered index."""
+
+    adj: jax.ShapeDtypeStruct
+    codes: jax.ShapeDtypeStruct
+    vectors: jax.ShapeDtypeStruct
+    centroids: jax.ShapeDtypeStruct
+    queries: jax.ShapeDtypeStruct
+    shard_ok: jax.ShapeDtypeStruct
+
+
+def _shard_axes(mesh) -> tuple[str, ...]:
+    return tuple(mesh.axis_names)  # points shard over every axis
+
+
+def sharded_index_specs(
+    mesh,
+    *,
+    n: int,
+    d: int,
+    degree: int,
+    m_pq: int | None,
+    n_queries: int,
+    data_dtype=jnp.float32,
+) -> ShardedIndexSpecs:
+    axes = _shard_axes(mesh)
+    n_shards = mesh.devices.size
+    n_pad = ((n + n_shards - 1) // n_shards) * n_shards
+    row = NamedSharding(mesh, P(axes))
+    repl = NamedSharding(mesh, P())
+    m = m_pq or 0
+    return ShardedIndexSpecs(
+        adj=jax.ShapeDtypeStruct((n_pad, degree), jnp.int32, sharding=NamedSharding(mesh, P(axes, None))),
+        codes=jax.ShapeDtypeStruct((n_pad, max(m, 1)), jnp.uint8, sharding=NamedSharding(mesh, P(axes, None))),
+        vectors=jax.ShapeDtypeStruct((n_pad, d), data_dtype, sharding=NamedSharding(mesh, P(axes, None))),
+        centroids=jax.ShapeDtypeStruct(
+            (max(m, 1), 256, max(d // max(m, 1), 1)), jnp.float32, sharding=repl
+        ),
+        queries=jax.ShapeDtypeStruct((n_queries, d), jnp.float32, sharding=repl),
+        shard_ok=jax.ShapeDtypeStruct((n_shards,), jnp.bool_, sharding=row),
+    )
+
+
+def _local_search(
+    adj, codes, vectors, centroids, queries, *,
+    beam_width: int, max_hops: int, k: int, query_chunk: int, use_pq: bool,
+):
+    """Per-shard search over the local sub-graph. Returns (d2, local_ids)
+    each (Q, k)."""
+    n_local = adj.shape[0]
+    entry = jnp.int32(0)  # per-shard entry point (medoid of the shard)
+
+    if use_pq:
+        from repro.pq.adc import build_lut
+
+        luts = build_lut(queries.astype(jnp.float32), centroids)
+
+        def eval_dists(lut, ids, valid):
+            c = codes[ids].astype(jnp.int32)
+            m = lut.shape[0]
+            gathered = jax.vmap(lambda row: lut[jnp.arange(m), row])(c)
+            return gathered.sum(axis=-1)
+
+        ctxs = luts
+    else:
+        def eval_dists(q, ids, valid):
+            vecs = vectors[ids].astype(jnp.float32)
+            diff = vecs - q[None, :]
+            return jnp.sum(diff * diff, axis=-1)
+
+        ctxs = queries
+
+    run = functools.partial(
+        search_mod._search_one,
+        adj=adj, entry=entry, eval_dists=eval_dists,
+        n=n_local, beam_width=beam_width, max_hops=max_hops,
+    )
+
+    def chunk_fn(args):
+        ctx_chunk, q_chunk = args
+        beam_ids, beam_d, _ = jax.vmap(run)(ctx_chunk)
+        # Local exact rerank from the shard's own full-precision rows (the
+        # "disk read" happens on the shard that owns the node).
+        safe = jnp.maximum(beam_ids, 0)
+        vecs = vectors[safe].astype(jnp.float32)
+        diff = vecs - q_chunk[:, None, :].astype(jnp.float32)
+        d2 = jnp.sum(diff * diff, axis=-1)
+        d2 = jnp.where(beam_ids == INVALID, jnp.inf, d2)
+        order = jnp.argsort(d2, axis=-1)[:, :k]
+        return (
+            jnp.take_along_axis(d2, order, axis=1),
+            jnp.take_along_axis(beam_ids, order, axis=1),
+        )
+
+    nq = queries.shape[0]
+    assert nq % query_chunk == 0, (nq, query_chunk)
+    ctx_chunks = ctxs.reshape((nq // query_chunk, query_chunk) + ctxs.shape[1:])
+    q_chunks = queries.reshape(nq // query_chunk, query_chunk, -1)
+    d2, ids = jax.lax.map(chunk_fn, (ctx_chunks, q_chunks))
+    return d2.reshape(nq, k), ids.reshape(nq, k)
+
+
+def make_distributed_search(
+    mesh,
+    *,
+    beam_width: int,
+    max_hops: int,
+    k: int,
+    query_chunk: int = 128,
+    use_pq: bool = True,
+    merge: str = "hierarchical",
+):
+    """Builds the jit-able sharded search step for ``mesh``.
+
+    step(adj, codes, vectors, centroids, queries, shard_ok)
+      -> (d2 (Q, k), shard_id (Q, k), local_id (Q, k))
+
+    Global ids are returned as (shard, local_id) pairs — billion-scale ids
+    exceed int32 when flattened.
+
+    merge:
+      * "flat"          — one all_gather over every axis at once, then one
+        sort (the obvious baseline; payload grows with total shard count).
+      * "hierarchical"  — axis-by-axis gather+top-k reduction (model, then
+        data, then pod): each stage's payload is only n_axis * Q * k rows and
+        later stages ship already-reduced candidate sets (§Perf iteration on
+        the mcgi serve cells; also the natural topology map — the first merge
+        stays inside a chip row).
+    """
+    axes = _shard_axes(mesh)
+
+    def step(adj, codes, vectors, centroids, queries, shard_ok):
+        def shard_fn(adj_l, codes_l, vectors_l, centroids_l, queries_l, ok_l):
+            d2, ids = _local_search(
+                adj_l, codes_l, vectors_l, centroids_l, queries_l,
+                beam_width=beam_width, max_hops=max_hops, k=k,
+                query_chunk=query_chunk, use_pq=use_pq,
+            )
+            # Hedged-read mask: a late/dead shard contributes nothing.
+            d2 = jnp.where(ok_l[0], d2, jnp.inf)
+            q = d2.shape[0]
+
+            if merge == "flat":
+                sid = jnp.int32(0)
+                stride = 1
+                for a in reversed(axes):
+                    sid = sid + jax.lax.axis_index(a).astype(jnp.int32) * stride
+                    stride *= mesh.shape[a]
+                cat_d2 = jax.lax.all_gather(d2, axes, tiled=False)
+                cat_ids = jax.lax.all_gather(ids, axes, tiled=False)
+                cat_sid = jax.lax.all_gather(
+                    jnp.full((1,), sid, jnp.int32), axes, tiled=False
+                ).reshape(-1)
+                s = cat_d2.shape[0]
+                flat_d2 = cat_d2.transpose(1, 0, 2).reshape(q, s * k)
+                flat_ids = cat_ids.transpose(1, 0, 2).reshape(q, s * k)
+                flat_sid = jnp.broadcast_to(
+                    cat_sid[None, :, None], (q, s, k)).reshape(q, s * k)
+                order = jnp.argsort(flat_d2, axis=1)[:, :k]
+                return (
+                    jnp.take_along_axis(flat_d2, order, axis=1),
+                    jnp.take_along_axis(flat_sid, order, axis=1),
+                    jnp.take_along_axis(flat_ids, order, axis=1),
+                )
+
+            # Hierarchical: reduce one mesh axis at a time (innermost first —
+            # 'model' neighbours share the fastest links).
+            planes = {"local": ids}
+            for a in reversed(axes):
+                n_a = mesh.shape[a]
+                g_d2 = jax.lax.all_gather(d2, a, tiled=False)  # (n_a, Q, k)
+                g_planes = {
+                    name: jax.lax.all_gather(pl, a, tiled=False)
+                    for name, pl in planes.items()
+                }
+                flat_d2 = g_d2.transpose(1, 0, 2).reshape(q, n_a * k)
+                order = jnp.argsort(flat_d2, axis=1)[:, :k]
+                d2 = jnp.take_along_axis(flat_d2, order, axis=1)
+                new_planes = {}
+                for name, pl in g_planes.items():
+                    flat = pl.transpose(1, 0, 2).reshape(q, n_a * k)
+                    new_planes[name] = jnp.take_along_axis(flat, order, axis=1)
+                # Which member of this axis each winner came from.
+                src = jnp.broadcast_to(
+                    jnp.arange(n_a, dtype=jnp.int32)[None, :, None],
+                    (q, n_a, k),
+                ).reshape(q, n_a * k)
+                new_planes[f"pos_{a}"] = jnp.take_along_axis(src, order, axis=1)
+                planes = new_planes
+
+            sid = jnp.zeros_like(planes["local"])
+            stride = 1
+            for a in reversed(axes):
+                sid = sid + planes[f"pos_{a}"] * stride
+                stride *= mesh.shape[a]
+            return d2, sid, planes["local"]
+
+        specs_in = (
+            P(axes, None),  # adj
+            P(axes, None),  # codes
+            P(axes, None),  # vectors
+            P(),            # centroids
+            P(),            # queries
+            P(axes),        # shard_ok (1 flag per shard)
+        )
+        return jax.shard_map(
+            shard_fn, mesh=mesh, in_specs=specs_in,
+            out_specs=(P(), P(), P()), check_vma=False,
+        )(adj, codes, vectors, centroids, queries, shard_ok)
+
+    return step
+
+
+def distributed_search(mesh, index_arrays, queries, shard_ok=None, **kw):
+    """Convenience eager entry (tests, examples): index_arrays is a dict with
+    adj/codes/vectors/centroids already laid out shard-major."""
+    step = make_distributed_search(mesh, **kw)
+    if shard_ok is None:
+        shard_ok = jnp.ones((mesh.devices.size,), jnp.bool_)
+    return step(
+        index_arrays["adj"], index_arrays["codes"], index_arrays["vectors"],
+        index_arrays["centroids"], queries, shard_ok,
+    )

@@ -1,0 +1,2 @@
+from repro.index.disk import DiskTierModel, TieredIndex, build_tiered_index  # noqa: F401
+from repro.index.serializer import load_index, save_index  # noqa: F401

@@ -1,0 +1,63 @@
+"""Index (de)serialisation.
+
+Numpy-npz container with a JSON manifest — deliberately dependency-free and
+stable across hosts, the same container the training checkpointer uses
+(:mod:`repro.training.checkpoint`). Billion-scale deployments shard the file
+per index shard; :func:`save_index`/`load_index` handle one shard.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import GraphIndex
+from repro.index.disk import TieredIndex
+from repro.pq import PqCodebook
+
+
+def save_index(path: str | pathlib.Path, index: TieredIndex) -> None:
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    np.savez_compressed(
+        path,
+        adj=np.asarray(index.graph.adj),
+        entry=np.asarray(index.graph.entry),
+        alpha=np.asarray(index.graph.alpha),
+        lid=np.asarray(index.graph.lid),
+        mu=np.asarray(index.graph.mu),
+        sigma=np.asarray(index.graph.sigma),
+        centroids=np.asarray(index.codebook.centroids),
+        codes=np.asarray(index.codes),
+        vectors=np.asarray(index.vectors),
+        manifest=json.dumps(
+            {
+                "format": "repro.tiered_index.v1",
+                "n": int(index.n),
+                "degree": int(index.graph.degree_cap),
+                "m_pq": int(index.codebook.m),
+            }
+        ),
+    )
+
+
+def load_index(path: str | pathlib.Path) -> TieredIndex:
+    with np.load(pathlib.Path(path), allow_pickle=False) as z:
+        manifest = json.loads(str(z["manifest"]))
+        assert manifest["format"] == "repro.tiered_index.v1", manifest
+        graph = GraphIndex(
+            adj=jnp.asarray(z["adj"]),
+            entry=jnp.asarray(z["entry"]),
+            alpha=jnp.asarray(z["alpha"]),
+            lid=jnp.asarray(z["lid"]),
+            mu=jnp.asarray(z["mu"]),
+            sigma=jnp.asarray(z["sigma"]),
+        )
+        return TieredIndex(
+            graph=graph,
+            codebook=PqCodebook(centroids=jnp.asarray(z["centroids"])),
+            codes=jnp.asarray(z["codes"]),
+            vectors=jnp.asarray(z["vectors"]),
+        )

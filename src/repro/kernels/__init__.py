@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Layout per kernel: <name>.py holds the pl.pallas_call + BlockSpec tiling,
+ref.py the pure-jnp oracle, ops.py the jit'd dispatch wrapper (TPU: compiled
+kernel; elsewhere: interpret mode or oracle). Validated by shape/dtype sweeps
+in tests/test_kernels.py.
+"""
+from repro.kernels import ops  # noqa: F401

@@ -1,0 +1,102 @@
+"""Flash-decoding attention Pallas kernel — the LM serving hot-spot.
+
+One new token attends to a long KV cache: q (B, Hq, d) vs k/v (B, S, Hkv, d)
+with GQA group g = Hq/Hkv. The sequence axis is streamed in TS-sized tiles
+with the online-softmax recurrence (running max m, normaliser l, accumulator
+acc in VMEM scratch), so the (B, Hq, S) logits matrix never materialises —
+the kernel is HBM-bound at exactly (k+v bytes), which is the roofline for
+decode.
+
+Grid: (B, Hq, S/TS); TPU grid steps run sequentially with the last axis
+fastest, which is what makes the scratch-carried recurrence valid.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.experimental.pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+import jax.numpy as jnp
+
+Array = jax.Array
+
+TILE_S = 512
+
+
+def _decode_attn_kernel(
+    q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref, acc_ref, *, scale: float
+):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].reshape(-1).astype(jnp.float32)          # (d,)
+    k = k_ref[...].reshape(TILE_S, -1).astype(jnp.float32)  # (TS, d)
+    v = v_ref[...].reshape(TILE_S, -1).astype(jnp.float32)  # (TS, d)
+    kv_len = len_ref[0, 0]
+
+    logits = jax.lax.dot_general(
+        k, q[:, None], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )[:, 0] * scale                                          # (TS,)
+    pos = j * TILE_S + jax.lax.broadcasted_iota(jnp.int32, (TILE_S,), 0)
+    logits = jnp.where(pos < kv_len, logits, -jnp.inf)
+
+    m_prev = m_ref[0, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(logits))
+    # All-masked tiles keep m at -inf; guard the exp against nan.
+    safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.exp(logits - safe_m)                             # (TS,)
+    correction = jnp.where(
+        jnp.isfinite(m_prev), jnp.exp(m_prev - safe_m), 0.0
+    )
+    l_new = l_ref[0, 0] * correction + jnp.sum(p)
+    acc = acc_ref[...].reshape(-1) * correction + jax.lax.dot_general(
+        p[None, :], v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )[0]
+    m_ref[0, 0] = m_new
+    l_ref[0, 0] = l_new
+    acc_ref[...] = acc.reshape(acc_ref.shape)
+    o_ref[...] = (acc / jnp.maximum(l_new, 1e-30)).reshape(o_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_attention(
+    q: Array, k: Array, v: Array, kv_len: Array, *, interpret: bool = False
+) -> Array:
+    """q (B, Hq, d); k, v (B, S, Hkv, d); kv_len (B,) -> (B, Hq, d)."""
+    b, hq, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    pad = (-s) % TILE_S
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_tiles = kp.shape[1] // TILE_S
+    lens = kv_len.astype(jnp.int32).reshape(b, 1)
+    scale = 1.0 / (d ** 0.5)
+
+    out = pl.pallas_call(
+        functools.partial(_decode_attn_kernel, scale=scale),
+        grid=(b, hq, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda bi, hi, j: (bi, hi, 0)),
+            pl.BlockSpec((1, TILE_S, 1, d), lambda bi, hi, j: (bi, j, hi // g, 0)),
+            pl.BlockSpec((1, TILE_S, 1, d), lambda bi, hi, j: (bi, j, hi // g, 0)),
+            pl.BlockSpec((1, 1), lambda bi, hi, j: (bi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda bi, hi, j: (bi, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, d), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),   # running max m
+            pltpu.VMEM((1, 1), jnp.float32),   # running normaliser l
+            pltpu.VMEM((1, d), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, kp, vp, lens)
+    return out

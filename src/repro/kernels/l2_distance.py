@@ -1,0 +1,59 @@
+"""Tiled squared-L2 distance Pallas kernel — the bulk distance hot-spot.
+
+Replaces the paper's AVX2 inner loop. Tiling: (TQ, D) query tile x (TN, D)
+base tile -> (TQ, TN) output block; the cross term is one MXU matmul per
+block, norms are VPU row reductions fused in the same kernel. TQ = TN = 128
+keeps every matmul dimension MXU-aligned and the working set
+(2·128·D + 128·128) f32 within VMEM for D up to ~8k.
+
+Grid iterates base tiles fastest so each query tile's norms are reused across
+the whole base sweep from VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.experimental.pallas as pl
+import jax.numpy as jnp
+
+Array = jax.Array
+
+TILE_Q = 128
+TILE_N = 128
+
+
+def _l2_kernel(q_ref, x_ref, o_ref):
+    q = q_ref[...].astype(jnp.float32)  # (TQ, D)
+    x = x_ref[...].astype(jnp.float32)  # (TN, D)
+    qn = jnp.sum(q * q, axis=1, keepdims=True)        # (TQ, 1)
+    xn = jnp.sum(x * x, axis=1, keepdims=True).T      # (1, TN)
+    dot = jax.lax.dot_general(
+        q, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (TQ, TN) on the MXU
+    o_ref[...] = jnp.maximum(qn - 2.0 * dot + xn, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def l2_distance(q: Array, x: Array, *, interpret: bool = False) -> Array:
+    """(Q, D) x (N, D) -> (Q, N) squared L2. Q, N padded to tile multiples."""
+    nq, d = q.shape
+    n = x.shape[0]
+    pq_pad = (-nq) % TILE_Q
+    pn_pad = (-n) % TILE_N
+    qp = jnp.pad(q, ((0, pq_pad), (0, 0)))
+    xp = jnp.pad(x, ((0, pn_pad), (0, 0)))
+
+    grid = (qp.shape[0] // TILE_Q, xp.shape[0] // TILE_N)
+    out = pl.pallas_call(
+        _l2_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_Q, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((TILE_N, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_Q, TILE_N), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((qp.shape[0], xp.shape[0]), jnp.float32),
+        interpret=interpret,
+    )(qp, xp)
+    return out[:nq, :n]

@@ -1,0 +1,50 @@
+"""Batched Hill/MLE LID estimator Pallas kernel (calibration hot loop).
+
+Phase 1 of Algorithm 1 evaluates Eq. 5 for every point: given each point's
+ascending squared k-NN distances, compute
+
+    LID = -1 / mean_i( ln(r_i / r_k) )   with r = sqrt(d2).
+
+Pure VPU work; one (TB, k) tile per block, row reduction in registers. The
+point of the kernel is fusing sqrt+log+mean+reciprocal into one VMEM pass over
+the calibration table (N x k f32, which at billion scale is the second-largest
+sweep of the build after k-NN itself).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.experimental.pallas as pl
+import jax.numpy as jnp
+
+Array = jax.Array
+
+TILE_B = 512
+
+
+def _lid_kernel(d2_ref, o_ref):
+    d2 = d2_ref[...].astype(jnp.float32)           # (TB, k)
+    r = jnp.sqrt(jnp.maximum(d2, 1e-24))
+    rk = r[:, -1:]
+    mean_log = jnp.mean(jnp.log(r / rk), axis=1)   # (TB,)
+    lid = -1.0 / jnp.minimum(mean_log, -1.0 / 4096.0)
+    o_ref[...] = lid.reshape(1, TILE_B)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lid_estimate(knn_d2: Array, *, interpret: bool = False) -> Array:
+    """(B, k) ascending squared k-NN distances -> (B,) LID estimates."""
+    b, k = knn_d2.shape
+    pad = (-b) % TILE_B
+    dp = jnp.pad(knn_d2, ((0, pad), (0, 0)), constant_values=1.0)
+    grid = (dp.shape[0] // TILE_B,)
+    out = pl.pallas_call(
+        _lid_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((TILE_B, k), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, TILE_B), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, dp.shape[0]), jnp.float32),
+        interpret=interpret,
+    )(dp)
+    return out[0, :b]

@@ -1,0 +1,81 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Dispatch policy: on a TPU backend the Pallas kernels run compiled; on any
+other backend (this CPU container, tests) the wrapper either runs the kernel
+in interpret mode (``REPRO_PALLAS_INTERPRET=1``, bit-faithful to the kernel
+body) or falls back to the jnp oracle in :mod:`repro.kernels.ref` (fast, same
+semantics). Libraries call these wrappers only — never pallas_call directly —
+so the integration point is uniform across hardware.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _da
+from repro.kernels import l2_distance as _l2
+from repro.kernels import lid_kernel as _lid
+from repro.kernels import pq_scan as _pq
+from repro.kernels import ref as _ref
+from repro.kernels import topk as _topk
+
+Array = jax.Array
+
+
+def _use_pallas() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret_requested() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1"
+
+
+def bulk_l2(q: Array, x: Array) -> Array:
+    """(Q, D) x (N, D) -> (Q, N) squared L2 (MXU-tiled on TPU)."""
+    if _use_pallas():
+        return _l2.l2_distance(q, x)
+    if _interpret_requested():
+        return _l2.l2_distance(q, x, interpret=True)
+    return _ref.l2_distance_ref(q, x)
+
+
+def pq_bulk_scan(luts: Array, codes: Array) -> Array:
+    """(Q, M, K) x (N, M) -> (Q, N) ADC distances (one-hot-MXU on TPU)."""
+    if _use_pallas():
+        return _pq.pq_scan(luts, codes)
+    if _interpret_requested():
+        return _pq.pq_scan(luts, codes, interpret=True)
+    return jax.vmap(lambda lut: _ref.pq_scan_ref(lut, codes))(luts)
+
+
+def topk(d: Array, k: int) -> tuple[Array, Array]:
+    """(Q, N) -> ascending (vals, ids) (tile-select + merge on TPU)."""
+    if _use_pallas():
+        return _topk.topk(d, k)
+    if _interpret_requested():
+        return _topk.topk(d, k, interpret=True)
+    return _ref.topk_ref(d, k)
+
+
+def lid_estimate(knn_d2: Array) -> Array:
+    """(B, k) sorted squared k-NN dists -> (B,) Hill LID."""
+    if _use_pallas():
+        return _lid.lid_estimate(knn_d2)
+    if _interpret_requested():
+        return _lid.lid_estimate(knn_d2, interpret=True)
+    return _ref.lid_ref(knn_d2)
+
+
+def decode_attention(q: Array, k: Array, v: Array, kv_len: Array) -> Array:
+    """Flash-decoding attention; see :mod:`repro.kernels.decode_attention`.
+
+    The non-TPU path uses the grouped-einsum reference (no KV expansion) so
+    a sequence-sharded cache lowers to partial-softmax collectives, not a
+    full cache all-gather."""
+    if _use_pallas():
+        return _da.decode_attention(q, k, v, kv_len)
+    if _interpret_requested():
+        return _da.decode_attention(q, k, v, kv_len, interpret=True)
+    return _ref.decode_attention_gqa_ref(q, k, v, kv_len)

@@ -1,0 +1,387 @@
+"""Cell builders: (arch spec, shape cell, mesh) -> a concrete lowerable step.
+
+A *cell* is one (architecture x input-shape) entry of the assignment matrix.
+``build_cell`` returns a :class:`Cell` with
+  * fn           — the step function (train/prefill/decode/serve/retrieval/
+                   mcgi_search),
+  * arg_specs    — ShapeDtypeStructs with NamedShardings attached (no host
+                   allocation: params come from jax.eval_shape),
+  * donate       — argnums donated (state/cache), for honest memory analysis.
+
+The same builders power dryrun.py (lower+compile), train.py and serve.py —
+so what the dry-run proves is exactly what the launchers run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import base as cfg_base
+from repro.launch import mesh as mesh_mod
+from repro.launch import shardings as shard_mod
+from repro.models import gnn as gnn_mod
+from repro.models import recsys as recsys_mod
+from repro.models import transformer as tfm
+from repro.models.layers import ShardCtx
+from repro.training import optimizer as opt_mod
+from repro.training import train_step as ts_mod
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class Cell:
+    arch_id: str
+    shape_name: str
+    fn: Callable
+    arg_specs: tuple
+    donate: tuple[int, ...] = ()
+    note: str = ""
+
+    def lower(self):
+        jitted = jax.jit(self.fn, donate_argnums=self.donate)
+        return jitted.lower(*self.arg_specs)
+
+
+def _named(mesh, *spec) -> NamedSharding:
+    return NamedSharding(mesh, P(*spec))
+
+
+def _sds(shape, dtype, sharding):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _ctx(mesh) -> ShardCtx:
+    return ShardCtx(mesh=mesh, dp=mesh_mod.dp_axes(mesh), tp="model")
+
+
+def _state_specs(family: str, mesh, init_fn):
+    """TrainState arg specs via eval_shape + family sharding rules."""
+    state_shapes = jax.eval_shape(
+        lambda k: ts_mod.init_train_state(init_fn(k)), jax.random.PRNGKey(0)
+    )
+    spec_tree = shard_mod.train_state_specs(family, state_shapes)
+    shard_tree = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda s: isinstance(s, P),
+    )
+    return shard_mod.attach(state_shapes, shard_tree)
+
+
+def _param_specs(family: str, mesh, init_fn):
+    shapes = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
+    spec_tree = shard_mod.param_specs(family, shapes)
+    shard_tree = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda s: isinstance(s, P),
+    )
+    return shard_mod.attach(shapes, shard_tree)
+
+
+# ------------------------------------------------------------------ LM cells
+
+def _lm_cell(spec: cfg_base.ArchSpec, cell: cfg_base.ShapeCell, mesh,
+             smoke: bool = False, layer_unroll: int = 1) -> Cell:
+    cfg: tfm.TransformerConfig = spec.smoke_config if smoke else spec.config
+    # The attention KV scan is always unrolled here so a layer body's cost is
+    # exact; the layer loop's unroll factor is a dry-run knob — dryrun.py
+    # compiles at two factors and solves for the per-layer cost (XLA prices a
+    # while-loop body exactly once).
+    cfg = dataclasses.replace(
+        cfg, unroll_layers=layer_unroll, attn_unroll=True,
+        mla=(None if cfg.mla is None
+             else dataclasses.replace(cfg.mla, attn_unroll=True)),
+    )
+    ctx = _ctx(mesh)
+    dp = mesh_mod.dp_axes(mesh)
+    meta = cell.meta
+    b, s = meta["batch"], meta["seq"]
+
+    if cell.kind == cfg_base.TRAIN:
+        opt_cfg = opt_mod.AdamWConfig(schedule="wsd" if "minicpm" in spec.arch_id
+                                      else "cosine")
+        loss_fn = lambda p, batch: tfm.lm_loss(cfg, p, batch, ctx)
+        step = ts_mod.make_train_step(loss_fn, opt_cfg)
+        state_specs = _state_specs("lm", mesh, lambda k: tfm.init_lm(cfg, k))
+        batch_specs = {
+            "tokens": _sds((b, s), jnp.int32, _named(mesh, dp, None)),
+            "labels": _sds((b, s), jnp.int32, _named(mesh, dp, None)),
+        }
+        return Cell(spec.arch_id, cell.name, step, (state_specs, batch_specs),
+                    donate=(0,))
+
+    if cell.kind == cfg_base.PREFILL:
+        fn = lambda p, tokens: tfm.prefill(cfg, p, tokens, ctx)
+        param_specs = _param_specs("lm", mesh, lambda k: tfm.init_lm(cfg, k))
+        tok = _sds((b, s), jnp.int32, _named(mesh, dp, None))
+        return Cell(spec.arch_id, cell.name, fn, (param_specs, tok))
+
+    if cell.kind == cfg_base.DECODE:
+        # ctx constraints keep the MoE expert einsum sharded where the
+        # weights live (no per-step weight all-gather) and pin the KV-cache
+        # layout; per-entry divisibility filtering makes them valid for the
+        # batch=1 long-context cells too (§Perf iteration 2).
+        fn = lambda p, cache, tokens, kv_len: tfm.decode_step(
+            cfg, p, cache, tokens, kv_len, ctx=ctx
+        )
+        param_specs = _param_specs("lm", mesh, lambda k: tfm.init_lm(cfg, k))
+        cache_shapes = jax.eval_shape(
+            lambda: tfm.init_cache(cfg, b, s, dtype=jnp.bfloat16)
+        )
+        # KV cache layout: batch over dp when it divides, sequence over the
+        # remaining axes (long-context: sequence over everything).
+        dp_size = 1
+        for a in dp:
+            dp_size *= mesh.shape[a]
+        if b % dp_size == 0:
+            cache_spec = {"batch": dp, "seq": "model"}
+        else:
+            cache_spec = {"batch": None, "seq": tuple(mesh.axis_names)}
+
+        def cache_sharding(leaf):
+            # leaves: (L, B, S, ...) — gqa k/v are rank 5, mla c_kv/k_rope rank 4
+            trail = (None,) * (leaf.ndim - 3)
+            return _named(mesh, None, cache_spec["batch"], cache_spec["seq"],
+                          *trail)
+
+        cache_specs = jax.tree.map(
+            lambda l: _sds(l.shape, l.dtype, cache_sharding(l)), cache_shapes
+        )
+        tok_shard = _named(mesh, dp, None) if b % dp_size == 0 \
+            else _named(mesh, None, None)
+        len_shard = _named(mesh, dp) if b % dp_size == 0 else _named(mesh)
+        tok = _sds((b, 1), jnp.int32, tok_shard)
+        kvl = _sds((b,), jnp.int32, len_shard)
+        return Cell(spec.arch_id, cell.name, fn,
+                    (param_specs, cache_specs, tok, kvl), donate=(1,),
+                    note=cell.note)
+
+    raise ValueError(cell.kind)
+
+
+# ----------------------------------------------------------------- GNN cells
+
+def _gnn_cell(spec: cfg_base.ArchSpec, cell: cfg_base.ShapeCell, mesh,
+              smoke: bool = False) -> Cell:
+    arch_cfg = spec.smoke_config if smoke else spec.config
+    meta = cell.meta
+    ctx = _ctx(mesh)
+    dp = mesh_mod.dp_axes(mesh)
+    dev = mesh.devices.size
+
+    level = meta["level"]
+    if level == "graph":
+        n_graphs = meta["batch_graphs"]
+        n_nodes = cfg_base.pad_to(meta["n_nodes"] * n_graphs, max(dev, 512))
+        n_edges = cfg_base.pad_to(meta["n_edges"] * n_graphs, max(dev, 512))
+    else:
+        n_nodes = cfg_base.pad_to(meta["n_nodes"], max(dev, 512))
+        n_edges = cfg_base.pad_to(meta["n_edges"], max(dev, 512))
+    gat_cfg = arch_cfg.for_regime(meta["d_feat"], meta["n_classes"])
+
+    if level == "graph":
+        loss_fn = lambda p, batch: gnn_mod.gat_graph_loss(gat_cfg, p, batch, ctx)
+    else:
+        loss_fn = lambda p, batch: gnn_mod.gat_loss(gat_cfg, p, batch, ctx)
+    opt_cfg = opt_mod.AdamWConfig(lr=5e-3, weight_decay=5e-4)
+    step = ts_mod.make_train_step(loss_fn, opt_cfg)
+    state_specs = _state_specs(
+        "gnn", mesh, lambda k: gnn_mod.gat_init(k, gat_cfg)
+    )
+    batch_specs = {
+        "features": _sds((n_nodes, meta["d_feat"]), jnp.float32,
+                         _named(mesh, dp, None)),
+        "edge_index": _sds((2, n_edges), jnp.int32, _named(mesh, None, dp)),
+    }
+    if level == "graph":
+        batch_specs["graph_ids"] = _sds((n_nodes,), jnp.int32, _named(mesh, dp))
+        batch_specs["labels"] = _sds((meta["batch_graphs"],), jnp.int32,
+                                     _named(mesh, None))
+    else:
+        batch_specs["labels"] = _sds((n_nodes,), jnp.int32, _named(mesh, dp))
+        batch_specs["mask"] = _sds((n_nodes,), jnp.bool_, _named(mesh, dp))
+    return Cell(spec.arch_id, cell.name, step, (state_specs, batch_specs),
+                donate=(0,), note=cell.note)
+
+
+# -------------------------------------------------------------- recsys cells
+
+def _recsys_forward_fns(arch_id: str, cfg, ctx):
+    if arch_id == "dlrm-mlperf":
+        return {
+            "loss": lambda p, b: recsys_mod.dlrm_loss(cfg, p, b, ctx),
+            "serve": lambda p, b: recsys_mod.dlrm_forward(
+                cfg, p, b["dense"], b["sparse"], ctx),
+            "retrieval": lambda p, b: recsys_mod.dlrm_retrieval(cfg, p, b, ctx),
+        }
+    if arch_id == "deepfm":
+        return {
+            "loss": lambda p, b: recsys_mod.deepfm_loss(cfg, p, b, ctx),
+            "serve": lambda p, b: recsys_mod.deepfm_forward(cfg, p, b["sparse"], ctx),
+            "retrieval": lambda p, b: recsys_mod.deepfm_retrieval(cfg, p, b, ctx),
+        }
+    if arch_id == "mind":
+        return {
+            "loss": lambda p, b: recsys_mod.mind_loss(cfg, p, b, ctx),
+            "serve": lambda p, b: recsys_mod.mind_retrieval(
+                cfg, p, {**b, "candidates": b["candidates"]}, ctx),
+            "retrieval": lambda p, b: recsys_mod.mind_retrieval(cfg, p, b, ctx),
+        }
+    if arch_id == "bert4rec":
+        return {
+            "loss": lambda p, b: recsys_mod.bert4rec_loss(cfg, p, b, ctx),
+            "serve": lambda p, b: recsys_mod.bert4rec_retrieval(cfg, p, b, ctx),
+            "retrieval": lambda p, b: recsys_mod.bert4rec_retrieval(cfg, p, b, ctx),
+        }
+    raise KeyError(arch_id)
+
+
+def _recsys_batch_specs(arch_id: str, cfg, mesh, kind: str, meta) -> dict:
+    dp = mesh_mod.dp_axes(mesh)
+    dev = mesh.devices.size
+    b = meta.get("batch", 1)
+    every = tuple(mesh.axis_names)
+
+    def bsh(*spec):
+        return _named(mesh, *spec)
+
+    if arch_id == "dlrm-mlperf":
+        specs = {
+            "dense": _sds((b, cfg.n_dense), jnp.float32, bsh(dp, None)),
+            "sparse": _sds((b, cfg.n_sparse), jnp.int32, bsh(dp, None)),
+        }
+    elif arch_id == "deepfm":
+        specs = {"sparse": _sds((b, cfg.n_fields), jnp.int32, bsh(dp, None))}
+    elif arch_id == "mind":
+        specs = {
+            "hist": _sds((b, cfg.hist_len), jnp.int32, bsh(dp, None)),
+            "hist_mask": _sds((b, cfg.hist_len), jnp.bool_, bsh(dp, None)),
+        }
+    elif arch_id == "bert4rec":
+        specs = {
+            "seq": _sds((b, cfg.seq_len), jnp.int32, bsh(dp, None)),
+            "seq_mask": _sds((b, cfg.seq_len), jnp.bool_, bsh(dp, None)),
+        }
+    else:
+        raise KeyError(arch_id)
+
+    if kind == cfg_base.TRAIN:
+        if arch_id in ("dlrm-mlperf", "deepfm"):
+            specs["labels"] = _sds((b,), jnp.float32, bsh(dp))
+        elif arch_id == "mind":
+            specs["target"] = _sds((b,), jnp.int32, bsh(dp))
+        elif arch_id == "bert4rec":
+            n_mask = 20
+            specs["mlm_positions"] = _sds((b, n_mask), jnp.int32, bsh(dp, None))
+            specs["mlm_labels"] = _sds((b, n_mask), jnp.int32, bsh(dp, None))
+    if kind == cfg_base.RETRIEVAL:
+        c = cfg_base.pad_to(meta["n_candidates"], max(dev, 512))
+        specs["candidates"] = _sds((c,), jnp.int32, bsh(every))
+        # batch=1 cells replicate the user-side inputs.
+        for k, v in list(specs.items()):
+            if k != "candidates" and v.shape[0] == 1:
+                specs[k] = _sds(v.shape, v.dtype, bsh(*([None] * v.ndim)))
+    if kind == cfg_base.SERVE and arch_id in ("mind", "bert4rec"):
+        # Online scoring against a served candidate slate (100/query here).
+        specs["candidates"] = _sds((100,), jnp.int32, bsh(None))
+    return specs
+
+
+def _recsys_cell(spec: cfg_base.ArchSpec, cell: cfg_base.ShapeCell, mesh,
+                 smoke: bool = False) -> Cell:
+    cfg = spec.smoke_config if smoke else spec.config
+    ctx = _ctx(mesh)
+    fns = _recsys_forward_fns(spec.arch_id, cfg, ctx)
+    init_map = {
+        "dlrm-mlperf": lambda k: recsys_mod.dlrm_init(k, cfg),
+        "deepfm": lambda k: recsys_mod.deepfm_init(k, cfg),
+        "mind": lambda k: recsys_mod.mind_init(k, cfg),
+        "bert4rec": lambda k: recsys_mod.bert4rec_init(k, cfg),
+    }
+    init_fn = init_map[spec.arch_id]
+    batch_specs = _recsys_batch_specs(spec.arch_id, cfg, mesh, cell.kind,
+                                      cell.meta)
+
+    if cell.kind == cfg_base.TRAIN:
+        opt_cfg = opt_mod.AdamWConfig(lr=1e-3, weight_decay=0.0)
+        step = ts_mod.make_train_step(lambda p, b: fns["loss"](p, b), opt_cfg)
+        state_specs = _state_specs("recsys", mesh, init_fn)
+        return Cell(spec.arch_id, cell.name, step, (state_specs, batch_specs),
+                    donate=(0,))
+
+    fn = fns["serve" if cell.kind == cfg_base.SERVE else "retrieval"]
+    param_specs = _param_specs("recsys", mesh, init_fn)
+    return Cell(spec.arch_id, cell.name, fn, (param_specs, batch_specs))
+
+
+# ---------------------------------------------------------------- MCGI cells
+
+def _mcgi_cell(spec: cfg_base.ArchSpec, cell: cfg_base.ShapeCell, mesh,
+               smoke: bool = False) -> Cell:
+    from repro.distributed import sharded_search as ss
+
+    cfg = spec.smoke_config if smoke else spec.config
+    dtype = jnp.uint8 if cfg.data_dtype == "uint8" else jnp.float32
+    # PQ subspaces need d % m == 0; pad the vector dim (T2I: 200 -> 208),
+    # the standard zero-pad that leaves L2 distances unchanged.
+    d_pad = cfg_base.pad_to(cfg.d, cfg.m_pq) if cfg.m_pq else cfg.d
+    specs = ss.sharded_index_specs(
+        mesh, n=cfg.n, d=d_pad, degree=cfg.degree, m_pq=cfg.m_pq,
+        n_queries=cell.meta["queries"] if not smoke else cfg.queries,
+        data_dtype=dtype,
+    )
+    step = ss.make_distributed_search(
+        mesh, beam_width=cfg.l_search, max_hops=cfg.max_hops,
+        k=cell.meta["k"], query_chunk=min(128, cfg.queries),
+        use_pq=cfg.m_pq is not None,
+    )
+    args = (specs.adj, specs.codes, specs.vectors, specs.centroids,
+            specs.queries, specs.shard_ok)
+    return Cell(spec.arch_id, cell.name, step, args)
+
+
+_FAMILY_BUILDERS = {
+    "lm": _lm_cell,
+    "gnn": _gnn_cell,
+    "recsys": _recsys_cell,
+    "mcgi": _mcgi_cell,
+}
+
+
+def build_cell(arch_id: str, shape_name: str, mesh, smoke: bool = False,
+               layer_unroll: int = 1) -> Cell:
+    spec = cfg_base.get(arch_id)
+    cell = spec.cell(shape_name)
+    if spec.family == "lm":
+        return _lm_cell(spec, cell, mesh, smoke=smoke,
+                        layer_unroll=layer_unroll)
+    return _FAMILY_BUILDERS[spec.family](spec, cell, mesh, smoke=smoke)
+
+
+def layer_loop_length(arch_id: str) -> int | None:
+    """Trip count of the arch's layer scan (None = no scan loop)."""
+    spec = cfg_base.get(arch_id)
+    if spec.family == "lm":
+        return spec.config.n_layers
+    return None
+
+
+def small_divisor(n: int) -> int:
+    for d in (2, 3, 4, 5, 7):
+        if n % d == 0:
+            return d
+    return n
+
+
+def all_cells() -> list[tuple[str, str]]:
+    """Every (arch, shape) pair in the assignment (incl. MCGI serve cells)."""
+    out = []
+    for arch_id, spec in cfg_base.all_archs().items():
+        for cell in spec.shapes:
+            out.append((arch_id, cell.name))
+    return out

@@ -1,0 +1,46 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a function (not a module constant) so importing
+this module never touches jax device state — dryrun.py sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 *before* any jax import
+and only then builds meshes.
+
+Axis semantics:
+  pod   — 2 pods of 256 chips (multi-pod only); replica/extra-DP axis
+  data  — batch / FSDP / index-shard axis
+  model — tensor / expert / sequence axis
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(n_data: int = 2, n_model: int = 4):
+    """Small mesh for CPU tests (requires >= n_data*n_model host devices)."""
+    return jax.make_mesh(
+        (n_data, n_model), ("data", "model"),
+        axis_types=(AxisType.Auto, AxisType.Auto),
+    )
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    """The data-parallel axes of a mesh: ('pod','data') or ('data',)."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def all_axes(mesh) -> tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def n_devices(mesh) -> int:
+    return mesh.devices.size

@@ -1,0 +1,89 @@
+"""MCGI serving launcher — build (or load) a tiered index and serve batched
+queries, reporting the paper's operational metrics (QPS, recall if ground
+truth is available, I/O per query, modelled SSD latency).
+
+    PYTHONPATH=src python -m repro.launch.serve --dataset tiny-mixture \
+        --beam 48 --batch 64 --num-batches 20 [--index PATH] [--online]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="tiny-mixture")
+    ap.add_argument("--beam", type=int, default=48)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--num-batches", type=int, default=10)
+    ap.add_argument("--m-pq", type=int, default=8)
+    ap.add_argument("--index", default=None, help="load/save index path")
+    ap.add_argument("--online", action="store_true",
+                    help="build with Online-MCGI (Algorithm 2)")
+    ap.add_argument("--vamana", action="store_true",
+                    help="baseline build (static alpha=1.2)")
+    args = ap.parse_args()
+
+    from repro.core import build, distance, online
+    from repro.data import make_dataset
+    from repro.index import build_tiered_index, load_index, save_index
+    from repro.index.disk import DiskTierModel, search_tiered
+
+    x, queries = make_dataset(args.dataset, seed=0)
+    import pathlib
+
+    if args.index and pathlib.Path(args.index).exists():
+        index = load_index(args.index)
+        print(f"[serve] loaded index: n={index.n}")
+    else:
+        cfg = build.BuildConfig()
+        t0 = time.time()
+        if args.online:
+            graph = online.build_online_mcgi(x, cfg, progress=print)
+        elif args.vamana:
+            graph = build.build_vamana(x, 1.2, cfg, progress=print)
+        else:
+            graph = build.build_mcgi(x, cfg, progress=print)
+        index = build_tiered_index(x, graph, m_pq=args.m_pq)
+        print(f"[serve] built index in {time.time()-t0:.1f}s "
+              f"(fast tier {index.fast_tier_bytes()/1e6:.1f}MB, "
+              f"slow tier {index.slow_tier_bytes()/1e6:.1f}MB)")
+        if args.index:
+            save_index(args.index, index)
+
+    gt_d, gt_i = distance.brute_force_topk(queries, x, k=args.k)
+    model = DiskTierModel()
+
+    # Warmup compile.
+    _ = search_tiered(index, queries[: args.batch], beam_width=args.beam,
+                      k=args.k)
+    lat_ms, recalls, ios = [], [], []
+    rng = np.random.default_rng(0)
+    t_all = time.time()
+    for i in range(args.num_batches):
+        sel = rng.integers(0, queries.shape[0], args.batch)
+        qb = queries[sel]
+        t0 = time.time()
+        ids, d2, stats = search_tiered(index, qb, beam_width=args.beam,
+                                       k=args.k)
+        jax.block_until_ready(ids)
+        lat_ms.append((time.time() - t0) * 1e3)
+        recalls.append(float(distance.recall_at_k(ids, gt_i[sel])))
+        ios.append(float(stats.hops.mean()))
+    total = time.time() - t_all
+    qps = args.batch * args.num_batches / total
+    print(f"[serve] recall@{args.k}={np.mean(recalls):.4f} qps={qps:.1f} "
+          f"io/query={np.mean(ios):.1f} "
+          f"batch_lat p50={np.percentile(lat_ms,50):.1f}ms "
+          f"p99={np.percentile(lat_ms,99):.1f}ms "
+          f"ssd_model={np.mean(ios)*model.read_latency_us/1e3:.2f}ms/query")
+
+
+if __name__ == "__main__":
+    main()

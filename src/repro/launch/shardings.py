@@ -1,0 +1,155 @@
+"""Parameter/activation sharding rules for every architecture family.
+
+One table of (path-regex -> PartitionSpec template) per family, applied over
+``jax.eval_shape`` trees — the single source of truth used by the dry-run,
+the trainer and the server. Templates are written against logical axis names
+(dp = 'data', tp = 'model'); the pod axis replicates parameters (DP across
+pods) and shards batches.
+
+Conventions (see DESIGN.md §5):
+  * LM: FSDP over data + tensor-parallel over model; stacked-layer leading
+    axis always unsharded; vocab padded so every sharded dim divides 16/256.
+  * GNN: GAT parameters are KBs — replicated; the graph (inputs) shards.
+  * RecSys: embedding tables row-sharded over (data x model); MLPs replicated.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+Params = Any
+
+# ----------------------------------------------------------------- LM rules
+
+_LM_RULES: list[tuple[str, P]] = [
+    (r"embed$", P("model", "data")),
+    (r"lm_head$", P("data", "model")),
+    (r"ln_", P()),
+    (r"(q_norm|k_norm|kv_norm)$", P()),
+    (r"layers/attn/(wq|wk|wv)$", P(None, "data", "model")),
+    (r"layers/attn/(bq|bk|bv)$", P(None, "model")),
+    (r"layers/attn/wo$", P(None, "model", "data")),
+    (r"layers/attn/w_dkv$", P(None, "data", None)),
+    (r"layers/attn/(w_uk|w_uv)$", P(None, None, "model")),
+    (r"layers/moe/router$", P(None, "data", None)),
+    (r"layers/moe/(w_gate|w_up)$", P(None, "model", "data", None)),
+    (r"layers/moe/w_down$", P(None, "model", None, "data")),
+    (r"layers/moe/shared/(w_gate|w_up)$", P(None, "data", "model")),
+    (r"layers/moe/shared/w_down$", P(None, "model", "data")),
+    (r"layers/ffn/(w_gate|w_up)$", P(None, "data", "model")),
+    (r"layers/ffn/w_down$", P(None, "model", "data")),
+]
+
+# ------------------------------------------------------------- recsys rules
+
+_RECSYS_RULES: list[tuple[str, P]] = [
+    (r"(table|items|first_order)$", P(("data", "model"), None)),
+    (r".*", P()),  # MLPs / norms / scalars replicated
+]
+
+_GNN_RULES: list[tuple[str, P]] = [(r".*", P())]
+
+_FAMILY_RULES = {"lm": _LM_RULES, "recsys": _RECSYS_RULES, "gnn": _GNN_RULES}
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def spec_for(family: str, path_str: str, leaf) -> P:
+    for pat, spec in _FAMILY_RULES[family]:
+        if re.search(pat, path_str):
+            # Trim/extend the template to the leaf rank (scalars -> P()).
+            entries = list(spec)
+            if len(entries) > leaf.ndim:
+                # Drop leading Nones first (stacked-layer templates applied to
+                # unstacked leaves), then trailing.
+                while len(entries) > leaf.ndim and entries and entries[0] is None:
+                    entries.pop(0)
+                entries = entries[: leaf.ndim]
+            while len(entries) < leaf.ndim:
+                entries.append(None)
+            return P(*entries)
+    return P()
+
+
+def param_specs(family: str, params_shapes: Params) -> Params:
+    """Pytree of PartitionSpec matching a params eval_shape tree."""
+
+    def one(path, leaf):
+        return spec_for(family, _path_str(path), leaf)
+
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+def with_sharding(mesh, spec_tree: Params) -> Params:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda s: isinstance(s, P),
+    )
+
+
+def attach(shape_tree: Params, sharding_tree: Params) -> Params:
+    """ShapeDtypeStructs with shardings attached (dry-run argument specs)."""
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        shape_tree,
+        sharding_tree,
+    )
+
+
+def train_state_specs(family: str, state_shapes) -> Params:
+    """Specs for a TrainState: params/m/v share the param rules; step and
+    error feedback follow params' structure."""
+    p_spec = param_specs(family, state_shapes.params)
+    opt_spec = {
+        "m": p_spec,
+        "v": jax.tree.map(lambda s: s, p_spec),
+        "step": P(),
+    }
+    ef = state_shapes.error_feedback
+    from repro.training.train_step import TrainState
+
+    return TrainState(
+        params=p_spec,
+        opt=opt_spec,
+        error_feedback=None if ef is None else jax.tree.map(lambda s: s, p_spec),
+    )
+
+
+def check_divisibility(shape_tree: Params, spec_tree: Params, mesh) -> list[str]:
+    """Report leaves whose sharded dims don't divide the mesh axes (these
+    would silently pad on real hardware — we require exact tiling)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    problems = []
+
+    def one(path, leaf, spec):
+        for dim, entry in enumerate(spec):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            total = 1
+            for a in axes:
+                total *= sizes[a]
+            if leaf.shape[dim] % total != 0:
+                problems.append(
+                    f"{_path_str(path)}: dim{dim}={leaf.shape[dim]} "
+                    f"not divisible by {axes}={total}"
+                )
+
+    jax.tree_util.tree_map_with_path(
+        one, shape_tree, spec_tree,
+    )
+    return problems

@@ -1,0 +1,4 @@
+"""Architecture zoo: LM transformers (GQA/MLA, dense/MoE), GAT GNN, and the
+four recsys models, all functional plain-dict params on the shared substrate
+(layers.py / blockwise.py / embedding.py)."""
+from repro.models.layers import ShardCtx  # noqa: F401

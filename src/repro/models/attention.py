@@ -1,0 +1,309 @@
+"""Attention variants for the LM zoo: GQA (qwen2/qwen3/deepseek-coder/minicpm)
+and MLA (deepseek-v2-lite), each with a train path (full causal self-attn)
+and a decode path (single token against a KV cache).
+
+Decode paths route through :func:`repro.kernels.ops.decode_attention` (Pallas
+flash-decoding on TPU, shardable jnp elsewhere). MLA ships both the naive
+(expand-latent) and *absorbed* decode — the absorbed form never materialises
+full K/V and is one of the framework's beyond-paper §Perf levers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models import layers
+from repro.models.blockwise import blockwise_attention
+from repro.models.layers import ShardCtx, constrain, dense_init
+
+Array = jax.Array
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class GqaConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    qkv_bias: bool = False
+    qk_norm: bool = False       # qwen3-style per-head RMS on q/k
+    rope_theta: float = 10000.0
+    attn_chunk_q: int = 256
+    attn_chunk_k: int = 1024
+    skip_masked_blocks: bool = False  # §Perf lever: causal block skipping
+    attn_unroll: bool = False         # dry-run cost accounting (scan unroll)
+
+
+def gqa_init(key: Array, cfg: GqaConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * cfg.d_head, dtype=dtype),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.n_kv_heads * cfg.d_head, dtype=dtype),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.n_kv_heads * cfg.d_head, dtype=dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * cfg.d_head, cfg.d_model, dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * cfg.d_head,), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * cfg.d_head,), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * cfg.d_head,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((cfg.d_head,), dtype)
+        p["k_norm"] = jnp.ones((cfg.d_head,), dtype)
+    return p
+
+
+def _project_qkv(p: Params, cfg: GqaConfig, x: Array, positions: Array):
+    b, s, _ = x.shape
+    q = x @ p["wq"] + (p["bq"] if "bq" in p else 0.0)
+    k = x @ p["wk"] + (p["bk"] if "bk" in p else 0.0)
+    v = x @ p["wv"] + (p["bv"] if "bv" in p else 0.0)
+    q = q.reshape(b, s, cfg.n_heads, cfg.d_head)
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    if cfg.qk_norm:
+        q = layers.rms_norm(q, p["q_norm"])
+        k = layers.rms_norm(k, p["k_norm"])
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k = layers.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_train(
+    p: Params, cfg: GqaConfig, x: Array, ctx: ShardCtx | None = None
+) -> Array:
+    """Blockwise causal self-attention. x: (B, S, D) -> (B, S, D)."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    if ctx is not None:
+        q = constrain(ctx, q, ctx.dp, None, ctx.tp, None)
+        k = constrain(ctx, k, ctx.dp, None, None, None)
+        v = constrain(ctx, v, ctx.dp, None, None, None)
+    g = cfg.n_heads // cfg.n_kv_heads
+    q = q.reshape(b, s, cfg.n_kv_heads, g, cfg.d_head)
+    o = blockwise_attention(
+        q, k, v,
+        chunk_q=min(cfg.attn_chunk_q, s), chunk_k=min(cfg.attn_chunk_k, s),
+        causal=True, skip_masked_blocks=cfg.skip_masked_blocks,
+        unroll=cfg.attn_unroll, ctx=ctx,
+    ).reshape(b, s, -1)
+    return o @ p["wo"]
+
+
+def gqa_init_cache(cfg: GqaConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.d_head)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def gqa_decode(
+    p: Params,
+    cfg: GqaConfig,
+    x: Array,
+    cache: Params,
+    kv_len: Array,
+    ctx: ShardCtx | None = None,
+) -> tuple[Array, Params]:
+    """One decode step. x: (B, 1, D); kv_len: (B,) current lengths.
+
+    Returns (out (B, 1, D), updated cache). The new token is written at
+    position kv_len[b] and attends to kv_len[b]+1 entries.
+    """
+    b = x.shape[0]
+    positions = kv_len[:, None]  # (B, 1)
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    # Write the new KV at each sequence's position via a masked select —
+    # elementwise, so a sequence-sharded cache updates with ZERO collectives
+    # (a scatter at a dynamic cross-shard index makes GSPMD all-gather the
+    # whole cache; §Perf iteration on the long-context decode cells).
+    s_max = cache["k"].shape[1]
+    write = (jnp.arange(s_max)[None, :] == kv_len[:, None])[..., None, None]
+    cache_k = jnp.where(write, k[:, 0][:, None].astype(cache["k"].dtype),
+                        cache["k"])
+    cache_v = jnp.where(write, v[:, 0][:, None].astype(cache["v"].dtype),
+                        cache["v"])
+    if ctx is not None:
+        b_e, s_e = ctx.batch_seq_spec(b)
+        cache_k = constrain(ctx, cache_k, b_e, s_e, None, None)
+        cache_v = constrain(ctx, cache_v, b_e, s_e, None, None)
+    o = ops.decode_attention(
+        q[:, 0], cache_k, cache_v, kv_len + 1
+    )  # (B, Hq, d)
+    o = o.astype(x.dtype).reshape(b, 1, -1)
+    return o @ p["wo"], {"k": cache_k, "v": cache_v}
+
+
+# ----------------------------------------------------------------------- MLA
+
+@dataclasses.dataclass(frozen=True)
+class MlaConfig:
+    """DeepSeek-V2 Multi-head Latent Attention (arXiv:2405.04434).
+
+    V2-Lite: kv_lora_rank=512, no q compression, 16 heads,
+    qk_nope=128, qk_rope=64, v_head=128.
+    """
+
+    d_model: int
+    n_heads: int
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    rope_theta: float = 10000.0
+    attn_chunk_q: int = 256
+    attn_chunk_k: int = 1024
+    skip_masked_blocks: bool = False
+    attn_unroll: bool = False         # dry-run cost accounting (scan unroll)
+
+
+def mla_init(key: Array, cfg: MlaConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 6)
+    h = cfg.n_heads
+    return {
+        # Queries (uncompressed in V2-Lite).
+        "wq": dense_init(ks[0], cfg.d_model, h * (cfg.qk_nope_dim + cfg.qk_rope_dim),
+                         dtype=dtype),
+        # Joint KV down-projection + decoupled rope key.
+        "w_dkv": dense_init(ks[1], cfg.d_model, cfg.kv_lora_rank + cfg.qk_rope_dim,
+                            dtype=dtype),
+        "kv_norm": jnp.ones((cfg.kv_lora_rank,), dtype),
+        # Up-projections from the latent.
+        "w_uk": dense_init(ks[2], cfg.kv_lora_rank, h * cfg.qk_nope_dim, dtype=dtype),
+        "w_uv": dense_init(ks[3], cfg.kv_lora_rank, h * cfg.v_head_dim, dtype=dtype),
+        "wo": dense_init(ks[4], h * cfg.v_head_dim, cfg.d_model, dtype=dtype),
+    }
+
+
+def _mla_latent(p: Params, cfg: MlaConfig, x: Array, positions: Array):
+    """Compressed KV path: returns (c_kv (B,S,r), k_rope (B,S,1,dr))."""
+    dkv = x @ p["w_dkv"]
+    c_kv, k_rope = jnp.split(dkv, [cfg.kv_lora_rank], axis=-1)
+    c_kv = layers.rms_norm(c_kv, p["kv_norm"])
+    k_rope = layers.apply_rope(
+        k_rope[..., None, :], positions, cfg.rope_theta
+    )  # (B,S,1,dr) shared across heads
+    return c_kv, k_rope
+
+
+def mla_train(
+    p: Params, cfg: MlaConfig, x: Array, ctx: ShardCtx | None = None
+) -> Array:
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    positions = jnp.arange(s)[None, :]
+    q = (x @ p["wq"]).reshape(b, s, h, cfg.qk_nope_dim + cfg.qk_rope_dim)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+    q_rope = layers.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    c_kv, k_rope = _mla_latent(p, cfg, x, positions)
+    k_nope = (c_kv @ p["w_uk"]).reshape(b, s, h, cfg.qk_nope_dim)
+    v = (c_kv @ p["w_uv"]).reshape(b, s, h, cfg.v_head_dim)
+    if ctx is not None:
+        q_nope = constrain(ctx, q_nope, ctx.dp, None, ctx.tp, None)
+        k_nope = constrain(ctx, k_nope, ctx.dp, None, ctx.tp, None)
+        v = constrain(ctx, v, ctx.dp, None, ctx.tp, None)
+
+    # Fold the (nope | rope) split into one key dim and reuse the blockwise
+    # machinery (its d^-0.5 scale over d = nope+rope is exactly MLA's scale);
+    # the shared rope key broadcasts across heads. Here each head is its own
+    # "kv head" with group size 1.
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)[:, :, :, None, :]
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, s, h, cfg.qk_rope_dim))], axis=-1
+    )
+    o = blockwise_attention(
+        q_full, k_full, v,
+        chunk_q=min(cfg.attn_chunk_q, s), chunk_k=min(cfg.attn_chunk_k, s),
+        causal=True, skip_masked_blocks=cfg.skip_masked_blocks,
+        unroll=cfg.attn_unroll, ctx=ctx,
+    )  # (B,S,H,1,v_dim)
+    o = o.reshape(b, s, -1)
+    return o @ p["wo"]
+
+
+def mla_init_cache(cfg: MlaConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """The latent cache: (r + dr) per token — MLA's memory win."""
+    return {
+        "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+    }
+
+
+def mla_decode(
+    p: Params,
+    cfg: MlaConfig,
+    x: Array,
+    cache: Params,
+    kv_len: Array,
+    ctx: ShardCtx | None = None,
+    absorbed: bool = True,
+) -> tuple[Array, Params]:
+    """One MLA decode step against the latent cache.
+
+    absorbed=True computes attention entirely in the r-dim latent space
+    (W_uk folded into the query, W_uv applied after the weighted latent sum) —
+    no (S, H, d) K/V ever materialises. absorbed=False expands the latent to
+    full K/V (the naive baseline; kept for §Perf A/B).
+    """
+    b = x.shape[0]
+    h = cfg.n_heads
+    positions = kv_len[:, None]
+    q = (x @ p["wq"]).reshape(b, 1, h, cfg.qk_nope_dim + cfg.qk_rope_dim)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+    q_rope = layers.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    c_kv_new, k_rope_new = _mla_latent(p, cfg, x, positions)
+    # Masked-select cache write (see gqa_decode) — collective-free under a
+    # sequence-sharded latent cache.
+    s_tot = cache["c_kv"].shape[1]
+    write = (jnp.arange(s_tot)[None, :] == kv_len[:, None])[..., None]
+    c_kv = jnp.where(write, c_kv_new[:, 0][:, None].astype(cache["c_kv"].dtype),
+                     cache["c_kv"])
+    k_rope = jnp.where(
+        write, k_rope_new[:, 0, 0][:, None].astype(cache["k_rope"].dtype),
+        cache["k_rope"],
+    )
+    if ctx is not None:
+        b_e, s_e = ctx.batch_seq_spec(b)
+        c_kv = constrain(ctx, c_kv, b_e, s_e, None)
+        k_rope = constrain(ctx, k_rope, b_e, s_e, None)
+    new_cache = {"c_kv": c_kv, "k_rope": k_rope}
+    s_max = c_kv.shape[1]
+    mask = jnp.arange(s_max)[None, :] < (kv_len + 1)[:, None]  # (B, S)
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+
+    if absorbed:
+        # q~ = W_uk^T q_nope: (B, h, r); scores in latent space.
+        w_uk = p["w_uk"].reshape(cfg.kv_lora_rank, h, cfg.qk_nope_dim)
+        q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], w_uk)
+        logits = jnp.einsum(
+            "bhr,bsr->bhs", q_lat.astype(jnp.float32), c_kv.astype(jnp.float32)
+        )
+        logits = logits + jnp.einsum(
+            "bhd,bsd->bhs",
+            q_rope[:, 0].astype(jnp.float32),
+            k_rope.astype(jnp.float32),
+        )
+        logits = jnp.where(mask[:, None], logits * scale, -jnp.inf)
+        w = jax.nn.softmax(logits, axis=-1)
+        lat = jnp.einsum("bhs,bsr->bhr", w, c_kv.astype(jnp.float32))
+        w_uv = p["w_uv"].reshape(cfg.kv_lora_rank, h, cfg.v_head_dim)
+        o = jnp.einsum("bhr,rhd->bhd", lat, w_uv.astype(jnp.float32))
+    else:
+        k_nope = (c_kv.astype(x.dtype) @ p["w_uk"]).reshape(
+            b, s_max, h, cfg.qk_nope_dim
+        )
+        v = (c_kv.astype(x.dtype) @ p["w_uv"]).reshape(b, s_max, h, cfg.v_head_dim)
+        logits = jnp.einsum("bhd,bshd->bhs", q_nope[:, 0], k_nope).astype(
+            jnp.float32
+        ) + jnp.einsum("bhd,bsd->bhs", q_rope[:, 0], k_rope).astype(jnp.float32)
+        logits = jnp.where(mask[:, None], logits * scale, -jnp.inf)
+        w = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        o = jnp.einsum("bhs,bshd->bhd", w, v)
+
+    o = o.astype(x.dtype).reshape(b, 1, -1)
+    return o @ p["wo"], new_cache

@@ -1,0 +1,178 @@
+"""Blockwise (memory-linear) causal attention in pure jnp.
+
+Full S x S score materialisation is impossible at the assigned prefill_32k /
+train_4k shapes (32k^2 per head). This module is the GSPMD-shardable
+flash-attention equivalent: an online-softmax scan over key/value chunks, so
+peak live memory is O(S * chunk_k) per head-group rather than O(S^2). On real
+TPU deployments the Pallas flash kernel replaces it inside shard_map; the
+dry-run and CPU tests lower this version.
+
+Two implementations, numerically identical (tested against each other):
+
+  * default: the query-chunk axis is a *batched* dim (reshape, no slicing),
+    only the KV axis is a sequential scan. Crucial under GSPMD: q stays
+    sequence-sharded over the model axis with zero resharding, while k/v are
+    sequence-replicated by the caller's constraint (the standard
+    Megatron-SP all-gather of the small GQA KV heads). A sequential q loop
+    would dynamic-slice across the sharded axis and trigger involuntary full
+    rematerialisation (XLA SPMD warning b/433785288).
+
+  * skip_masked_blocks=True: sequential q-chunk loop that visits only
+    kv-chunks j <= i — the causal-FLOPs-optimal variant (half the attention
+    compute). Slicing-heavy, so it is the single-device / Pallas-kernel
+    reference semantics and the §Perf A/B lever, not the GSPMD default.
+
+FLOPs note (§Roofline): the default computes all S^2 blocks and masks —
+~2x causal-optimal attention FLOPs; recorded in the useful-FLOPs ratio.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import constrain
+
+Array = jax.Array
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_q", "chunk_k", "causal",
+                                              "skip_masked_blocks", "unroll",
+                                              "ctx"))
+def blockwise_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    chunk_q: int = 256,
+    chunk_k: int = 1024,
+    causal: bool = True,
+    skip_masked_blocks: bool = False,
+    unroll: bool = False,
+    ctx=None,
+) -> Array:
+    """q: (B, S, Hkv, G, d); k, v: (B, S, Hkv, d) -> (B, S, Hkv, G, d_v).
+
+    GQA group dim G folded in q; softmax in f32; output in q.dtype.
+    ``unroll=True`` unrolls the KV scan — required for dry-run cost
+    accounting (XLA cost_analysis counts a while-loop body once).
+    """
+    if skip_masked_blocks and causal:
+        return _blockwise_seq_q(q, k, v, chunk_q=chunk_q, chunk_k=chunk_k)
+    return _blockwise_batched_q(q, k, v, chunk_q=chunk_q, chunk_k=chunk_k,
+                                causal=causal, unroll=unroll, ctx=ctx)
+
+
+def _blockwise_batched_q(q, k, v, *, chunk_q, chunk_k, causal, unroll=False,
+                         ctx=None):
+    b, s, hkv, g, d = q.shape
+    dv = v.shape[-1]
+    assert s % chunk_q == 0 and s % chunk_k == 0, (s, chunk_q, chunk_k)
+    nq, nk = s // chunk_q, s // chunk_k
+    scale = d ** -0.5
+
+    qc = q.reshape(b, nq, chunk_q, hkv, g, d)
+    kc = k.reshape(b, nk, chunk_k, hkv, d)
+    vc = v.reshape(b, nk, chunk_k, hkv, dv)
+    q_pos = jnp.arange(s).reshape(nq, chunk_q)
+    k_pos = jnp.arange(s).reshape(nk, chunk_k)
+
+    # The q-chunk axis nq carries the sequence sharding (callers pick
+    # chunk_q <= S/|tp| so nq tiles the model axis). Constraints inside the
+    # scan pin both the forward intermediates AND their bwd cotangents
+    # (with_sharding_constraint transposes to itself) — without them the
+    # backward pass replicates every (B, nq, cq, H, G, ck) f32 tensor across
+    # the mesh (observed: ~9.4e12 B/device of all-gathers on train_4k).
+    def _pin(t):
+        if ctx is None:
+            return t
+        spec = (ctx.dp, ctx.tp) + (None,) * (t.ndim - 2)
+        return constrain(ctx, t, *spec)
+
+    acc0 = _pin(jnp.zeros((b, nq, chunk_q, hkv, g, dv), jnp.float32))
+    m0 = _pin(jnp.full((b, nq, chunk_q, hkv, g), -jnp.inf, jnp.float32))
+    l0 = _pin(jnp.zeros((b, nq, chunk_q, hkv, g), jnp.float32))
+
+    def kv_step(carry, kj):
+        acc, m, l = carry
+        kt = jax.lax.dynamic_index_in_dim(kc, kj, 1, keepdims=False)
+        vt = jax.lax.dynamic_index_in_dim(vc, kj, 1, keepdims=False)
+        logits = jnp.einsum(
+            "bnqhgd,bkhd->bnqhgk", qc.astype(jnp.float32),
+            kt.astype(jnp.float32),
+        ) * scale  # (B, nq, cq, H, G, ck)
+        logits = _pin(logits)
+        if causal:
+            kp = jax.lax.dynamic_index_in_dim(k_pos, kj, 0, keepdims=False)
+            mask = q_pos[:, :, None] >= kp[None, None, :]  # (nq, cq, ck)
+            logits = jnp.where(
+                mask[None, :, :, None, None, :], logits, -jnp.inf
+            )
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(logits - safe_m[..., None])
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - safe_m), 0.0)
+        l = l * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bnqhgk,bkhd->bnqhgd", p, vt.astype(jnp.float32)
+        )
+        return (_pin(acc), _pin(m_new), _pin(l)), None
+
+    (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0), jnp.arange(nk),
+                                  unroll=nk if unroll else 1)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, s, hkv, g, dv).astype(q.dtype)
+
+
+def _blockwise_seq_q(q, k, v, *, chunk_q, chunk_k):
+    """Causal-optimal sequential-q variant (j <= i kv chunks only)."""
+    b, s, hkv, g, d = q.shape
+    dv = v.shape[-1]
+    assert s % chunk_q == 0 and s % chunk_k == 0, (s, chunk_q, chunk_k)
+    nq, nk = s // chunk_q, s // chunk_k
+    scale = d ** -0.5
+
+    qc = q.reshape(b, nq, chunk_q, hkv, g, d)
+    kc = k.reshape(b, nk, chunk_k, hkv, d)
+    vc = v.reshape(b, nk, chunk_k, hkv, dv)
+    q_pos = jnp.arange(s).reshape(nq, chunk_q)
+    k_pos = jnp.arange(s).reshape(nk, chunk_k)
+
+    def q_block(qi, q_tile):
+        acc0 = jnp.zeros((b, chunk_q, hkv, g, dv), jnp.float32)
+        m0 = jnp.full((b, chunk_q, hkv, g), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, chunk_q, hkv, g), jnp.float32)
+
+        def kv_block(carry, kj):
+            acc, m, l = carry
+            kt = kc[:, kj]
+            vt = vc[:, kj]
+            logits = jnp.einsum(
+                "bqhgd,bkhd->bqhgk", q_tile.astype(jnp.float32),
+                kt.astype(jnp.float32),
+            ) * scale
+            mask = q_pos[qi][:, None] >= k_pos[kj][None, :]
+            logits = jnp.where(mask[None, :, None, None, :], logits, -jnp.inf)
+            m_new = jnp.maximum(m, logits.max(axis=-1))
+            safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(logits - safe_m[..., None])
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - safe_m), 0.0)
+            l = l * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bqhgk,bkhd->bqhgd", p, vt.astype(jnp.float32)
+            )
+            return acc, m_new, l
+
+        # Only kv chunks whose start precedes this q chunk's end contribute.
+        hi = jnp.minimum((qi * chunk_q + chunk_q + chunk_k - 1) // chunk_k, nk)
+
+        def body(j, carry):
+            return kv_block(carry, j)
+
+        acc, m, l = jax.lax.fori_loop(0, hi, body, (acc0, m0, l0))
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    out = jax.lax.map(lambda qi: q_block(qi, qc[:, qi]), jnp.arange(nq))
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, hkv, g, dv)
+    return out.astype(q.dtype)

@@ -1,0 +1,105 @@
+"""EmbeddingBag and fused multi-table embedding for the recsys archs.
+
+JAX has no nn.EmbeddingBag; per kernel_taxonomy §RecSys it is built from
+``jnp.take`` + ``jax.ops.segment_sum``. The multi-table variant fuses all
+categorical tables into one row-sharded array with per-field offsets — the
+FBGEMM table-batched-embedding layout, which is also the natural layout for
+row-sharding a ~100 GB DLRM table over (data x model).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+Params = dict[str, Any]
+
+
+def embedding_bag(
+    table: Array,
+    indices: Array,
+    weights: Array | None = None,
+    mask: Array | None = None,
+    mode: str = "sum",
+) -> Array:
+    """Bagged lookup. table (V, D); indices (B, L) -> (B, D).
+
+    mask (B, L) marks valid entries (ragged bags padded to L).
+    """
+    vecs = jnp.take(table, indices, axis=0)  # (B, L, D)
+    if weights is not None:
+        vecs = vecs * weights[..., None]
+    if mask is not None:
+        vecs = vecs * mask[..., None].astype(vecs.dtype)
+    if mode == "sum":
+        return vecs.sum(axis=1)
+    if mode == "mean":
+        denom = (
+            mask.sum(axis=1, keepdims=True).astype(vecs.dtype)
+            if mask is not None
+            else jnp.float32(indices.shape[1])
+        )
+        return vecs.sum(axis=1) / jnp.maximum(denom, 1.0)
+    if mode == "max":
+        if mask is not None:
+            vecs = jnp.where(mask[..., None], vecs, -jnp.inf)
+        return vecs.max(axis=1)
+    raise ValueError(mode)
+
+
+# Embedding tables are row-padded to this multiple so they tile exactly over
+# any production mesh (512 = 2 pods x 16 x 16); ghost rows are never indexed.
+ROW_MULTIPLE = 512
+
+
+def pad_rows(n: int, multiple: int = ROW_MULTIPLE) -> int:
+    return ((n + multiple - 1) // multiple) * multiple
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedTableSpec:
+    """Static description of the fused categorical tables."""
+
+    vocab_sizes: tuple[int, ...]
+    dim: int
+
+    @property
+    def n_fields(self) -> int:
+        return len(self.vocab_sizes)
+
+    @property
+    def total_rows(self) -> int:
+        return sum(self.vocab_sizes)
+
+    @property
+    def padded_rows(self) -> int:
+        return pad_rows(self.total_rows)
+
+    @property
+    def offsets(self) -> tuple[int, ...]:
+        out, acc = [], 0
+        for v in self.vocab_sizes:
+            out.append(acc)
+            acc += v
+        return tuple(out)
+
+
+def fused_table_init(key: Array, spec: FusedTableSpec, scale: float = 0.01) -> Array:
+    # Uniform(-1/sqrt(dim)) rows, the DLRM reference init.
+    return jax.random.uniform(
+        key, (spec.padded_rows, spec.dim), minval=-scale, maxval=scale
+    )
+
+
+def fused_lookup(table: Array, spec: FusedTableSpec, sparse_ids: Array) -> Array:
+    """sparse_ids (B, n_fields) per-field local ids -> (B, n_fields, dim).
+
+    Single fused gather over the row-sharded table; GSPMD turns it into the
+    all-to-all embedding exchange of a sharded embedding server.
+    """
+    offs = jnp.asarray(spec.offsets, jnp.int32)[None, :]
+    flat = sparse_ids.astype(jnp.int32) + offs
+    return jnp.take(table, flat, axis=0)

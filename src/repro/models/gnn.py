@@ -1,0 +1,239 @@
+"""Graph attention network (GAT, arXiv:1710.10903) on the segment-op
+substrate, plus a real fanout neighbour sampler for the minibatch shape.
+
+JAX has no sparse SpMM beyond BCOO, so message passing is expressed the
+TPU-idiomatic way (kernel_taxonomy §GNN): edge-index gathers +
+``jax.ops.segment_sum`` / ``segment_max`` scatters. Edge arrays are padded to
+a static E_max with a sentinel (src = dst = n_nodes), which lands in a ghost
+row that is sliced off — fixed shapes for jit/pjit, zero effect on results.
+
+Edge-parallel distribution: edges shard over the data axis; the segment ops
+become per-shard partial reductions + cross-shard scatter-adds (GSPMD emits
+the collective), which is the standard large-graph regime of the ogb_products
+and minibatch_lg cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import ShardCtx, constrain, dense_init
+
+Array = jax.Array
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class GatConfig:
+    d_in: int
+    d_hidden: int = 8
+    n_heads: int = 8
+    n_classes: int = 7
+    n_layers: int = 2
+    negative_slope: float = 0.2
+
+
+def gat_init(key: Array, cfg: GatConfig) -> Params:
+    """Layer 1: n_heads x d_hidden (concat); layer 2: 1 head -> n_classes
+    (the Cora configuration of the paper; deeper variants stack middles)."""
+    layers = []
+    d_prev = cfg.d_in
+    for li in range(cfg.n_layers):
+        k1, k2, k3, key = jax.random.split(key, 4)
+        last = li == cfg.n_layers - 1
+        heads = 1 if last else cfg.n_heads
+        d_out = cfg.n_classes if last else cfg.d_hidden
+        layers.append(
+            {
+                "w": dense_init(k1, d_prev, heads * d_out),
+                "a_src": jax.random.normal(k2, (heads, d_out)) * 0.1,
+                "a_dst": jax.random.normal(k3, (heads, d_out)) * 0.1,
+            }
+        )
+        d_prev = heads * d_out if not last else d_out
+    return {"layers": layers}
+
+
+def _gat_layer(
+    p: Params,
+    x: Array,
+    src: Array,
+    dst: Array,
+    n_nodes: int,
+    heads: int,
+    d_out: int,
+    negative_slope: float,
+    concat: bool,
+    ctx: ShardCtx | None,
+) -> Array:
+    """One GAT layer via SDDMM-style edge scores + segment softmax + scatter.
+
+    src/dst: (E,) int32 edge endpoints; padded edges point at the ghost row
+    ``n_nodes`` and are annihilated by the segment ops.
+    """
+    h = (x @ p["w"]).reshape(-1, heads, d_out)  # (N, H, F)
+    # Edge attention logits: a_src . h[src] + a_dst . h[dst]  (SDDMM)
+    alpha_src = jnp.einsum("nhf,hf->nh", h, p["a_src"])  # (N, H)
+    alpha_dst = jnp.einsum("nhf,hf->nh", h, p["a_dst"])
+    e = alpha_src[src] + alpha_dst[dst]  # (E, H)
+    e = jax.nn.leaky_relu(e, negative_slope)
+    if ctx is not None:
+        e = constrain(ctx, e, ctx.dp, None)
+
+    # Segment softmax over incoming edges of each dst node.
+    n_seg = n_nodes + 1  # ghost row for padded edges
+    e_max = jax.ops.segment_max(e, dst, num_segments=n_seg)
+    e_max = jnp.where(jnp.isfinite(e_max), e_max, 0.0)
+    e_exp = jnp.exp(e - e_max[dst])
+    denom = jax.ops.segment_sum(e_exp, dst, num_segments=n_seg)
+    att = e_exp / jnp.maximum(denom[dst], 1e-9)  # (E, H)
+
+    msg = h[src] * att[:, :, None]  # (E, H, F)
+    out = jax.ops.segment_sum(msg, dst, num_segments=n_seg)[:n_nodes]
+    if concat:
+        return jax.nn.elu(out.reshape(n_nodes, heads * d_out))
+    return out.mean(axis=1)  # average heads on the output layer
+
+
+def gat_forward(
+    cfg: GatConfig,
+    params: Params,
+    x: Array,
+    edge_index: Array,
+    ctx: ShardCtx | None = None,
+) -> Array:
+    """x: (N, d_in); edge_index: (2, E) int32 (padded with n_nodes).
+    Returns (N, n_classes) logits."""
+    n_nodes = x.shape[0]
+    src, dst = edge_index[0], edge_index[1]
+    for li, p in enumerate(params["layers"]):
+        last = li == cfg.n_layers - 1
+        heads = 1 if last else cfg.n_heads
+        d_out = cfg.n_classes if last else cfg.d_hidden
+        x = _gat_layer(
+            p, x, src, dst, n_nodes, heads, d_out,
+            cfg.negative_slope, concat=not last, ctx=ctx,
+        )
+    return x
+
+
+def gat_loss(
+    cfg: GatConfig,
+    params: Params,
+    batch: dict[str, Array],
+    ctx: ShardCtx | None = None,
+) -> tuple[Array, dict[str, Array]]:
+    """batch: features (N, F), edge_index (2, E), labels (N,), mask (N,)."""
+    logits = gat_forward(cfg, params, batch["features"], batch["edge_index"], ctx)
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(batch["labels"], 0)[:, None], axis=1
+    )[:, 0]
+    nll = lse - gold
+    mask = batch["mask"].astype(jnp.float32)
+    loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    acc = (
+        (logits.argmax(-1) == batch["labels"]).astype(jnp.float32) * mask
+    ).sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss, {"ce": loss, "acc": acc}
+
+
+def gat_graph_loss(
+    cfg: GatConfig,
+    params: Params,
+    batch: dict[str, Array],
+    ctx: ShardCtx | None = None,
+) -> tuple[Array, dict[str, Array]]:
+    """Graph-level task (molecule shape): block-diagonal batch of graphs,
+    mean-pooled node logits per graph.
+
+    batch: features (N, F), edge_index (2, E), graph_ids (N,) int32 in
+    [0, G), labels (G,).
+    """
+    logits_node = gat_forward(cfg, params, batch["features"],
+                              batch["edge_index"], ctx)
+    g = batch["labels"].shape[0]
+    gid = batch["graph_ids"]
+    sums = jax.ops.segment_sum(logits_node, gid, num_segments=g)
+    cnts = jax.ops.segment_sum(
+        jnp.ones((logits_node.shape[0],), jnp.float32), gid, num_segments=g
+    )
+    logits = (sums / jnp.maximum(cnts, 1.0)[:, None]).astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["labels"][:, None], axis=1)[:, 0]
+    loss = jnp.mean(lse - gold)
+    acc = jnp.mean((logits.argmax(-1) == batch["labels"]).astype(jnp.float32))
+    return loss, {"ce": loss, "acc": acc}
+
+
+# ------------------------------------------------------------- sampler (host)
+
+class NeighborSampler:
+    """Fanout neighbour sampler over a host-side CSR graph (GraphSAGE-style,
+    the minibatch_lg regime: batch_nodes=1024, fanout 15-10).
+
+    Produces fixed-shape padded blocks the jitted GNN consumes; sampling is
+    host work in every production GNN system (DGL/PyG dataloaders), so numpy
+    here is the honest architecture, not a shortcut.
+    """
+
+    def __init__(self, edge_index: np.ndarray, n_nodes: int, seed: int = 0):
+        src, dst = edge_index
+        order = np.argsort(dst, kind="stable")
+        self.src_sorted = src[order].astype(np.int32)
+        self.indptr = np.zeros(n_nodes + 1, np.int64)
+        counts = np.bincount(dst, minlength=n_nodes)
+        self.indptr[1:] = np.cumsum(counts)
+        self.n_nodes = n_nodes
+        self.rng = np.random.default_rng(seed)
+
+    def sample_block(
+        self, seed_nodes: np.ndarray, fanouts: tuple[int, ...]
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Multi-hop sample. Returns (node_ids, edge_src_local, edge_dst_local)
+        where edges are indices into node_ids and padded with len(node_ids).
+        """
+        nodes = list(seed_nodes.astype(np.int64))
+        node_pos = {int(n): i for i, n in enumerate(nodes)}
+        edges_s, edges_d = [], []
+        frontier = seed_nodes.astype(np.int64)
+        for f in fanouts:
+            next_frontier = []
+            for u in frontier:
+                lo, hi = self.indptr[u], self.indptr[u + 1]
+                deg = hi - lo
+                if deg == 0:
+                    continue
+                take = min(f, deg)
+                picks = self.rng.choice(deg, size=take, replace=False) + lo
+                for e in picks:
+                    v = int(self.src_sorted[e])
+                    if v not in node_pos:
+                        node_pos[v] = len(nodes)
+                        nodes.append(v)
+                        next_frontier.append(v)
+                    edges_s.append(node_pos[v])
+                    edges_d.append(node_pos[int(u)])
+            frontier = np.asarray(next_frontier, np.int64)
+        return (
+            np.asarray(nodes, np.int32),
+            np.asarray(edges_s, np.int32),
+            np.asarray(edges_d, np.int32),
+        )
+
+
+def pad_edges(
+    src: np.ndarray, dst: np.ndarray, e_max: int, ghost: int
+) -> np.ndarray:
+    """Pad an edge list to (2, e_max) with the ghost sentinel."""
+    e = len(src)
+    assert e <= e_max, (e, e_max)
+    out = np.full((2, e_max), ghost, np.int32)
+    out[0, :e] = src
+    out[1, :e] = dst
+    return out

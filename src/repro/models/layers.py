@@ -1,0 +1,185 @@
+"""Shared neural-net building blocks (functional, plain-dict params).
+
+Everything is ``jax.eval_shape``-compatible: init functions only use the PRNG
+key and config, so the dry-run can materialise parameter *shapes* with
+shardings and never allocate 30B-parameter trees on the host.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+Array = jax.Array
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Carries the active mesh so models can pin activation shardings.
+
+    ``dp`` is the data-parallel axis spec (('pod','data') on the multi-pod
+    mesh), ``tp`` the tensor axis name. With ctx=None every constraint is an
+    identity — the same model code runs single-host tests and 512-chip
+    dry-runs.
+
+    Constraints are *divisibility-safe*: a spec whose sharded dims don't tile
+    the mesh axes is skipped (returns x unchanged) rather than failing — so
+    e.g. a batch=1 long-context decode simply doesn't batch-shard, and a
+    28-head model doesn't head-shard over 16, without per-arch special cases.
+    GSPMD then propagates whatever neighbouring constraints remain.
+    """
+
+    mesh: Any
+    dp: tuple[str, ...] | str = ("data",)
+    tp: str = "model"
+
+    def _filter_spec(self, x: Array, spec: tuple) -> tuple:
+        """Drop (entry-by-entry) the spec parts whose axes don't tile the
+        dim; e.g. batch=1 keeps the sequence sharding instead of losing the
+        whole constraint."""
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        out = []
+        for dim, entry in enumerate(spec):
+            if entry is None:
+                out.append(None)
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            total = 1
+            for a in axes:
+                total *= sizes[a]
+            out.append(entry if x.shape[dim] % total == 0 else None)
+        return tuple(out)
+
+    def constrain(self, x: Array, *spec) -> Array:
+        if len(spec) != x.ndim:
+            return x
+        spec = self._filter_spec(x, spec)
+        if all(e is None for e in spec):
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*spec))
+        )
+
+    def batch_seq_spec(self, batch: int) -> tuple:
+        """(batch_entry, seq_entry) for KV-cache-like (B, S, ...) tensors:
+        batch over dp + seq over tp when the batch tiles dp; otherwise all
+        axes go to the sequence dim (long-context batch=1 layout)."""
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        dp_axes = self.dp if isinstance(self.dp, tuple) else (self.dp,)
+        dp_size = 1
+        for a in dp_axes:
+            dp_size *= sizes[a]
+        if batch % dp_size == 0:
+            return self.dp, self.tp
+        return None, tuple(dp_axes) + (self.tp,)
+
+
+def constrain(ctx: ShardCtx | None, x: Array, *spec) -> Array:
+    if ctx is None:
+        return x
+    return ctx.constrain(x, *spec)
+
+
+# ---------------------------------------------------------------- init utils
+
+def dense_init(key: Array, d_in: int, d_out: int, scale: float | None = None,
+               dtype=jnp.float32) -> Array:
+    scale = (1.0 / d_in) ** 0.5 if scale is None else scale
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def embed_init(key: Array, vocab: int, d: int, dtype=jnp.float32) -> Array:
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# -------------------------------------------------------------------- norms
+
+def rms_norm(x: Array, gamma: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * gamma
+
+
+def layer_norm(x: Array, gamma: Array, beta: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps)).astype(dt) * gamma + beta
+
+
+# --------------------------------------------------------------------- RoPE
+
+def rope_freqs(d_head: int, theta: float = 10000.0) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 10000.0) -> Array:
+    """x: (..., S, H, d_head); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (d/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, d/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., : d // 2], x[..., d // 2 :]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- MLP
+
+def swiglu_init(key: Array, d: int, f: int, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d, f, dtype=dtype),
+        "w_up": dense_init(k2, d, f, dtype=dtype),
+        "w_down": dense_init(k3, f, d, dtype=dtype),
+    }
+
+
+def swiglu(p: Params, x: Array) -> Array:
+    g = jax.nn.silu(x @ p["w_gate"])
+    return (g * (x @ p["w_up"])) @ p["w_down"]
+
+
+def mlp_init(key: Array, sizes: tuple[int, ...], dtype=jnp.float32) -> Params:
+    keys = jax.random.split(key, len(sizes) - 1)
+    return {
+        f"w{i}": dense_init(keys[i], sizes[i], sizes[i + 1], dtype=dtype)
+        for i in range(len(sizes) - 1)
+    } | {
+        f"b{i}": jnp.zeros((sizes[i + 1],), dtype)
+        for i in range(len(sizes) - 1)
+    }
+
+
+def mlp_apply(p: Params, x: Array, act: Callable = jax.nn.relu,
+              final_act: bool = False) -> Array:
+    n = len([k for k in p if k.startswith("w")])
+    for i in range(n):
+        x = x @ p[f"w{i}"] + p[f"b{i}"]
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def cross_entropy(logits: Array, labels: Array, mask: Array | None = None) -> Array:
+    """Token-level CE, numerically stable, f32 accumulation.
+
+    logits: (..., V); labels: (...); mask broadcastable to labels (1 = keep).
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

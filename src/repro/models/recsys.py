@@ -1,0 +1,357 @@
+"""The four assigned recsys architectures.
+
+  * DLRM (MLPerf config, arXiv:1906.00091) — dense MLP + 26 fused embedding
+    tables + dot interaction + top MLP.
+  * DeepFM (arXiv:1703.04247) — first-order + FM second-order + deep MLP.
+  * MIND (arXiv:1904.08030) — multi-interest capsule routing retrieval.
+  * BERT4Rec (arXiv:1904.06690) — bidirectional transformer, cloze training.
+
+Every model exposes loss(params, batch) for train_batch, score(params, batch)
+for serve_p99 / serve_bulk, and retrieval(params, batch) for retrieval_cand
+(1 user vs n_candidates). Retrieval has two paths: the exact full-model scan
+and, for the embedding-dot models (MIND/BERT4Rec and the two-tower readout),
+the MCGI/ANN integration used by the examples.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.embedding import (
+    FusedTableSpec,
+    embedding_bag,
+    fused_lookup,
+    fused_table_init,
+)
+from repro.models.layers import ShardCtx, constrain, dense_init, mlp_apply, mlp_init
+
+Array = jax.Array
+Params = dict[str, Any]
+
+
+def bce_with_logits(logits: Array, labels: Array) -> Array:
+    logits = logits.astype(jnp.float32)
+    labels = labels.astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+# ------------------------------------------------------------------- DLRM
+
+# Criteo-1TB per-field cardinalities used by the MLPerf DLRM benchmark.
+CRITEO_1TB_VOCABS = (
+    39884406, 39043, 17289, 7420, 20263, 3, 7120, 1543, 63, 38532951,
+    2953546, 403346, 10, 2208, 11938, 155, 4, 976, 14, 39979771,
+    25641295, 39664984, 585935, 12972, 108, 36,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class DlrmConfig:
+    n_dense: int = 13
+    vocab_sizes: tuple[int, ...] = CRITEO_1TB_VOCABS
+    embed_dim: int = 128
+    bot_mlp: tuple[int, ...] = (512, 256, 128)
+    top_mlp: tuple[int, ...] = (1024, 1024, 512, 256, 1)
+
+    @property
+    def table(self) -> FusedTableSpec:
+        return FusedTableSpec(self.vocab_sizes, self.embed_dim)
+
+    @property
+    def n_sparse(self) -> int:
+        return len(self.vocab_sizes)
+
+    @property
+    def n_interact(self) -> int:
+        f = self.n_sparse + 1
+        return f * (f - 1) // 2
+
+
+def dlrm_init(key: Array, cfg: DlrmConfig) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "table": fused_table_init(k1, cfg.table),
+        "bot": mlp_init(k2, (cfg.n_dense,) + cfg.bot_mlp),
+        "top": mlp_init(k3, (cfg.n_interact + cfg.bot_mlp[-1],) + cfg.top_mlp),
+    }
+
+
+def _dot_interaction(vecs: Array) -> Array:
+    """(B, F, D) -> (B, F(F-1)/2) strictly-lower-triangle pairwise dots."""
+    f = vecs.shape[1]
+    gram = jnp.einsum("bfd,bgd->bfg", vecs, vecs)
+    ii, jj = jnp.tril_indices(f, k=-1)
+    return gram[:, ii, jj]
+
+
+def dlrm_forward(
+    cfg: DlrmConfig, p: Params, dense: Array, sparse: Array,
+    ctx: ShardCtx | None = None,
+) -> Array:
+    """dense (B, 13) f32; sparse (B, 26) int32 -> (B,) logits."""
+    z = mlp_apply(p["bot"], dense, final_act=True)  # (B, 128)
+    emb = fused_lookup(p["table"], cfg.table, sparse)  # (B, 26, 128)
+    if ctx is not None:
+        emb = constrain(ctx, emb, ctx.dp, None, None)
+    vecs = jnp.concatenate([z[:, None, :], emb], axis=1)  # (B, 27, 128)
+    inter = _dot_interaction(vecs)
+    top_in = jnp.concatenate([z, inter], axis=1)
+    return mlp_apply(p["top"], top_in)[:, 0]
+
+
+def dlrm_loss(cfg: DlrmConfig, p: Params, batch: dict, ctx=None):
+    logits = dlrm_forward(cfg, p, batch["dense"], batch["sparse"], ctx)
+    loss = bce_with_logits(logits, batch["labels"])
+    return loss, {"bce": loss}
+
+
+def dlrm_retrieval(
+    cfg: DlrmConfig, p: Params, batch: dict, ctx=None
+) -> Array:
+    """retrieval_cand: one user, (C,) candidate ids substituted into sparse
+    field 0; full-model scoring of every candidate (exact baseline path)."""
+    dense = batch["dense"]          # (1, 13)
+    sparse = batch["sparse"]        # (1, 26)
+    cands = batch["candidates"]     # (C,)
+    c = cands.shape[0]
+    sparse_rep = jnp.broadcast_to(sparse, (c, cfg.n_sparse)).at[:, 0].set(cands)
+    dense_rep = jnp.broadcast_to(dense, (c, cfg.n_dense))
+    return dlrm_forward(cfg, p, dense_rep, sparse_rep, ctx)  # (C,) scores
+
+
+# ----------------------------------------------------------------- DeepFM
+
+@dataclasses.dataclass(frozen=True)
+class DeepFmConfig:
+    n_fields: int = 39
+    vocab_per_field: int = 871264    # ~34M total / 39 fields (Criteo-scale)
+    embed_dim: int = 10
+    mlp: tuple[int, ...] = (400, 400, 400)
+
+    @property
+    def table(self) -> FusedTableSpec:
+        return FusedTableSpec((self.vocab_per_field,) * self.n_fields,
+                              self.embed_dim)
+
+
+def deepfm_init(key: Array, cfg: DeepFmConfig) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "table": fused_table_init(k1, cfg.table),
+        "first_order": fused_table_init(k2, FusedTableSpec(cfg.table.vocab_sizes, 1)),
+        "b0": jnp.zeros((), jnp.float32),
+        "mlp": mlp_init(k3, (cfg.n_fields * cfg.embed_dim,) + cfg.mlp + (1,)),
+    }
+
+
+def deepfm_forward(
+    cfg: DeepFmConfig, p: Params, sparse: Array, ctx: ShardCtx | None = None
+) -> Array:
+    emb = fused_lookup(p["table"], cfg.table, sparse)  # (B, F, D)
+    if ctx is not None:
+        emb = constrain(ctx, emb, ctx.dp, None, None)
+    # FM second order: 1/2 ((sum v)^2 - sum v^2), summed over dim.
+    s = emb.sum(axis=1)
+    fm2 = 0.5 * (s * s - (emb * emb).sum(axis=1)).sum(axis=-1)
+    first = fused_lookup(p["first_order"], FusedTableSpec(cfg.table.vocab_sizes, 1),
+                         sparse)[..., 0].sum(axis=1)
+    deep = mlp_apply(p["mlp"], emb.reshape(emb.shape[0], -1))[:, 0]
+    return p["b0"] + first + fm2 + deep
+
+
+def deepfm_loss(cfg: DeepFmConfig, p: Params, batch: dict, ctx=None):
+    logits = deepfm_forward(cfg, p, batch["sparse"], ctx)
+    loss = bce_with_logits(logits, batch["labels"])
+    return loss, {"bce": loss}
+
+
+def deepfm_retrieval(cfg: DeepFmConfig, p: Params, batch: dict, ctx=None) -> Array:
+    sparse = batch["sparse"]
+    cands = batch["candidates"]
+    c = cands.shape[0]
+    rep = jnp.broadcast_to(sparse, (c, cfg.n_fields)).at[:, 0].set(cands)
+    return deepfm_forward(cfg, p, rep, ctx)
+
+
+# ------------------------------------------------------------------- MIND
+
+@dataclasses.dataclass(frozen=True)
+class MindConfig:
+    n_items: int = 1_000_000
+    embed_dim: int = 64
+    n_interests: int = 4
+    capsule_iters: int = 3
+    hist_len: int = 50
+    pow_p: float = 2.0           # label-aware attention sharpness
+
+
+def mind_init(key: Array, cfg: MindConfig) -> Params:
+    from repro.models.embedding import pad_rows
+
+    k1, k2 = jax.random.split(key)
+    return {
+        "items": layers.embed_init(k1, pad_rows(cfg.n_items), cfg.embed_dim),
+        "s": dense_init(k2, cfg.embed_dim, cfg.embed_dim),  # shared bilinear map
+    }
+
+
+def mind_interests(
+    cfg: MindConfig, p: Params, hist: Array, mask: Array
+) -> Array:
+    """B2I dynamic routing: (B, L) history -> (B, K, D) interest capsules."""
+    e = jnp.take(p["items"], hist, axis=0)  # (B, L, D)
+    e_hat = e @ p["s"]  # (B, L, D)
+    b, l, d = e_hat.shape
+    k = cfg.n_interests
+    # Fixed (shared) logit init, per MIND's randomly-initialised routing.
+    logits0 = jnp.broadcast_to(
+        jnp.linspace(-1.0, 1.0, k)[None, None, :], (b, l, k)
+    )
+
+    def squash(u):
+        n2 = jnp.sum(u * u, axis=-1, keepdims=True)
+        return (n2 / (1.0 + n2)) * u / jnp.sqrt(n2 + 1e-9)
+
+    def routing_iter(logits, _):
+        w = jax.nn.softmax(logits, axis=-1)  # (B, L, K) over capsules
+        w = w * mask[..., None].astype(w.dtype)
+        u = jnp.einsum("blk,bld->bkd", w, e_hat)
+        u = squash(u)
+        delta = jnp.einsum("bkd,bld->blk", u, e_hat)
+        return logits + delta, u
+
+    logits, us = jax.lax.scan(
+        routing_iter, logits0, None, length=cfg.capsule_iters,
+        unroll=True,  # 3 iters; unrolled so dry-run cost analysis counts them
+    )
+    return us[-1]  # (B, K, D)
+
+
+def mind_loss(cfg: MindConfig, p: Params, batch: dict, ctx=None):
+    """Sampled-softmax with in-batch negatives; label-aware attention."""
+    hist, mask, target = batch["hist"], batch["hist_mask"], batch["target"]
+    interests = mind_interests(cfg, p, hist, mask)  # (B, K, D)
+    tgt = jnp.take(p["items"], target, axis=0)      # (B, D)
+    att = jax.nn.softmax(
+        cfg.pow_p * jnp.einsum("bkd,bd->bk", interests, tgt), axis=-1
+    )
+    user = jnp.einsum("bk,bkd->bd", att, interests)  # (B, D)
+    # In-batch sampled softmax.
+    logits = user @ tgt.T  # (B, B)
+    labels = jnp.arange(logits.shape[0])
+    loss = layers.cross_entropy(logits, labels)
+    return loss, {"sampled_ce": loss}
+
+
+def mind_retrieval(cfg: MindConfig, p: Params, batch: dict, ctx=None) -> Array:
+    """Max-over-interests dot scores for (C,) candidates — the ANN-friendly
+    readout MCGI indexes in examples/recsys_retrieval.py."""
+    interests = mind_interests(cfg, p, batch["hist"], batch["hist_mask"])
+    cand = jnp.take(p["items"], batch["candidates"], axis=0)  # (C, D)
+    scores = jnp.einsum("bkd,cd->bkc", interests, cand)
+    return scores.max(axis=1)  # (B, C)
+
+
+# --------------------------------------------------------------- BERT4Rec
+
+@dataclasses.dataclass(frozen=True)
+class Bert4RecConfig:
+    n_items: int = 1_000_000
+    embed_dim: int = 64
+    n_blocks: int = 2
+    n_heads: int = 2
+    seq_len: int = 200
+    d_ff_mult: int = 4
+
+    @property
+    def mask_token(self) -> int:
+        return self.n_items  # vocab rows = n_items + 1
+
+
+def bert4rec_init(key: Array, cfg: Bert4RecConfig) -> Params:
+    keys = jax.random.split(key, 2 + cfg.n_blocks)
+    d = cfg.embed_dim
+    blocks = []
+    for i in range(cfg.n_blocks):
+        k1, k2, k3, k4 = jax.random.split(keys[2 + i], 4)
+        blocks.append(
+            {
+                "wqkv": dense_init(k1, d, 3 * d),
+                "wo": dense_init(k2, d, d),
+                "ln1_g": jnp.ones((d,)), "ln1_b": jnp.zeros((d,)),
+                "ln2_g": jnp.ones((d,)), "ln2_b": jnp.zeros((d,)),
+                "ffn": mlp_init(k3, (d, cfg.d_ff_mult * d, d)),
+            }
+        )
+    from repro.models.embedding import pad_rows
+
+    return {
+        "items": layers.embed_init(keys[0], pad_rows(cfg.n_items + 1), d),
+        "pos": layers.embed_init(keys[1], cfg.seq_len, d),
+        "blocks": blocks,
+        "ln_f_g": jnp.ones((d,)), "ln_f_b": jnp.zeros((d,)),
+    }
+
+
+def bert4rec_encode(
+    cfg: Bert4RecConfig, p: Params, seq: Array, mask: Array,
+    ctx: ShardCtx | None = None,
+) -> Array:
+    """seq (B, S) item ids; mask (B, S) validity -> (B, S, D) hidden."""
+    b, s = seq.shape
+    h = jnp.take(p["items"], seq, axis=0) + p["pos"][None, :s]
+    if ctx is not None:
+        h = constrain(ctx, h, ctx.dp, None, None)
+    attn_mask = mask[:, None, None, :]  # (B, 1, 1, S) keys validity
+    for blk in p["blocks"]:
+        hn = layers.layer_norm(h, blk["ln1_g"], blk["ln1_b"])
+        qkv = hn @ blk["wqkv"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        dh = cfg.embed_dim // cfg.n_heads
+        q = q.reshape(b, s, cfg.n_heads, dh)
+        k = k.reshape(b, s, cfg.n_heads, dh)
+        v = v.reshape(b, s, cfg.n_heads, dh)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) * (dh ** -0.5)
+        logits = jnp.where(attn_mask, logits, -jnp.inf)
+        w = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(h.dtype)
+        o = jnp.einsum("bhqk,bkhd->bqhd", w, v).reshape(b, s, -1)
+        h = h + o @ blk["wo"]
+        hn = layers.layer_norm(h, blk["ln2_g"], blk["ln2_b"])
+        h = h + mlp_apply(blk["ffn"], hn, act=jax.nn.gelu)
+    return layers.layer_norm(h, p["ln_f_g"], p["ln_f_b"])
+
+
+def bert4rec_loss(cfg: Bert4RecConfig, p: Params, batch: dict, ctx=None):
+    """Cloze objective: predict items at masked positions.
+
+    batch: seq (B,S) with mask_token at cloze slots, seq_mask (B,S) validity,
+    mlm_positions (B, P) int32, mlm_labels (B, P) (-1 pad).
+    """
+    h = bert4rec_encode(cfg, p, batch["seq"], batch["seq_mask"], ctx)
+    pos = batch["mlm_positions"]
+    gathered = jnp.take_along_axis(
+        h, pos[..., None].astype(jnp.int32), axis=1
+    )  # (B, P, D)
+    logits = gathered @ p["items"].T  # tied output embedding
+    if ctx is not None:
+        logits = constrain(ctx, logits, ctx.dp, None, ctx.tp)
+    valid = batch["mlm_labels"] >= 0
+    loss = layers.cross_entropy(
+        logits, jnp.maximum(batch["mlm_labels"], 0), valid
+    )
+    return loss, {"cloze_ce": loss}
+
+
+def bert4rec_retrieval(cfg: Bert4RecConfig, p: Params, batch: dict, ctx=None):
+    """Score candidates for the next item: hidden at the final (mask) slot
+    dotted with candidate embeddings."""
+    h = bert4rec_encode(cfg, p, batch["seq"], batch["seq_mask"], ctx)
+    last = h[:, -1, :]  # (B, D) — pipeline places the mask token last
+    cand = jnp.take(p["items"], batch["candidates"], axis=0)
+    return last @ cand.T  # (B, C)

@@ -1,0 +1,349 @@
+"""Decoder-only transformer covering all five assigned LM architectures.
+
+One config dataclass expresses dense (deepseek-coder-33b, qwen2-7b,
+minicpm-2b) and MoE (qwen3-moe-30b-a3b, deepseek-v2-lite) variants with GQA
+or MLA attention. Layer parameters are *stacked* (leading n_layers axis) and
+the forward pass is a rematerialised ``lax.scan`` — compile time and HLO size
+stay constant in depth, which is what makes 62-layer dry-runs on 512 host
+devices tractable.
+
+Three entry points per model (matching the assigned shape kinds):
+  * :func:`lm_loss`        — train_* shapes (causal LM, f32 CE)
+  * :func:`prefill`        — prefill_* shapes (populate KV cache, last logits)
+  * :func:`decode_step`    — decode_* / long_* shapes (one token vs cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import layers
+from repro.models import moe as moe_mod
+from repro.models.layers import ShardCtx, constrain
+
+Array = jax.Array
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    attention: str = "gqa"              # "gqa" | "mla"
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    moe: moe_mod.MoeConfig | None = None
+    first_k_dense: int = 0              # deepseek: leading dense layers in MoE nets
+    mla: attn_mod.MlaConfig | None = None
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    # MiniCPM (mup-style) scaling knobs [arXiv:2404.06395].
+    scale_emb: float = 1.0
+    scale_depth: float = 0.0            # 0 => residual scale 1
+    dim_model_base: int = 0             # 0 => logit scale 1
+    dtype: Any = jnp.bfloat16           # activation/compute dtype
+    remat: bool = True
+    attn_chunk_q: int = 256
+    attn_chunk_k: int = 1024
+    skip_masked_blocks: bool = False
+    attn_unroll: bool = False
+    # Scan-unroll factor for the layer loop: 1 = rolled (deployment),
+    # int k = partial unroll, True = full unroll. The dry-run prices the
+    # loop body via two partial-unroll compiles (XLA cost_analysis counts
+    # a while body exactly once).
+    unroll_layers: int | bool = 1
+    aux_loss_weight: float = 0.01
+
+    @property
+    def gqa(self) -> attn_mod.GqaConfig:
+        return attn_mod.GqaConfig(
+            d_model=self.d_model, n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads, d_head=self.d_head,
+            qkv_bias=self.qkv_bias, qk_norm=self.qk_norm,
+            rope_theta=self.rope_theta,
+            attn_chunk_q=self.attn_chunk_q, attn_chunk_k=self.attn_chunk_k,
+            skip_masked_blocks=self.skip_masked_blocks,
+            attn_unroll=self.attn_unroll,
+        )
+
+    @property
+    def residual_scale(self) -> float:
+        if self.scale_depth:
+            return self.scale_depth / (self.n_layers ** 0.5)
+        return 1.0
+
+    @property
+    def logit_scale(self) -> float:
+        if self.dim_model_base:
+            return self.dim_model_base / self.d_model
+        return 1.0
+
+    def n_params(self) -> int:
+        """Total parameter count (for 6ND roofline accounting)."""
+        import math
+
+        shapes = jax.eval_shape(lambda k: init_lm(self, k), jax.random.PRNGKey(0))
+        return sum(math.prod(l.shape) for l in jax.tree.leaves(shapes))
+
+    def n_active_params(self) -> int:
+        """Active parameters per token (MoE: top_k of n_experts)."""
+        if self.moe is None:
+            return self.n_params()
+        shapes = jax.eval_shape(lambda k: init_lm(self, k), jax.random.PRNGKey(0))
+        total = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+            import math
+            size = math.prod(leaf.shape)
+            keys = "/".join(str(p) for p in path)
+            if any(w in keys for w in ("w_gate", "w_up", "w_down")) and "moe" in keys \
+               and "shared" not in keys:
+                size = size * self.moe.top_k // self.moe.n_experts
+            total += size
+        return total
+
+
+def _layer_init(cfg: TransformerConfig, key: Array, dense_ffn: bool) -> Params:
+    """Init one layer; vmapped over stacked layer keys.
+
+    ``dense_ffn`` selects the FFN kind — MoE archs with first_k_dense > 0
+    keep those leading dense layers in a *separate* stacked group
+    ("dense_layers"), so the MoE scan stays homogeneous and no layer carries
+    (or computes) both FFN kinds.
+    """
+    k_attn, k_ffn, k_moe = jax.random.split(key, 3)
+    dt = jnp.float32
+    p: Params = {
+        "ln_attn": jnp.ones((cfg.d_model,), dt),
+        "ln_ffn": jnp.ones((cfg.d_model,), dt),
+    }
+    if cfg.attention == "mla":
+        p["attn"] = attn_mod.mla_init(k_attn, cfg.mla, dtype=dt)
+    else:
+        p["attn"] = attn_mod.gqa_init(k_attn, cfg.gqa, dtype=dt)
+    if cfg.moe is not None and not dense_ffn:
+        p["moe"] = moe_mod.moe_init(k_moe, cfg.moe, dtype=dt)
+    else:
+        p["ffn"] = layers.swiglu_init(k_ffn, cfg.d_model, cfg.d_ff, dtype=dt)
+    return p
+
+
+def init_lm(cfg: TransformerConfig, key: Array) -> Params:
+    k_embed, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    kd = cfg.first_k_dense if cfg.moe is not None else 0
+    stacked = jax.vmap(lambda k: _layer_init(cfg, k, False))(layer_keys[kd:])
+    p = {
+        "embed": layers.embed_init(k_embed, cfg.vocab, cfg.d_model),
+        "layers": stacked,
+        "ln_final": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if kd:
+        p["dense_layers"] = jax.vmap(lambda k: _layer_init(cfg, k, True))(
+            layer_keys[:kd]
+        )
+    if not cfg.tie_embeddings:
+        p["lm_head"] = layers.dense_init(k_head, cfg.d_model, cfg.vocab, scale=0.02)
+    return p
+
+
+def _block(
+    cfg: TransformerConfig,
+    p: Params,
+    x: Array,
+    ctx: ShardCtx | None,
+) -> tuple[Array, Array]:
+    """One transformer block (train path). Returns (x, aux_loss).
+
+    The FFN kind is determined by which params the layer carries ("moe" vs
+    "ffn") — see _layer_init."""
+    rs = cfg.residual_scale
+    h = layers.rms_norm(x, p["ln_attn"].astype(x.dtype))
+    if cfg.attention == "mla":
+        a = attn_mod.mla_train(p["attn"], cfg.mla, h, ctx)
+    else:
+        a = attn_mod.gqa_train(p["attn"], cfg.gqa, h, ctx)
+    x = x + a * rs
+    if ctx is not None:
+        x = constrain(ctx, x, ctx.dp, ctx.tp, None)
+
+    h = layers.rms_norm(x, p["ln_ffn"].astype(x.dtype))
+    aux = jnp.float32(0.0)
+    if "moe" in p:
+        out, aux = moe_mod.moe_apply(p["moe"], cfg.moe, h, ctx)
+    else:
+        out = layers.swiglu(p["ffn"], h)
+    x = x + out * rs
+    if ctx is not None:
+        x = constrain(ctx, x, ctx.dp, ctx.tp, None)
+    return x, aux
+
+
+def forward(
+    cfg: TransformerConfig,
+    params: Params,
+    tokens: Array,
+    ctx: ShardCtx | None = None,
+) -> tuple[Array, Array]:
+    """tokens (B, S) -> (hidden (B, S, D), aux_loss)."""
+    x = params["embed"][tokens].astype(cfg.dtype) * cfg.scale_emb
+    if ctx is not None:
+        x = constrain(ctx, x, ctx.dp, ctx.tp, None)
+
+    def body(carry, p_layer):
+        h, aux = carry
+        p_layer = jax.tree.map(lambda a: a.astype(cfg.dtype), p_layer)
+        h, a = _block(cfg, p_layer, h, ctx)
+        return (h, aux + a), None
+
+    aux = jnp.float32(0.0)
+    if "dense_layers" in params:
+        kd = jax.tree.leaves(params["dense_layers"])[0].shape[0]
+        for i in range(kd):
+            p_layer = jax.tree.map(lambda a: a[i], params["dense_layers"])
+            (x, aux), _ = (jax.checkpoint(body) if cfg.remat else body)(
+                (x, aux), p_layer)
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), _ = jax.lax.scan(
+        body_fn, (x, aux), params["layers"], unroll=cfg.unroll_layers,
+    )
+    x = layers.rms_norm(x, params["ln_final"].astype(x.dtype))
+    return x, aux
+
+
+def logits_from_hidden(
+    cfg: TransformerConfig, params: Params, x: Array, ctx: ShardCtx | None
+) -> Array:
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(x.dtype) * cfg.logit_scale
+    if ctx is not None:
+        logits = constrain(ctx, logits, ctx.dp, None, ctx.tp)
+    return logits
+
+
+def lm_loss(
+    cfg: TransformerConfig,
+    params: Params,
+    batch: dict[str, Array],
+    ctx: ShardCtx | None = None,
+) -> tuple[Array, dict[str, Array]]:
+    """Causal LM loss. batch: tokens (B, S) int32, labels (B, S) int32
+    (-100 = ignore)."""
+    x, aux = forward(cfg, params, batch["tokens"], ctx)
+    logits = logits_from_hidden(cfg, params, x, ctx)
+    mask = batch["labels"] >= 0
+    loss = layers.cross_entropy(logits, jnp.maximum(batch["labels"], 0), mask)
+    total = loss + cfg.aux_loss_weight * aux
+    return total, {"ce": loss, "aux": aux}
+
+
+# ------------------------------------------------------------------ serving
+
+def init_cache(
+    cfg: TransformerConfig, batch: int, max_len: int, dtype=jnp.bfloat16
+) -> Params:
+    """Stacked per-layer KV cache (leading n_layers axis); MoE archs with a
+    dense prefix carry {"dense": (kd, ...), "scanned": (L-kd, ...)}."""
+    if cfg.attention == "mla":
+        one = attn_mod.mla_init_cache(cfg.mla, batch, max_len, dtype)
+    else:
+        one = attn_mod.gqa_init_cache(cfg.gqa, batch, max_len, dtype)
+
+    def stack(n):
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), one
+        )
+
+    kd = cfg.first_k_dense if cfg.moe is not None else 0
+    if kd:
+        return {"dense": stack(kd), "scanned": stack(cfg.n_layers - kd)}
+    return stack(cfg.n_layers)
+
+
+def decode_step(
+    cfg: TransformerConfig,
+    params: Params,
+    cache: Params,
+    tokens: Array,
+    kv_len: Array,
+    ctx: ShardCtx | None = None,
+    mla_absorbed: bool = True,
+) -> tuple[Array, Params]:
+    """One decode step. tokens (B, 1); kv_len (B,) -> (logits (B, V), cache)."""
+    x = params["embed"][tokens].astype(cfg.dtype) * cfg.scale_emb
+
+    def one_layer(h, p_layer, cache_layer):
+        p_layer = jax.tree.map(lambda a: a.astype(cfg.dtype), p_layer)
+        rs = cfg.residual_scale
+        hn = layers.rms_norm(h, p_layer["ln_attn"].astype(h.dtype))
+        if cfg.attention == "mla":
+            a, new_cache = attn_mod.mla_decode(
+                p_layer["attn"], cfg.mla, hn, cache_layer, kv_len, ctx,
+                absorbed=mla_absorbed,
+            )
+        else:
+            a, new_cache = attn_mod.gqa_decode(
+                p_layer["attn"], cfg.gqa, hn, cache_layer, kv_len, ctx
+            )
+        h = h + a * rs
+        hn = layers.rms_norm(h, p_layer["ln_ffn"].astype(h.dtype))
+        if "moe" in p_layer:
+            out, _ = moe_mod.moe_apply(p_layer["moe"], cfg.moe, hn, ctx,
+                                       no_drop=True)
+        else:
+            out = layers.swiglu(p_layer["ffn"], hn)
+        h = h + out * rs
+        return h, new_cache
+
+    kd = cfg.first_k_dense if "dense_layers" in params else 0
+    dense_caches = []
+    for i in range(kd):
+        p_layer = jax.tree.map(lambda a: a[i], params["dense_layers"])
+        cache_layer = jax.tree.map(lambda a: a[i], cache["dense"])
+        x, nc = one_layer(x, p_layer, cache_layer)
+        dense_caches.append(nc)
+
+    def body(h, scanned):
+        p_layer, cache_layer = scanned
+        return one_layer(h, p_layer, cache_layer)
+
+    moe_cache = cache["scanned"] if kd else cache
+    x, new_scanned = jax.lax.scan(
+        body, x, (params["layers"], moe_cache), unroll=cfg.unroll_layers,
+    )
+    if kd:
+        new_cache = {
+            "dense": jax.tree.map(
+                lambda *ls: jnp.stack(ls), *dense_caches
+            ) if kd > 1 else jax.tree.map(lambda l: l[None], dense_caches[0]),
+            "scanned": new_scanned,
+        }
+    else:
+        new_cache = new_scanned
+    x = layers.rms_norm(x, params["ln_final"].astype(x.dtype))
+    logits = logits_from_hidden(cfg, params, x, ctx)
+    return logits[:, 0], new_cache
+
+
+def prefill(
+    cfg: TransformerConfig,
+    params: Params,
+    tokens: Array,
+    ctx: ShardCtx | None = None,
+) -> Array:
+    """Prefill pass for the prefill_* shapes: full forward, last-position
+    logits. (Cache write-out is a gather away; the compute/memory profile —
+    what the dry-run measures — is the forward itself.)"""
+    x, _ = forward(cfg, params, tokens, ctx)
+    logits = logits_from_hidden(cfg, params, x[:, -1:, :], ctx)
+    return logits[:, 0]

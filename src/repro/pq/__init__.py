@@ -1,0 +1,3 @@
+from repro.pq.codebook import PqCodebook, train_pq  # noqa: F401
+from repro.pq.adc import build_lut, adc_distances  # noqa: F401
+from repro.pq.encode import pq_encode, pq_decode  # noqa: F401

@@ -1,0 +1,58 @@
+"""Asymmetric Distance Computation (ADC).
+
+For a query q the per-subspace distance table
+
+    LUT[m, c] = || q_m - centroid[m, c] ||^2           (M, K)
+
+turns every approximate distance into M byte-indexed lookups:
+
+    d2_hat(q, x_i) = sum_m LUT[m, code_i[m]].
+
+On CPU this is the AVX2 hot loop of DiskANN; the TPU-native form is either a
+VMEM gather (small fan-out, used inside beam search) or the one-hot matmul
+``onehot(codes) @ LUT`` which feeds the MXU for bulk scans — that variant is
+the Pallas kernel ``repro.kernels.pq_scan``; this module is its jnp oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.pq.codebook import PqCodebook
+
+Array = jax.Array
+
+
+@jax.jit
+def build_lut(queries: Array, centroids: Array) -> Array:
+    """(Q, D), (M, K, dsub) -> (Q, M, K) squared-distance tables."""
+    q_subs = queries.reshape(queries.shape[0], centroids.shape[0], -1)  # (Q,M,dsub)
+    diff = q_subs[:, :, None, :] - centroids[None, :, :, :]  # (Q,M,K,dsub)
+    return jnp.sum(diff * diff, axis=-1)
+
+
+@jax.jit
+def adc_distances(luts: Array, codes: Array) -> Array:
+    """(Q, M, K) LUTs x (N, M) codes -> (Q, N) approximate distances.
+
+    Gather formulation (oracle). The Pallas kernel computes the same via
+    one-hot matmul per 128-row code tile.
+    """
+    c = codes.astype(jnp.int32)  # (N, M)
+    m = luts.shape[1]
+
+    def per_query(lut):  # lut (M, K)
+        gathered = lut[jnp.arange(m)[None, :], c]  # (N, M)
+        return gathered.sum(axis=-1)
+
+    return jax.vmap(per_query)(luts)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def adc_topk(luts: Array, codes: Array, k: int) -> tuple[Array, Array]:
+    """Bulk ADC scan + top-k (the retrieval_cand serving primitive)."""
+    d = adc_distances(luts, codes)
+    vals, ids = jax.lax.top_k(-d, k)
+    return -vals, ids.astype(jnp.int32)

@@ -1,0 +1,63 @@
+"""Product Quantisation codebook training (Jegou et al. [19]; paper Table 2
+uses m_PQ = 16 bytes at billion scale).
+
+Splits D dims into M contiguous subspaces of D/M dims and trains a K=256
+centroid k-means codebook per subspace; a vector's code is its per-subspace
+nearest-centroid ids — M bytes per vector in the fast tier.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ivf import kmeans
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PqCodebook:
+    """centroids: (M, K, dsub).  D = M * dsub; K <= 256 so codes fit uint8."""
+
+    centroids: Array
+
+    @property
+    def m(self) -> int:
+        return self.centroids.shape[0]
+
+    @property
+    def k(self) -> int:
+        return self.centroids.shape[1]
+
+    @property
+    def dsub(self) -> int:
+        return self.centroids.shape[2]
+
+
+def split_subspaces(x: Array, m: int) -> Array:
+    """(N, D) -> (M, N, dsub). D must be divisible by M (configs guarantee;
+    odd dims are padded by the caller)."""
+    n, d = x.shape
+    assert d % m == 0, f"D={d} not divisible by M={m}"
+    return x.reshape(n, m, d // m).transpose(1, 0, 2)
+
+
+def train_pq(
+    x: Array, m: int = 16, k: int = 256, iters: int = 8, seed: int = 0,
+    sample: int | None = 65536,
+) -> PqCodebook:
+    """Train per-subspace codebooks on (a sample of) the dataset."""
+    n = x.shape[0]
+    if sample is not None and n > sample:
+        idx = jax.random.choice(jax.random.PRNGKey(seed), n, (sample,), replace=False)
+        x = x[idx]
+    subs = split_subspaces(x, m)  # (M, N', dsub)
+    books = []
+    for j in range(m):
+        books.append(
+            kmeans(subs[j], k=k, iters=iters, key=jax.random.PRNGKey(seed + 31 * j))
+        )
+    return PqCodebook(centroids=jnp.stack(books))

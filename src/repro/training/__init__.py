@@ -1,0 +1,2 @@
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update, wsd_schedule  # noqa: F401
+from repro.training.train_step import TrainState, make_train_step  # noqa: F401

@@ -1,0 +1,141 @@
+"""Synthetic data pipelines, one per architecture family.
+
+Deterministic, seeded, host-side generators yielding fixed-shape device
+batches — the same contract a production loader (tf.data / grain) fulfils.
+LM batches follow a Zipfian unigram over the vocab (so losses move like
+text, not like uniform noise); recsys batches draw power-law item/category
+popularity; the GNN pipeline wraps the fanout sampler.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def _zipf_ids(rng: np.random.Generator, shape, vocab: int, a: float = 1.1):
+    # Truncated Zipf via inverse-CDF on a precomputed table is overkill here;
+    # numpy's zipf + modulo keeps the tail bounded and the draw fast.
+    raw = rng.zipf(a, size=shape)
+    return (raw % vocab).astype(np.int32)
+
+
+@dataclasses.dataclass
+class LmBatches:
+    vocab: int
+    batch: int
+    seq: int
+    seed: int = 0
+
+    def __iter__(self) -> Iterator[dict[str, Array]]:
+        rng = np.random.default_rng(self.seed)
+        while True:
+            toks = _zipf_ids(rng, (self.batch, self.seq + 1), self.vocab)
+            yield {
+                "tokens": jnp.asarray(toks[:, :-1]),
+                "labels": jnp.asarray(toks[:, 1:].astype(np.int32)),
+            }
+
+
+@dataclasses.dataclass
+class DlrmBatches:
+    vocab_sizes: tuple[int, ...]
+    n_dense: int
+    batch: int
+    seed: int = 0
+
+    def __iter__(self) -> Iterator[dict[str, Array]]:
+        rng = np.random.default_rng(self.seed)
+        while True:
+            dense = rng.normal(size=(self.batch, self.n_dense)).astype(np.float32)
+            sparse = np.stack(
+                [_zipf_ids(rng, (self.batch,), v) for v in self.vocab_sizes],
+                axis=1,
+            )
+            # Click-ish labels correlated with a random linear readout.
+            w = rng.normal(size=(self.n_dense,))
+            p = 1.0 / (1.0 + np.exp(-(dense @ w) * 0.5))
+            labels = (rng.uniform(size=self.batch) < p).astype(np.float32)
+            yield {
+                "dense": jnp.asarray(dense),
+                "sparse": jnp.asarray(sparse),
+                "labels": jnp.asarray(labels),
+            }
+
+
+@dataclasses.dataclass
+class SeqRecBatches:
+    """Shared by MIND (hist/target) and BERT4Rec (cloze)."""
+
+    n_items: int
+    batch: int
+    seq: int
+    n_mask: int = 20
+    seed: int = 0
+
+    def mind_iter(self) -> Iterator[dict[str, Array]]:
+        rng = np.random.default_rng(self.seed)
+        while True:
+            hist = _zipf_ids(rng, (self.batch, self.seq), self.n_items)
+            lens = rng.integers(self.seq // 2, self.seq + 1, size=self.batch)
+            mask = np.arange(self.seq)[None, :] < lens[:, None]
+            target = _zipf_ids(rng, (self.batch,), self.n_items)
+            yield {
+                "hist": jnp.asarray(hist),
+                "hist_mask": jnp.asarray(mask),
+                "target": jnp.asarray(target),
+            }
+
+    def bert4rec_iter(self, mask_token: int) -> Iterator[dict[str, Array]]:
+        rng = np.random.default_rng(self.seed)
+        while True:
+            seq = _zipf_ids(rng, (self.batch, self.seq), self.n_items)
+            pos = np.stack(
+                [
+                    rng.choice(self.seq, size=self.n_mask, replace=False)
+                    for _ in range(self.batch)
+                ]
+            ).astype(np.int32)
+            labels = np.take_along_axis(seq, pos, axis=1)
+            masked = seq.copy()
+            np.put_along_axis(masked, pos, mask_token, axis=1)
+            yield {
+                "seq": jnp.asarray(masked),
+                "seq_mask": jnp.ones((self.batch, self.seq), bool),
+                "mlm_positions": jnp.asarray(pos),
+                "mlm_labels": jnp.asarray(labels),
+            }
+
+
+def random_graph_data(
+    n_nodes: int, n_edges: int, d_feat: int, n_classes: int, seed: int = 0
+):
+    """Synthetic homophilous graph: community-structured edges + class-
+    correlated features (so a GNN can actually learn)."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, n_classes, size=n_nodes).astype(np.int32)
+    centers = rng.normal(size=(n_classes, d_feat)).astype(np.float32)
+    feats = centers[labels] + rng.normal(size=(n_nodes, d_feat)).astype(np.float32)
+    # 80% intra-class edges, 20% random.
+    n_intra = int(0.8 * n_edges)
+    by_class = [np.where(labels == c)[0] for c in range(n_classes)]
+    srcs, dsts = [], []
+    cls = rng.integers(0, n_classes, size=n_intra)
+    for c in range(n_classes):
+        members = by_class[c]
+        cnt = int((cls == c).sum())
+        if len(members) < 2 or cnt == 0:
+            continue
+        srcs.append(rng.choice(members, size=cnt))
+        dsts.append(rng.choice(members, size=cnt))
+    srcs.append(rng.integers(0, n_nodes, size=n_edges - sum(len(s) for s in srcs)))
+    dsts.append(rng.integers(0, n_nodes, size=n_edges - sum(len(d) for d in dsts)))
+    src = np.concatenate(srcs)[:n_edges]
+    dst = np.concatenate(dsts)[:n_edges]
+    mask = rng.uniform(size=n_nodes) < 0.5  # train mask
+    return feats, np.stack([src, dst]).astype(np.int32), labels, mask

@@ -1,0 +1,70 @@
+"""Generic train-step builder shared by every architecture.
+
+``make_train_step(loss_fn, opt_cfg)`` returns a pure function
+    (state, batch) -> (state, metrics)
+suitable for jit/pjit: value_and_grad, global-norm clip, AdamW, optional int8
+gradient compression with error feedback. The loss_fn closure carries the
+model config and the ShardCtx, so the same builder serves LM, GNN and recsys
+training.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.training import compression as comp_mod
+from repro.training import optimizer as opt_mod
+
+Array = jax.Array
+Params = Any
+LossFn = Callable[[Params, dict], tuple[Array, dict]]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Params
+    opt: Params
+    error_feedback: Params | None = None
+
+    @property
+    def step(self) -> Array:
+        return self.opt["step"]
+
+
+def init_train_state(
+    params: Params, compress_grads: bool = False
+) -> TrainState:
+    return TrainState(
+        params=params,
+        opt=opt_mod.adamw_init(params),
+        error_feedback=(
+            comp_mod.init_error_feedback(params) if compress_grads else None
+        ),
+    )
+
+
+def make_train_step(
+    loss_fn: LossFn,
+    opt_cfg: opt_mod.AdamWConfig,
+    compress_grads: bool = False,
+):
+    def train_step(state: TrainState, batch: dict) -> tuple[TrainState, dict]:
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state.params, batch
+        )
+        err = state.error_feedback
+        if compress_grads:
+            grads, err = comp_mod.compress_grads_with_feedback(grads, err)
+        params, opt, opt_metrics = opt_mod.adamw_update(
+            opt_cfg, state.params, grads, state.opt
+        )
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return TrainState(params=params, opt=opt, error_feedback=err), metrics
+
+    return train_step

@@ -1,0 +1,242 @@
+"""Multi-device scenarios, executed in a subprocess with 8 host devices.
+
+Invoked by tests/test_distributed.py as
+    python tests/_distributed_worker.py <scenario>
+Prints one JSON line with the scenario's measurements.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import json  # noqa: E402
+import sys  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import AxisType, NamedSharding, PartitionSpec as P  # noqa: E402
+
+
+def make_mesh(shape=(2, 4), names=("data", "model")):
+    return jax.make_mesh(shape, names, axis_types=(AxisType.Auto,) * len(shape))
+
+
+def scenario_sharded_search():
+    from repro.core import build, distance
+    from repro.distributed import sharded_search as ss
+    from repro.pq import pq_encode, train_pq
+
+    mesh = make_mesh()
+    n_shards = 8
+    n, d = 2048, 32
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (n, d), jnp.float32)
+    q = jax.random.normal(jax.random.fold_in(key, 1), (64, d), jnp.float32)
+    gt_d, gt_i = distance.brute_force_topk(q, x, k=10)
+
+    # Build one sub-graph per shard (shard-local ids).
+    per = n // n_shards
+    cfg = build.BuildConfig(degree=12, beam_width=32, iters=1, batch=128,
+                            max_hops=64)
+    adjs = []
+    for s in range(n_shards):
+        adjs.append(build.build_with_alpha(
+            x[s * per:(s + 1) * per],
+            jnp.full((per,), 1.2, jnp.float32), cfg))
+    adj = jnp.concatenate(adjs, axis=0)
+    book = train_pq(x, m=8, iters=4)
+    codes = pq_encode(x, book)
+
+    arrays = {
+        "adj": jax.device_put(adj, NamedSharding(mesh, P(("data", "model"), None))),
+        "codes": jax.device_put(codes, NamedSharding(mesh, P(("data", "model"), None))),
+        "vectors": jax.device_put(x, NamedSharding(mesh, P(("data", "model"), None))),
+        "centroids": jax.device_put(book.centroids, NamedSharding(mesh, P())),
+    }
+    d2, shard_ids, local_ids = ss.distributed_search(
+        mesh, arrays, q, beam_width=32, max_hops=64, k=10, query_chunk=16,
+        use_pq=True,
+    )
+    global_ids = np.asarray(shard_ids) * per + np.asarray(local_ids)
+    recall = float(distance.recall_at_k(jnp.asarray(global_ids), gt_i))
+
+    # Hedged-read: drop shard 3.
+    ok = jnp.ones((n_shards,), jnp.bool_).at[3].set(False)
+    ok = jax.device_put(ok, NamedSharding(mesh, P(("data", "model"))))
+    d2b, sb, lb = ss.distributed_search(
+        mesh, arrays, q, shard_ok=ok, beam_width=32, max_hops=64, k=10,
+        query_chunk=16, use_pq=True,
+    )
+    gids_b = np.asarray(sb) * per + np.asarray(lb)
+    recall_drop = float(distance.recall_at_k(jnp.asarray(gids_b), gt_i))
+    from_dead = int((np.asarray(sb) == 3).sum())
+    print(json.dumps({
+        "recall": recall, "recall_dropped_shard": recall_drop,
+        "results_from_dead_shard": from_dead,
+    }))
+
+
+def scenario_checkpoint_reshard(tmpdir):
+    from repro.training import checkpoint as ckpt
+
+    mesh_a = make_mesh((2, 4))
+    mesh_b = make_mesh((4, 2))
+    tree = {
+        "w": jax.device_put(
+            jnp.arange(64 * 8, dtype=jnp.float32).reshape(64, 8),
+            NamedSharding(mesh_a, P("data", "model")),
+        ),
+        "b": jax.device_put(jnp.ones((16,)), NamedSharding(mesh_a, P("model"))),
+    }
+    ckpt.save_checkpoint(tmpdir, 5, tree)
+    shardings = {
+        "w": NamedSharding(mesh_b, P("data", "model")),
+        "b": NamedSharding(mesh_b, P("model")),
+    }
+    restored, step = ckpt.restore_checkpoint(tmpdir, tree, shardings=shardings)
+    same = bool(
+        (np.asarray(restored["w"]) == np.asarray(tree["w"])).all()
+        and (np.asarray(restored["b"]) == np.asarray(tree["b"])).all()
+    )
+    new_mesh_ok = restored["w"].sharding.mesh.shape == mesh_b.shape
+    print(json.dumps({"step": step, "identical": same,
+                      "resharded": bool(new_mesh_ok)}))
+
+
+def scenario_sharded_train_matches_single():
+    """One pjit'd train step on the mesh == the same step on one device."""
+    from repro.configs import base as cfg_base
+    from repro.models import transformer as tfm
+    from repro.training import optimizer as opt_mod
+    from repro.training import train_step as ts_mod
+
+    mesh = make_mesh()
+    spec = cfg_base.get("qwen2-7b")
+    cfg = spec.smoke_config
+    key = jax.random.PRNGKey(0)
+    params = tfm.init_lm(cfg, key)
+    tokens = jax.random.randint(key, (8, 32), 0, cfg.vocab)
+    batch = {"tokens": tokens, "labels": tokens}
+    step = ts_mod.make_train_step(
+        lambda p, b: tfm.lm_loss(cfg, p, b),
+        opt_mod.AdamWConfig(lr=1e-3),
+    )
+    state = ts_mod.init_train_state(params)
+    _, m_single = jax.jit(step)(state, batch)
+
+    from repro.launch import shardings as shard_mod
+    state_spec = shard_mod.train_state_specs("lm", jax.eval_shape(lambda: state))
+    shardt = jax.tree.map(lambda s: NamedSharding(mesh, s), state_spec,
+                          is_leaf=lambda s: isinstance(s, P))
+    state_sharded = jax.tree.map(jax.device_put, state, shardt)
+    batch_sharded = jax.tree.map(
+        lambda a: jax.device_put(a, NamedSharding(mesh, P("data", None))), batch
+    )
+    _, m_mesh = jax.jit(step)(state_sharded, batch_sharded)
+    print(json.dumps({
+        "loss_single": float(m_single["loss"]),
+        "loss_mesh": float(m_mesh["loss"]),
+    }))
+
+
+def scenario_moe_expert_parallel():
+    """shard_map expert-parallel MoE == reference path (ample capacity)."""
+    from repro.models import moe as moe_mod
+    from repro.models.layers import ShardCtx
+
+    mesh = make_mesh()
+    ctx = ShardCtx(mesh=mesh, dp=("data",), tp="model")
+    cfg = moe_mod.MoeConfig(d_model=32, n_experts=8, top_k=2, d_expert=16,
+                            n_shared=1, d_shared=16, capacity_factor=8.0)
+    key = jax.random.PRNGKey(0)
+    p = moe_mod.moe_init(key, cfg)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (4, 16, 32))
+    ref, aux_ref = moe_mod.moe_apply(p, cfg, x, ctx=None, n_groups=1)
+    xs = jax.device_put(x, NamedSharding(mesh, P("data", "model", None)))
+    ep, aux_ep = jax.jit(
+        lambda pp, xx: moe_mod.moe_apply_expert_parallel(pp, cfg, xx, ctx)
+    )(p, xs)
+    print(json.dumps({
+        "max_err": float(jnp.abs(ep - ref).max()),
+        "aux_err": abs(float(aux_ref) - float(aux_ep)),
+    }))
+
+
+def scenario_merge_modes():
+    """flat and hierarchical distributed-search merges agree exactly."""
+    from repro.core import build
+    from repro.distributed import sharded_search as ss
+    from repro.pq import pq_encode, train_pq
+
+    mesh = make_mesh()
+    n_shards = 8
+    n, d = 1024, 16
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (n, d), jnp.float32)
+    q = jax.random.normal(jax.random.fold_in(key, 1), (32, d), jnp.float32)
+    per = n // n_shards
+    cfg = build.BuildConfig(degree=8, beam_width=16, iters=1, batch=128,
+                            max_hops=32)
+    adj = jnp.concatenate([
+        build.build_with_alpha(x[s * per:(s + 1) * per],
+                               jnp.full((per,), 1.2, jnp.float32), cfg)
+        for s in range(n_shards)
+    ])
+    book = train_pq(x, m=4, iters=3)
+    codes = pq_encode(x, book)
+    row = NamedSharding(mesh, P(("data", "model"), None))
+    arrays = {
+        "adj": jax.device_put(adj, row),
+        "codes": jax.device_put(codes, row),
+        "vectors": jax.device_put(x, row),
+        "centroids": jax.device_put(book.centroids, NamedSharding(mesh, P())),
+    }
+    outs = {}
+    for mode in ("flat", "hierarchical"):
+        d2, sid, lid = ss.distributed_search(
+            mesh, arrays, q, beam_width=16, max_hops=32, k=5,
+            query_chunk=8, use_pq=True, merge=mode)
+        outs[mode] = (np.asarray(sid) * per + np.asarray(lid),
+                      np.asarray(d2))
+    same_ids = bool((outs["flat"][0] == outs["hierarchical"][0]).all())
+    same_d2 = bool(np.allclose(outs["flat"][1], outs["hierarchical"][1]))
+    print(json.dumps({"ids_match": same_ids, "d2_match": same_d2}))
+
+
+def scenario_cells_lower():
+    from repro.launch import cells as cells_mod
+
+    mesh = make_mesh()
+    results = {}
+    # decode_32k instead of train_4k: the train cell's full 1M-token shape
+    # with the smoke config's tiny attn chunks fully unrolls a 256-step scan
+    # (the per-cell dry-run covers it; too slow for this smoke check).
+    for arch, shape in [("qwen3-moe-30b-a3b", "decode_32k"),
+                        ("bert4rec", "retrieval_cand"),
+                        ("mcgi-gist1m", "serve")]:
+        cell = cells_mod.build_cell(arch, shape, mesh, smoke=True)
+        compiled = cell.lower().compile()
+        cost = compiled.cost_analysis() or {}
+        results[f"{arch}/{shape}"] = cost.get("flops", 0) > 0
+    print(json.dumps(results))
+
+
+if __name__ == "__main__":
+    scen = sys.argv[1]
+    if scen == "sharded_search":
+        scenario_sharded_search()
+    elif scen == "checkpoint_reshard":
+        scenario_checkpoint_reshard(sys.argv[2])
+    elif scen == "train_match":
+        scenario_sharded_train_matches_single()
+    elif scen == "cells_lower":
+        scenario_cells_lower()
+    elif scen == "moe_ep":
+        scenario_moe_expert_parallel()
+    elif scen == "merge_modes":
+        scenario_merge_modes()
+    else:
+        raise SystemExit(f"unknown scenario {scen}")

@@ -1,0 +1,21 @@
+"""Shared test fixtures.
+
+NOTE: no XLA_FLAGS here on purpose — unit/smoke tests run on the single real
+CPU device. Multi-device behaviour is tested via subprocesses that set
+--xla_force_host_platform_device_count themselves (tests/test_distributed.py).
+"""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def tiny_dataset():
+    from repro.data import make_dataset
+
+    x, q = make_dataset("tiny-mixture", seed=0)
+    return x[:1500], q[:40]

@@ -1,0 +1,86 @@
+"""Pallas kernels vs jnp oracles — interpret-mode shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.l2_distance import l2_distance
+from repro.kernels.lid_kernel import lid_estimate
+from repro.kernels.pq_scan import pq_scan
+from repro.kernels.topk import topk
+
+
+@pytest.mark.parametrize("q_n,x_n,d", [(8, 64, 32), (130, 300, 96), (1, 129, 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_l2_distance_sweep(q_n, x_n, d, dtype):
+    key = jax.random.PRNGKey(q_n + x_n + d)
+    q = jax.random.normal(key, (q_n, d), dtype)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (x_n, d), dtype)
+    out = l2_distance(q, x, interpret=True)
+    expect = ref.l2_distance_ref(q, x)
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=tol, atol=tol * 10)
+
+
+@pytest.mark.parametrize("n,m,k,q", [(200, 8, 16, 2), (513, 16, 256, 3), (64, 4, 64, 1)])
+def test_pq_scan_sweep(n, m, k, q):
+    key = jax.random.PRNGKey(n)
+    codes = jax.random.randint(key, (n, m), 0, k).astype(jnp.uint8)
+    luts = jax.random.uniform(jax.random.fold_in(key, 1), (q, m, k))
+    out = pq_scan(luts, codes, interpret=True)
+    expect = jax.vmap(lambda l: ref.pq_scan_ref(l, codes))(luts)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n,k,q", [(1500, 10, 4), (5000, 32, 2), (1000, 1, 1)])
+def test_topk_sweep(n, k, q):
+    key = jax.random.PRNGKey(k)
+    d = jax.random.uniform(key, (q, n))
+    vals, ids = topk(d, k, interpret=True)
+    evals, eids = ref.topk_ref(d, k)
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(evals), rtol=1e-6)
+    assert (np.asarray(ids) == np.asarray(eids)).all()
+
+
+@pytest.mark.parametrize("b,k", [(100, 8), (700, 16), (512, 32)])
+def test_lid_kernel_sweep(b, k):
+    key = jax.random.PRNGKey(b)
+    d2 = jnp.sort(jax.random.uniform(key, (b, k)) + 0.01, axis=1)
+    out = lid_estimate(d2, interpret=True)
+    expect = ref.lid_ref(d2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-4)
+
+
+@pytest.mark.parametrize("b,hq,hkv,s,d", [(2, 8, 2, 700, 64), (1, 4, 4, 512, 32),
+                                          (3, 6, 1, 130, 16)])
+def test_decode_attention_sweep(b, hq, hkv, s, d):
+    key = jax.random.PRNGKey(s)
+    q = jax.random.normal(key, (b, hq, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, hkv, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, hkv, d))
+    lens = jax.random.randint(jax.random.fold_in(key, 3), (b,), 1, s + 1)
+    out = decode_attention(q, k, v, lens, interpret=True)
+    g = hq // hkv
+    expect = ref.decode_attention_ref(
+        q, jnp.repeat(k, g, axis=2), jnp.repeat(v, g, axis=2), lens
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_ops_dispatch_cpu_fallback():
+    """On CPU the ops layer must route to the oracle and stay numerically
+    identical to it."""
+    from repro.kernels import ops
+
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (4, 16))
+    x = jax.random.normal(jax.random.fold_in(key, 1), (32, 16))
+    np.testing.assert_allclose(
+        np.asarray(ops.bulk_l2(q, x)), np.asarray(ref.l2_distance_ref(q, x)),
+        rtol=1e-6,
+    )

@@ -1,0 +1,63 @@
+"""Mapping function Phi (Eq. 8) — Props 3.5/3.6 as executable properties."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import mapping
+
+finite_f = st.floats(
+    min_value=-1e4, max_value=1e4, allow_nan=False, allow_infinity=False
+)
+
+
+@given(
+    lid=st.lists(finite_f, min_size=2, max_size=32),
+    mu=finite_f,
+    sigma=st.floats(min_value=1e-3, max_value=1e3),
+)
+@settings(max_examples=200, deadline=None)
+def test_boundedness(lid, mu, sigma):
+    """Prop 3.6: alpha strictly inside (alpha_min, alpha_max) for finite LID."""
+    a = mapping.phi(jnp.asarray(lid), jnp.float32(mu), jnp.float32(sigma))
+    assert bool((a >= mapping.ALPHA_MIN).all())
+    assert bool((a <= mapping.ALPHA_MAX).all())
+
+
+@given(
+    l1=finite_f, l2=finite_f, mu=finite_f,
+    sigma=st.floats(min_value=1e-3, max_value=1e3),
+)
+@settings(max_examples=200, deadline=None)
+def test_monotonicity(l1, l2, mu, sigma):
+    """Prop 3.5: Phi strictly decreasing in LID (weakly under f32/clipping)."""
+    lo, hi = min(l1, l2), max(l1, l2)
+    a_lo = float(mapping.phi(jnp.float32(lo), jnp.float32(mu), jnp.float32(sigma)))
+    a_hi = float(mapping.phi(jnp.float32(hi), jnp.float32(mu), jnp.float32(sigma)))
+    assert a_hi <= a_lo + 1e-6
+
+
+def test_midpoint():
+    """z = 0 maps to the midpoint alpha ~= 1.25 (paper §3.2)."""
+    a = float(mapping.phi(jnp.float32(5.0), jnp.float32(5.0), jnp.float32(1.0)))
+    np.testing.assert_allclose(a, 1.25, atol=1e-6)
+
+
+def test_constant_alpha_is_vamana():
+    a = mapping.constant_alpha(10, 1.2)
+    assert a.shape == (10,)
+    np.testing.assert_allclose(float(a[0]), 1.2, rtol=1e-6)
+
+
+@given(
+    lam=st.floats(min_value=0.0, max_value=1.0),
+    lids=st.lists(st.floats(min_value=0.5, max_value=64.0), min_size=2,
+                  max_size=16),
+)
+@settings(max_examples=100, deadline=None)
+def test_adaptive_budget_bounds_and_monotone(lam, lids):
+    l = mapping.adaptive_beam_budget(jnp.asarray(lids), lam, 8, 128)
+    assert bool((l >= 8).all()) and bool((l <= 128).all())
+    order = np.argsort(np.asarray(lids))
+    budgets = np.asarray(l)[order]
+    assert (np.diff(budgets) >= 0).all()

@@ -1,0 +1,248 @@
+"""Model-zoo correctness: decode==forward, MLA absorption, MoE, GNN, recsys."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as attn_mod
+from repro.models import gnn, moe as moe_mod, recsys
+from repro.models import transformer as tfm
+from repro.models.blockwise import blockwise_attention
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _dense_cfg(**kw):
+    base = dict(
+        name="t", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_head=16,
+        d_ff=128, vocab=256, dtype=jnp.float32, attn_chunk_q=8, attn_chunk_k=8,
+    )
+    base.update(kw)
+    return tfm.TransformerConfig(**base)
+
+
+def test_blockwise_matches_dense_reference():
+    q = jax.random.normal(KEY, (2, 32, 2, 3, 16))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (2, 32, 2, 16))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (2, 32, 2, 16))
+    out = blockwise_attention(q, k, v, chunk_q=8, chunk_k=8)
+    # dense reference
+    logits = jnp.einsum("bshgd,bthd->bhgst", q, k) * (16 ** -0.5)
+    mask = jnp.tril(jnp.ones((32, 32), bool))
+    logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    w = jax.nn.softmax(logits, -1)
+    expect = jnp.einsum("bhgst,bthd->bshgd", w, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_blockwise_impl_equivalence():
+    q = jax.random.normal(KEY, (1, 64, 2, 2, 8))
+    k = jax.random.normal(jax.random.fold_in(KEY, 3), (1, 64, 2, 8))
+    v = jax.random.normal(jax.random.fold_in(KEY, 4), (1, 64, 2, 12))
+    a = blockwise_attention(q, k, v, chunk_q=16, chunk_k=8,
+                            skip_masked_blocks=False)
+    b = blockwise_attention(q, k, v, chunk_q=16, chunk_k=8,
+                            skip_masked_blocks=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_decode_matches_forward_gqa():
+    cfg = _dense_cfg(qkv_bias=True, qk_norm=True)
+    params = tfm.init_lm(cfg, KEY)
+    B, S = 2, 16
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    cache = tfm.init_cache(cfg, B, 32, dtype=jnp.float32)
+    outs = []
+    for t in range(S):
+        lg, cache = tfm.decode_step(cfg, params, cache, tokens[:, t:t + 1],
+                                    jnp.full((B,), t, jnp.int32))
+        outs.append(lg)
+    dec = jnp.stack(outs, 1)
+    x, _ = tfm.forward(cfg, params, tokens)
+    full = tfm.logits_from_hidden(cfg, params, x, None)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_mla_decode_absorbed_equals_naive():
+    mla = attn_mod.MlaConfig(d_model=64, n_heads=4, kv_lora_rank=32,
+                             qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16,
+                             attn_chunk_q=8, attn_chunk_k=8)
+    cfg = _dense_cfg(attention="mla", mla=mla, n_kv_heads=4)
+    params = tfm.init_lm(cfg, KEY)
+    B = 2
+    tokens = jax.random.randint(KEY, (B, 1), 0, cfg.vocab)
+    cache = tfm.init_cache(cfg, B, 8, dtype=jnp.float32)
+    kv = jnp.zeros((B,), jnp.int32)
+    la, _ = tfm.decode_step(cfg, params, cache, tokens, kv, mla_absorbed=True)
+    ln, _ = tfm.decode_step(cfg, params, cache, tokens, kv, mla_absorbed=False)
+    np.testing.assert_allclose(np.asarray(la), np.asarray(ln),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_mla_decode_matches_forward():
+    mla = attn_mod.MlaConfig(d_model=64, n_heads=4, kv_lora_rank=32,
+                             qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16,
+                             attn_chunk_q=8, attn_chunk_k=8)
+    cfg = _dense_cfg(attention="mla", mla=mla, n_kv_heads=4)
+    params = tfm.init_lm(cfg, KEY)
+    B, S = 2, 16
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    cache = tfm.init_cache(cfg, B, 32, dtype=jnp.float32)
+    outs = []
+    for t in range(S):
+        lg, cache = tfm.decode_step(cfg, params, cache, tokens[:, t:t + 1],
+                                    jnp.full((B,), t, jnp.int32))
+        outs.append(lg)
+    dec = jnp.stack(outs, 1)
+    x, _ = tfm.forward(cfg, params, tokens)
+    full = tfm.logits_from_hidden(cfg, params, x, None)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_moe_capacity_and_combine():
+    cfg = moe_mod.MoeConfig(d_model=16, n_experts=4, top_k=2, d_expert=8)
+    p = moe_mod.moe_init(KEY, cfg)
+    x = jax.random.normal(KEY, (2, 8, 16))
+    out, aux = moe_mod.moe_apply(p, cfg, x)
+    assert out.shape == x.shape
+    assert bool(jnp.isfinite(out).all())
+    assert float(aux) >= 1.0 - 1e-3  # Switch aux loss lower bound at balance
+
+
+def test_moe_grads_flow_to_experts():
+    cfg = moe_mod.MoeConfig(d_model=16, n_experts=4, top_k=2, d_expert=8)
+    p = moe_mod.moe_init(KEY, cfg)
+    x = jax.random.normal(KEY, (2, 32, 16))
+    g = jax.grad(lambda pp: moe_mod.moe_apply(pp, cfg, x)[0].sum())(p)
+    assert float(jnp.abs(g["w_gate"]).sum()) > 0
+    assert float(jnp.abs(g["router"]).sum()) > 0
+
+
+def test_unroll_flag_is_numerically_neutral():
+    cfg = _dense_cfg()
+    params = tfm.init_lm(cfg, KEY)
+    tokens = jax.random.randint(KEY, (2, 16), 0, cfg.vocab)
+    batch = {"tokens": tokens, "labels": tokens}
+    l1, _ = tfm.lm_loss(cfg, params, batch)
+    cfg2 = dataclasses.replace(cfg, unroll_layers=True, attn_unroll=True)
+    l2, _ = tfm.lm_loss(cfg2, params, batch)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+
+
+def test_gat_learns_on_homophilous_graph():
+    from repro.training.data import random_graph_data
+
+    feats, ei, labels, mask = random_graph_data(300, 2000, 16, 4, seed=0)
+    cfg = gnn.GatConfig(d_in=16, d_hidden=8, n_heads=4, n_classes=4)
+    p = gnn.gat_init(KEY, cfg)
+    batch = {
+        "features": jnp.asarray(feats),
+        "edge_index": jnp.asarray(gnn.pad_edges(ei[0], ei[1], 2048, 300)),
+        "labels": jnp.asarray(labels),
+        "mask": jnp.asarray(mask),
+    }
+    from repro.training import optimizer as opt_mod
+    from repro.training import train_step as ts_mod
+
+    step = ts_mod.make_train_step(
+        lambda pp, b: gnn.gat_loss(cfg, pp, b),
+        opt_mod.AdamWConfig(lr=1e-2, weight_decay=0.0, schedule="const"),
+    )
+    state = ts_mod.init_train_state(p)
+    step = jax.jit(step)
+    first = None
+    for i in range(30):
+        state, metrics = step(state, batch)
+        if first is None:
+            first = float(metrics["loss"])
+    assert float(metrics["loss"]) < 0.7 * first
+    assert float(metrics["acc"]) > 0.5
+
+
+def test_gat_graph_level():
+    cfg = gnn.GatConfig(d_in=8, d_hidden=4, n_heads=2, n_classes=2)
+    p = gnn.gat_init(KEY, cfg)
+    n, e, g = 64, 128, 8
+    rng = np.random.default_rng(0)
+    batch = {
+        "features": jnp.asarray(rng.normal(size=(n, 8)).astype(np.float32)),
+        "edge_index": jnp.asarray(
+            gnn.pad_edges(rng.integers(0, n, e), rng.integers(0, n, e), 160, n)
+        ),
+        "graph_ids": jnp.asarray(np.repeat(np.arange(g), n // g).astype(np.int32)),
+        "labels": jnp.asarray(rng.integers(0, 2, g).astype(np.int32)),
+    }
+    loss, m = gnn.gat_graph_loss(cfg, p, batch)
+    assert bool(jnp.isfinite(loss))
+
+
+def test_neighbor_sampler_shapes_and_validity():
+    rng = np.random.default_rng(1)
+    src = rng.integers(0, 500, 4000)
+    dst = rng.integers(0, 500, 4000)
+    s = gnn.NeighborSampler(np.stack([src, dst]), 500, seed=0)
+    nodes, es, ed = s.sample_block(np.arange(32), (5, 3))
+    assert (nodes[:32] == np.arange(32)).all()  # seeds first
+    assert es.max() < len(nodes) and ed.max() < len(nodes)
+    # Every sampled edge must exist in the original graph.
+    edge_set = set(zip(src.tolist(), dst.tolist()))
+    for a, b in zip(nodes[es[:50]], nodes[ed[:50]]):
+        assert (int(a), int(b)) in edge_set
+
+
+@pytest.mark.parametrize("model", ["dlrm", "deepfm", "mind", "bert4rec"])
+def test_recsys_losses_and_grads(model):
+    B = 32
+    if model == "dlrm":
+        cfg = recsys.DlrmConfig(vocab_sizes=(100, 50, 30), embed_dim=8,
+                                bot_mlp=(16, 8), top_mlp=(16, 1))
+        p = recsys.dlrm_init(KEY, cfg)
+        batch = {"dense": jax.random.normal(KEY, (B, 13)),
+                 "sparse": jax.random.randint(KEY, (B, 3), 0, 30),
+                 "labels": jax.random.bernoulli(KEY, 0.3, (B,))}
+        loss_fn = lambda pp: recsys.dlrm_loss(cfg, pp, batch)[0]
+    elif model == "deepfm":
+        cfg = recsys.DeepFmConfig(n_fields=5, vocab_per_field=50, embed_dim=8,
+                                  mlp=(16,))
+        p = recsys.deepfm_init(KEY, cfg)
+        batch = {"sparse": jax.random.randint(KEY, (B, 5), 0, 50),
+                 "labels": jax.random.bernoulli(KEY, 0.3, (B,))}
+        loss_fn = lambda pp: recsys.deepfm_loss(cfg, pp, batch)[0]
+    elif model == "mind":
+        cfg = recsys.MindConfig(n_items=200, embed_dim=8, hist_len=12)
+        p = recsys.mind_init(KEY, cfg)
+        batch = {"hist": jax.random.randint(KEY, (B, 12), 0, 200),
+                 "hist_mask": jnp.ones((B, 12), bool),
+                 "target": jax.random.randint(KEY, (B,), 0, 200)}
+        loss_fn = lambda pp: recsys.mind_loss(cfg, pp, batch)[0]
+    else:
+        cfg = recsys.Bert4RecConfig(n_items=200, embed_dim=16, n_blocks=1,
+                                    n_heads=2, seq_len=12)
+        p = recsys.bert4rec_init(KEY, cfg)
+        batch = {"seq": jax.random.randint(KEY, (B, 12), 0, 200),
+                 "seq_mask": jnp.ones((B, 12), bool),
+                 "mlm_positions": jax.random.randint(KEY, (B, 2), 0, 12),
+                 "mlm_labels": jax.random.randint(KEY, (B, 2), 0, 200)}
+        loss_fn = lambda pp: recsys.bert4rec_loss(cfg, pp, batch)[0]
+    loss = loss_fn(p)
+    assert bool(jnp.isfinite(loss))
+    g = jax.grad(loss_fn)(p)
+    assert all(bool(jnp.isfinite(l).all()) for l in jax.tree.leaves(g))
+
+
+def test_mind_capsule_interests_distinct():
+    cfg = recsys.MindConfig(n_items=500, embed_dim=16, n_interests=4,
+                            hist_len=20)
+    p = recsys.mind_init(KEY, cfg)
+    hist = jax.random.randint(KEY, (4, 20), 0, 500)
+    mask = jnp.ones((4, 20), bool)
+    u = recsys.mind_interests(cfg, p, hist, mask)
+    assert u.shape == (4, 4, 16)
+    # Interests should not all collapse to one vector.
+    pd = jnp.sum((u[:, :, None, :] - u[:, None, :, :]) ** 2, -1)
+    assert float(pd.max()) > 1e-4

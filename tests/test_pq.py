@@ -1,0 +1,72 @@
+"""PQ substrate + two-tier index."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import build, distance
+from repro.index import build_tiered_index, load_index, save_index
+from repro.index.disk import DiskTierModel, search_tiered
+from repro.pq import adc_distances, build_lut, pq_decode, pq_encode, train_pq
+from repro.pq.adc import adc_topk
+
+
+@pytest.fixture(scope="module")
+def pq_setup(tiny_dataset):
+    x, q = tiny_dataset
+    book = train_pq(x, m=8, iters=5)
+    codes = pq_encode(x, book)
+    return x, q, book, codes
+
+
+def test_reconstruction_error(pq_setup):
+    x, _, book, codes = pq_setup
+    rec = pq_decode(codes, book)
+    rel = float(jnp.mean(jnp.sum((rec - x) ** 2, -1))
+                / jnp.mean(jnp.sum(x * x, -1)))
+    assert rel < 0.05, rel
+
+
+def test_adc_correlates_with_exact(pq_setup):
+    x, q, book, codes = pq_setup
+    luts = build_lut(q, book.centroids)
+    d_hat = adc_distances(luts, codes)
+    d_true = distance.squared_l2(q, x)
+    corr = float(jnp.corrcoef(d_hat.ravel(), d_true.ravel())[0, 1])
+    assert corr > 0.99, corr
+
+
+def test_adc_topk_near_exact(pq_setup):
+    x, q, book, codes = pq_setup
+    luts = build_lut(q, book.centroids)
+    _, ids = adc_topk(luts, codes, k=10)
+    _, gt = distance.brute_force_topk(q, x, k=10)
+    r = float(distance.recall_at_k(ids, gt))
+    assert r > 0.7, r  # pure-ADC recall before rerank
+
+
+def test_tiered_search_and_roundtrip(tiny_dataset, tmp_path):
+    x, q = tiny_dataset
+    x, q = x[:1000], q[:30]
+    cfg = build.BuildConfig(degree=24, beam_width=48, iters=1, batch=256,
+                            max_hops=96)
+    graph = build.build_mcgi(x, cfg)
+    tiered = build_tiered_index(x, graph, m_pq=8)
+    _, gt = distance.brute_force_topk(q, x, k=10)
+    ids, _, stats = search_tiered(tiered, q, beam_width=48, k=10)
+    r = float(distance.recall_at_k(ids, gt))
+    assert r >= 0.9, r
+    # Fast tier strictly smaller than slow tier (the disk-resident premise).
+    assert tiered.fast_tier_bytes() < tiered.slow_tier_bytes()
+
+    p = tmp_path / "idx.npz"
+    save_index(p, tiered)
+    t2 = load_index(p)
+    ids2, _, _ = search_tiered(t2, q, beam_width=48, k=10)
+    assert (np.asarray(ids2) == np.asarray(ids)).all()
+
+
+def test_disk_model_latency_monotone():
+    m = DiskTierModel()
+    lat = m.latency_us(jnp.array([1, 10, 100]))
+    assert float(lat[0]) < float(lat[1]) < float(lat[2])

@@ -1,0 +1,86 @@
+"""Adaptive robust prune — the dynamic occlusion criterion."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import prune
+
+INVALID = prune.INVALID
+
+
+def _prune_complete(x: np.ndarray, u: int, alpha: float, degree: int):
+    xj = jnp.asarray(x, jnp.float32)
+    cand = jnp.arange(x.shape[0], dtype=jnp.int32)[None, :]
+    rows, d2 = prune.robust_prune_batch(
+        xj, jnp.asarray([u], jnp.int32), cand,
+        jnp.asarray([alpha], jnp.float32), degree,
+    )
+    return np.asarray(rows[0]), np.asarray(d2[0])
+
+
+def test_degree_cap():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(50, 4)).astype(np.float32)
+    rows, _ = _prune_complete(x, 0, 1.0, degree=5)
+    assert (rows != INVALID).sum() <= 5
+
+
+def test_nearest_always_selected():
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(30, 3)).astype(np.float32)
+    d = ((x - x[7]) ** 2).sum(1)
+    d[7] = np.inf
+    nearest = int(np.argmin(d))
+    rows, _ = _prune_complete(x, 7, 1.3, degree=8)
+    assert nearest in rows.tolist()
+
+
+def test_occlusion_rule_manual():
+    """Three colinear points: with alpha=1 the far point is occluded by the
+    middle one; with huge alpha the middle no longer occludes."""
+    x = np.array([[0.0], [1.0], [2.1]], dtype=np.float32)
+    rows_strict, _ = _prune_complete(x, 0, 1.0, degree=3)
+    kept = set(rows_strict[rows_strict != INVALID].tolist())
+    assert kept == {1}  # node 2 pruned: 1.0*d(1,2) <= d(0,2)
+    # alpha large enough that alpha*d(1,2) > d(0,2): 2 survives.
+    # (alpha on true distances: need alpha*1.1 > 2.1 -> alpha > 1.909)
+    rows_loose, _ = _prune_complete(x, 0, 2.0, degree=3)
+    kept = set(rows_loose[rows_loose != INVALID].tolist())
+    assert kept == {1, 2}
+
+
+def test_monotone_in_alpha():
+    """Larger alpha prunes less aggressively => at least as many neighbours
+    (up to the degree cap)."""
+    rng = np.random.default_rng(2)
+    x = rng.normal(size=(60, 6)).astype(np.float32)
+    n1 = (_prune_complete(x, 3, 1.0, degree=59)[0] != INVALID).sum()
+    n2 = (_prune_complete(x, 3, 1.5, degree=59)[0] != INVALID).sum()
+    assert n2 >= n1
+
+
+def test_duplicates_and_self_removed():
+    x = np.array([[0.0], [1.0], [3.0]], dtype=np.float32)
+    cand = jnp.asarray([[0, 1, 1, 2, INVALID]], jnp.int32)
+    rows, _ = prune.robust_prune_batch(
+        jnp.asarray(x), jnp.asarray([0], jnp.int32), cand,
+        jnp.asarray([2.0], jnp.float32), 5,
+    )
+    vals = rows[0][rows[0] != INVALID].tolist()
+    assert 0 not in vals
+    assert len(vals) == len(set(vals))
+
+
+@given(
+    seed=st.integers(0, 10_000),
+    n=st.integers(5, 40),
+    alpha=st.floats(min_value=1.0, max_value=2.0),
+)
+@settings(max_examples=50, deadline=None)
+def test_always_selects_at_least_one(seed, n, alpha):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, 3)).astype(np.float32)
+    rows, _ = _prune_complete(x, 0, alpha, degree=max(4, n // 4))
+    assert (rows != INVALID).sum() >= 1

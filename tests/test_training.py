@@ -1,0 +1,129 @@
+"""Training substrate: optimizer, schedules, compression, checkpointing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.training import checkpoint as ckpt
+from repro.training import compression as comp
+from repro.training import optimizer as opt
+from repro.training import train_step as ts
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _quadratic_problem():
+    w_true = jax.random.normal(KEY, (16,))
+    x = jax.random.normal(jax.random.fold_in(KEY, 1), (64, 16))
+    y = x @ w_true
+
+    def loss_fn(params, batch):
+        pred = batch["x"] @ params["w"]
+        l = jnp.mean((pred - batch["y"]) ** 2)
+        return l, {}
+
+    params = {"w": jnp.zeros((16,))}
+    return loss_fn, params, {"x": x, "y": y}
+
+
+def test_adamw_converges():
+    loss_fn, params, batch = _quadratic_problem()
+    cfg = opt.AdamWConfig(lr=0.05, weight_decay=0.0, schedule="const",
+                          grad_clip=10.0)
+    step = jax.jit(ts.make_train_step(loss_fn, cfg))
+    state = ts.init_train_state(params)
+    for _ in range(200):
+        state, metrics = step(state, batch)
+    assert float(metrics["loss"]) < 1e-2
+
+
+def test_schedules_shape():
+    cfg = opt.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    lrs = [float(opt.cosine_schedule(cfg, jnp.int32(s))) for s in (0, 5, 10, 50, 100)]
+    assert lrs[0] == 0.0 and lrs[1] == pytest.approx(0.5)
+    assert lrs[2] == pytest.approx(1.0, abs=1e-3)
+    assert lrs[-1] < 1e-3
+    wsd = opt.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                          schedule="wsd", decay_frac=0.2)
+    stable = float(opt.wsd_schedule(wsd, jnp.int32(50)))
+    late = float(opt.wsd_schedule(wsd, jnp.int32(99)))
+    assert stable == pytest.approx(1.0, abs=1e-3)  # flat plateau
+    assert late < 0.05  # sharp final decay
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((4,), 100.0)}
+    clipped, norm = opt.clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(200.0)
+    total = jnp.sqrt(sum(jnp.sum(x * x) for x in jax.tree.leaves(clipped)))
+    assert float(total) == pytest.approx(1.0, rel=1e-4)
+
+
+def test_compression_error_feedback_roundtrip():
+    g = {"w": jax.random.normal(KEY, (128,))}
+    err = comp.init_error_feedback(g)
+    deq, err2 = comp.compress_grads_with_feedback(g, err)
+    # First-step quantisation error bounded by scale/2 per element.
+    scale = float(jnp.abs(g["w"]).max()) / 127.0
+    assert float(jnp.abs(deq["w"] - g["w"]).max()) <= scale
+    # Error feedback carries the residual exactly.
+    np.testing.assert_allclose(
+        np.asarray(err2["w"]), np.asarray(g["w"] - deq["w"]), rtol=1e-6
+    )
+
+
+def test_compressed_training_converges():
+    loss_fn, params, batch = _quadratic_problem()
+    cfg = opt.AdamWConfig(lr=0.05, weight_decay=0.0, schedule="const")
+    step = jax.jit(ts.make_train_step(loss_fn, cfg, compress_grads=True))
+    state = ts.init_train_state(params, compress_grads=True)
+    for _ in range(300):
+        state, metrics = step(state, batch)
+    assert float(metrics["loss"]) < 5e-2  # int8 grads + EF still converge
+
+
+def test_compression_payload_accounting():
+    params = {"w": jnp.zeros((1000,)), "b": jnp.zeros((10,))}
+    full, compressed = comp.compressed_allreduce_bytes(params)
+    assert full == 4 * 1010
+    assert compressed < full / 3.5
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(10, dtype=jnp.float32),
+            "nested": {"b": jnp.ones((3, 4), jnp.bfloat16)},
+            "step": jnp.int32(7)}
+    ckpt.save_checkpoint(tmp_path, 3, tree)
+    restored, step = ckpt.restore_checkpoint(tmp_path, tree)
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.arange(10))
+    assert restored["nested"]["b"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_latest_and_prune(tmp_path):
+    tree = {"a": jnp.zeros((2,))}
+    for s in (1, 2, 3, 4):
+        ckpt.save_checkpoint(tmp_path, s, tree)
+    assert ckpt.latest_step(tmp_path) == 4
+    ckpt.prune_old(tmp_path, keep=2)
+    assert ckpt.latest_step(tmp_path) == 4
+    assert len(list(tmp_path.glob("step_*"))) == 2
+
+
+def test_async_checkpointer(tmp_path):
+    tree = {"a": jnp.arange(5, dtype=jnp.float32)}
+    ac = ckpt.AsyncCheckpointer()
+    ac.save(tmp_path, 1, tree)
+    ac.wait()
+    restored, _ = ckpt.restore_checkpoint(tmp_path, tree)
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.arange(5))
+
+
+def test_train_state_metrics():
+    loss_fn, params, batch = _quadratic_problem()
+    cfg = opt.AdamWConfig(lr=0.01)
+    step = ts.make_train_step(loss_fn, cfg)
+    state = ts.init_train_state(params)
+    state, metrics = step(state, batch)
+    assert int(state.step) == 1
+    assert {"loss", "lr", "grad_norm"} <= set(metrics)
