@@ -39,7 +39,10 @@ def run(csv: common.Csv, scale: str = "small"):
                 (ids, _, stats), dt = common.timed(lambda: fn())
                 r = float(distance.recall_at_k(ids, gt))
                 io = float(stats.hops.mean())
-                ssd_ms = float(model.latency_us(stats.hops).mean()) / 1e3
+                # Traversal reads are serial; the final L-node rerank batch
+                # runs at the SSD's queue depth.
+                ssd_ms = float(
+                    model.latency_us(stats.hops, rerank_reads=L).mean()) / 1e3
                 csv.add(
                     f"scalability/{ds}/{tag}/L={L}", dt / q.shape[0],
                     f"recall={r:.4f} qps={q.shape[0]/dt:.1f} io={io:.1f} "

@@ -15,8 +15,9 @@ os.environ["XLA_FLAGS"] = (
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
+from repro import compat  # noqa: E402
 from repro.core import BuildConfig, brute_force_topk, recall_at_k  # noqa: E402
 from repro.core import build  # noqa: E402
 from repro.data import make_dataset  # noqa: E402
@@ -25,8 +26,7 @@ from repro.pq import pq_encode, train_pq  # noqa: E402
 
 
 def main():
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((2, 4), ("data", "model"))
     n_shards = mesh.devices.size
     x, queries = make_dataset("tiny-mixture", seed=0)
     queries = queries[:64]
@@ -44,11 +44,15 @@ def main():
     book = train_pq(x, m=8, iters=4)
     codes = pq_encode(x, book)
     row = NamedSharding(mesh, P(("data", "model"), None))
+    flag = NamedSharding(mesh, P(("data", "model")))
     arrays = {
         "adj": jax.device_put(adj, row),
         "codes": jax.device_put(codes, row),
         "vectors": jax.device_put(x, row),
         "centroids": jax.device_put(book.centroids, NamedSharding(mesh, P())),
+        # Per-shard entry points: each shard starts its walk at its own
+        # medoid, not at local row 0.
+        "entries": jax.device_put(ss.shard_medoids(x, n_shards), flag),
     }
     gt_d, gt_ids = brute_force_topk(queries, x, k=10)
 
@@ -61,7 +65,7 @@ def main():
 
     # Straggler/fault injection: shard 5 misses its deadline.
     ok = jnp.ones((n_shards,), jnp.bool_).at[5].set(False)
-    ok = jax.device_put(ok, NamedSharding(mesh, P(("data", "model"))))
+    ok = jax.device_put(ok, flag)
     d2, shard_ids, local_ids = ss.distributed_search(
         mesh, arrays, queries, shard_ok=ok, beam_width=32, max_hops=64,
         k=10, query_chunk=16)
@@ -71,6 +75,18 @@ def main():
           f"(graceful: lost ~1/{n_shards} of the data, no recompilation, "
           f"no stall)")
     assert (np.asarray(shard_ids) != 5).all()
+
+    # Adaptive per-query budgets on every shard (Prop. 4.2 in the engine):
+    # each shard grants each query a budget from its own probe-phase LID.
+    from repro.core.search import AdaptiveBeamBudget
+    d2, shard_ids, local_ids = ss.distributed_search(
+        mesh, arrays, queries, beam_width=32, max_hops=64, k=10,
+        query_chunk=16,
+        beam_budget=AdaptiveBeamBudget(l_min=8, l_max=32, lam=0.35))
+    gids = np.asarray(shard_ids) * per + np.asarray(local_ids)
+    r = float(recall_at_k(jnp.asarray(gids), gt_ids))
+    print(f"[dist] adaptive budgets: recall@10={r:.4f} "
+          f"(per-shard probe -> online LID -> per-query beam budget)")
 
 
 if __name__ == "__main__":

@@ -16,9 +16,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import BuildConfig, brute_force_topk, build_mcgi, recall_at_k
+from repro.core.search import AdaptiveBeamBudget
 from repro.data import synthetic
 from repro.index import build_tiered_index
-from repro.index.disk import DiskTierModel, search_tiered
+from repro.index.disk import (DiskTierModel, search_tiered,
+                              search_tiered_adaptive)
 
 
 class RequestBatcher:
@@ -51,6 +53,10 @@ def main():
     ap.add_argument("--seconds", type=float, default=15.0)
     ap.add_argument("--beam", type=int, default=48)
     ap.add_argument("--offered-qps", type=float, default=500.0)
+    ap.add_argument("--adaptive", action="store_true",
+                    help="per-query adaptive beam budgets (l_min=16, "
+                         "l_max=--beam)")
+    ap.add_argument("--lam", type=float, default=0.35)
     args = ap.parse_args()
 
     spec = dataclasses.replace(
@@ -66,9 +72,16 @@ def main():
           f"{index.slow_tier_bytes()/1e6:.0f}MB")
     gt_d, gt_ids = brute_force_topk(queries, x, k=10)
 
-    search = jax.jit(
-        lambda q: search_tiered(index, q, beam_width=args.beam, k=10)
-    )
+    if args.adaptive:
+        budget_cfg = AdaptiveBeamBudget(l_min=min(16, args.beam),
+                                        l_max=args.beam, lam=args.lam)
+        search = jax.jit(
+            lambda q: search_tiered_adaptive(index, q, budget_cfg, k=10)[:3]
+        )
+    else:
+        search = jax.jit(
+            lambda q: search_tiered(index, q, beam_width=args.beam, k=10)
+        )
     _ = search(queries[:64])  # warm the compile cache
 
     batcher = RequestBatcher(max_batch=64)
@@ -99,7 +112,11 @@ def main():
         submit_times = [s for _, s in items]
         qb = qn[idxs]
         pad = 64 - qb.shape[0]
-        qb_p = np.pad(qb, ((0, pad), (0, 0)))
+        # Pad partial batches by cycling real queries, not with zeros: the
+        # adaptive engine centers budgets on the batch-mean LID, and a zero
+        # vector is a wildly atypical "query" that would skew every real
+        # query's budget at low load.
+        qb_p = np.pad(qb, ((0, pad), (0, 0)), mode="wrap") if pad else qb
         ids, d2, stats = search(jnp.asarray(qb_p))
         jax.block_until_ready(ids)
         now = time.perf_counter()
@@ -111,8 +128,10 @@ def main():
 
     print(f"[e2e] served {served} queries in {args.seconds:.0f}s "
           f"({served/args.seconds:.0f} QPS sustained)")
+    ssd_ms = float(model.latency_us(
+        jnp.float32(np.mean(ios)), rerank_reads=args.beam)) / 1e3
     print(f"[e2e] recall@10={np.mean(recs):.4f} io/query={np.mean(ios):.1f} "
-          f"ssd_model={np.mean(ios)*model.read_latency_us/1e3:.2f}ms")
+          f"ssd_model={ssd_ms:.2f}ms")
     print(f"[e2e] e2e latency p50={np.percentile(lat,50):.1f}ms "
           f"p95={np.percentile(lat,95):.1f}ms p99={np.percentile(lat,99):.1f}ms")
 

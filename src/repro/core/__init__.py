@@ -15,5 +15,14 @@ from repro.core.distance import brute_force_topk, knn_graph, recall_at_k  # noqa
 from repro.core.lid import LidProfile, calibrate, estimate_dataset_lid, lid_from_dists  # noqa: F401
 from repro.core.mapping import ALPHA_MAX, ALPHA_MIN, AlphaMapping, phi  # noqa: F401
 from repro.core.online import build_online_mcgi  # noqa: F401
-from repro.core.search import SearchStats, beam_search_exact, beam_search_pq, medoid  # noqa: F401
+from repro.core.search import (  # noqa: F401
+    AdaptiveBeamBudget,
+    AdaptiveStats,
+    SearchStats,
+    beam_search_exact,
+    beam_search_exact_adaptive,
+    beam_search_pq,
+    beam_search_pq_adaptive,
+    medoid,
+)
 from repro.core.types import GraphIndex  # noqa: F401

@@ -33,10 +33,10 @@ def _rewire_batch_online(
     entry: Array,
     node_ids: Array,
     cfg: build_mod.BuildConfig,
-) -> tuple[Array, Array, Array]:
+) -> tuple[Array, Array, Array, Array]:
     """One online refinement step: search -> online LID -> alpha_u -> prune.
 
-    Returns (new_rows, new_d2, alpha_u) for the batch.
+    Returns (new_rows, new_d2, alpha_u, lid_u) for the batch.
     """
     queries = x[node_ids]
     beam_ids, beam_d2, _ = search_mod.beam_search_exact(
@@ -53,7 +53,7 @@ def _rewire_batch_online(
     rows, rows_d2 = prune_mod.robust_prune_batch(
         x, node_ids, pool, alpha_u, cfg.degree
     )
-    return rows, rows_d2, alpha_u
+    return rows, rows_d2, alpha_u, lid_u
 
 
 def build_online_mcgi(
@@ -72,7 +72,10 @@ def build_online_mcgi(
     adj = build_mod.random_graph(n, cfg.degree, key)
     entry = search_mod.medoid(x)
     alpha_final = jnp.full((n,), 0.5 * (cfg.alpha_min + cfg.alpha_max), jnp.float32)
-    lid_final = jnp.zeros((n,), jnp.float32)
+    # Seeded at mu so un-refined nodes are consistent with alpha_final's
+    # midpoint; overwritten per batch with the online estimate each alpha was
+    # actually computed from.
+    lid_final = jnp.full((n,), mu, jnp.float32)
 
     rewire = jax.jit(
         _rewire_batch_online, static_argnames=("cfg",)
@@ -85,9 +88,10 @@ def build_online_mcgi(
             if ids_np.size < cfg.batch:
                 ids_np = np.concatenate([ids_np, perm[: cfg.batch - ids_np.size]])
             node_ids = jnp.asarray(ids_np)
-            rows, _, alpha_u = rewire(x, adj, mu, sigma, entry, node_ids, cfg)
+            rows, _, alpha_u, lid_u = rewire(x, adj, mu, sigma, entry, node_ids, cfg)
             adj = adj.at[node_ids].set(rows)
             alpha_final = alpha_final.at[node_ids].set(alpha_u)
+            lid_final = lid_final.at[node_ids].set(lid_u)
             dest, cand = build_mod._reverse_pairs(
                 ids_np, np.asarray(rows), cfg.reverse_cap
             )

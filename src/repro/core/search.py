@@ -42,6 +42,50 @@ class SearchStats:
         return SearchStats(hops=self.hops.mean(), dist_evals=self.dist_evals.mean())
 
 
+@dataclasses.dataclass(frozen=True)
+class AdaptiveBeamBudget:
+    """Serve-time configuration of Prop. 4.2's per-query budget law.
+
+    The engine runs a short *probe* phase at ``l_min`` width, estimates each
+    query's LID from the probe beam's own candidate distances
+    (:func:`repro.core.lid.online_lid` — no brute-force k-NN pre-pass), maps
+    it to a budget ``L(q) = C * exp(lam * (LID(q) - center))`` clipped to
+    [l_min, l_max], and *continues* the same search (warm state, no repeated
+    hops) with a per-query frontier budget and hop limit.
+
+    Attributes:
+      l_min / l_max: operational beam range; the physical beam is ``l_max``
+        wide (fixed shape — one compiled program for every budget).
+      lam:         budget-law exponent (0 disables adaptivity at l_mid).
+      lid_k:       neighbourhood size for the online LID estimate.
+      probe_hops:  hops spent in the probe phase before budgets are set.
+      hop_factor:  per-query hop limit = probe_hops + hop_factor * budget.
+      center:      LID normalisation center; None -> batch mean (self
+        normalising — robust to the ADC-vs-exact distance scale difference).
+    """
+
+    l_min: int
+    l_max: int
+    lam: float = 0.15
+    lid_k: int = 16
+    probe_hops: int = 8
+    hop_factor: int = 4
+    center: float | None = None
+
+    def __post_init__(self):
+        assert 0 < self.l_min <= self.l_max, (self.l_min, self.l_max)
+        assert self.probe_hops >= 1 and self.hop_factor >= 1
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class AdaptiveStats:
+    """Per-query adaptivity diagnostics returned by the adaptive engine."""
+
+    q_lid: Array    # (Q,) online LID estimate from the probe beam
+    budget: Array   # (Q,) int32 beam budget actually granted
+
+
 def _beam_merge(
     beam_ids, beam_d, beam_exp, new_ids, new_d, beam_width
 ):
@@ -53,27 +97,11 @@ def _beam_merge(
     return cat_ids[order], cat_d[order], cat_exp[order]
 
 
-def _search_one(
-    query_ctx: Array,
-    adj: Array,
-    entry: Array,
-    eval_dists: DistEval,
-    n: int,
-    beam_width: int,
-    max_hops: int,
-) -> tuple[Array, Array, SearchStats]:
-    """Beam search for a single query context; vmap over the batch.
-
-    The visited set is a *bit-packed* uint32 array (n/32 words): 8x less
-    working-set memory and HBM traffic than a bool mask — at billion-scale
-    shards (3.9M points/device, 128-query chunks) this is the difference
-    between a 500 MB and a 62 MB visited buffer (§Perf, mcgi serve cells).
-    Requires duplicate-free adjacency rows (the pruner dedups; random init
-    graphs are dedup'd at construction).
-    """
-    r = adj.shape[1]
+def _init_state(query_ctx: Array, entry: Array, eval_dists: DistEval,
+                n: int, beam_width: int):
+    """Fresh search state for one query: entry node in the beam, visited set
+    seeded. State tuple: (beam_ids, beam_d, beam_exp, visited, hops, evals)."""
     nw = (n + 31) // 32
-
     entry_d = eval_dists(query_ctx, entry[None], jnp.ones((1,), dtype=bool))[0]
     beam_ids = jnp.full((beam_width,), INVALID, dtype=jnp.int32).at[0].set(entry)
     beam_d = jnp.full((beam_width,), jnp.inf, dtype=jnp.float32).at[0].set(entry_d)
@@ -81,16 +109,44 @@ def _search_one(
     visited = jnp.zeros((nw,), dtype=jnp.uint32).at[entry >> 5].set(
         jnp.uint32(1) << (entry.astype(jnp.uint32) & 31)
     )
+    return beam_ids, beam_d, beam_exp, visited, jnp.int32(0), jnp.int32(0)
+
+
+def _run_search(
+    state,
+    query_ctx: Array,
+    adj: Array,
+    eval_dists: DistEval,
+    beam_width: int,
+    hop_limit: Array,
+    budget: Array | None = None,
+):
+    """Advance one query's beam search until its frontier closes.
+
+    The physical beam is fixed-shape ``(beam_width,)``; ``budget`` (a traced
+    per-query scalar) restricts the *active frontier* to the best ``budget``
+    slots — the per-query knob of the adaptive engine. Because the beam is
+    kept sorted by the merge, budget-b convergence is exactly beam-width-b
+    search (with a slightly richer candidate pool retained for the final
+    top-k). ``hop_limit`` is likewise a traced scalar, so vmapped batches
+    retire work lane-by-lane as queries converge: a converged lane's cond is
+    False, its state freezes, and its hop counter (== slow-tier I/O) stops —
+    easy queries stop paying for hard ones.
+    """
+    slot = jnp.arange(beam_width)
+    in_budget = (slot < budget) if budget is not None else jnp.ones(
+        (beam_width,), dtype=bool)
 
     def cond(state):
-        _, _, beam_exp, _, hops, _ = state
-        frontier_open = jnp.any((~beam_exp) & (state[0] != INVALID))
-        return (hops < max_hops) & frontier_open
+        beam_ids, _, beam_exp, _, hops, _ = state
+        frontier_open = jnp.any((~beam_exp) & (beam_ids != INVALID) & in_budget)
+        return (hops < hop_limit) & frontier_open
 
     def body(state):
         beam_ids, beam_d, beam_exp, visited, hops, evals = state
-        # Closest unexpanded beam entry.
-        cand_d = jnp.where(beam_exp | (beam_ids == INVALID), jnp.inf, beam_d)
+        # Closest unexpanded beam entry within the active budget.
+        cand_d = jnp.where(
+            beam_exp | (beam_ids == INVALID) | (~in_budget), jnp.inf, beam_d)
         j = jnp.argmin(cand_d)
         u = beam_ids[j]
         beam_exp = beam_exp.at[j].set(True)
@@ -113,11 +169,93 @@ def _search_one(
         )
         return beam_ids, beam_d, beam_exp, visited, hops + 1, evals + valid.sum()
 
-    state = (beam_ids, beam_d, beam_exp, visited, jnp.int32(0), jnp.int32(0))
-    beam_ids, beam_d, beam_exp, visited, hops, evals = jax.lax.while_loop(
-        cond, body, state
+    return jax.lax.while_loop(cond, body, state)
+
+
+def _search_one(
+    query_ctx: Array,
+    adj: Array,
+    entry: Array,
+    eval_dists: DistEval,
+    n: int,
+    beam_width: int,
+    max_hops: int,
+) -> tuple[Array, Array, SearchStats]:
+    """Beam search for a single query context; vmap over the batch.
+
+    The visited set is a *bit-packed* uint32 array (n/32 words): 8x less
+    working-set memory and HBM traffic than a bool mask — at billion-scale
+    shards (3.9M points/device, 128-query chunks) this is the difference
+    between a 500 MB and a 62 MB visited buffer (§Perf, mcgi serve cells).
+    Requires duplicate-free adjacency rows (the pruner dedups; random init
+    graphs are dedup'd at construction).
+    """
+    state = _init_state(query_ctx, entry, eval_dists, n, beam_width)
+    beam_ids, beam_d, _, _, hops, evals = _run_search(
+        state, query_ctx, adj, eval_dists, beam_width,
+        hop_limit=jnp.int32(max_hops),
     )
     return beam_ids, beam_d, SearchStats(hops=hops, dist_evals=evals)
+
+
+def adaptive_search_batch(
+    ctxs: Array,
+    adj: Array,
+    entry: Array,
+    eval_dists: DistEval,
+    n: int,
+    budget_cfg: AdaptiveBeamBudget,
+    max_hops: int | None = None,
+) -> tuple[Array, Array, SearchStats, AdaptiveStats]:
+    """The per-query adaptive-beam engine (Prop. 4.2 deployed in-graph).
+
+    Three phases, one compiled program, no host round-trip:
+      1. *probe*   — every query walks ``probe_hops`` hops at ``l_min``
+         frontier budget, filling the (fixed-shape, ``l_max``-wide) beam;
+      2. *budget*  — each query's LID is estimated from the probe beam's own
+         candidate distances (``lid.online_lid``; no brute-force k-NN
+         pre-pass) and mapped to ``L(q)`` by ``mapping.adaptive_beam_budget``;
+      3. *continue* — the same search states resume (warm beam + visited set,
+         no repeated hops) with per-query frontier budgets and hop limits.
+
+    Returns (beam_ids, beam_d, stats, adaptive_stats); hops in ``stats``
+    count probe + continuation. ``max_hops``, when given, caps every
+    per-query hop limit — an operator's latency SLO outranks the budget law.
+    """
+    from repro.core import lid as lid_mod
+    from repro.core import mapping as mapping_mod
+
+    l_max = budget_cfg.l_max
+
+    def probe_one(c):
+        state = _init_state(c, entry, eval_dists, n, l_max)
+        return _run_search(
+            state, c, adj, eval_dists, l_max,
+            hop_limit=jnp.int32(budget_cfg.probe_hops),
+            budget=jnp.int32(budget_cfg.l_min),
+        )
+
+    probe_state = jax.vmap(probe_one)(ctxs)
+    p_ids, p_d = probe_state[0], probe_state[1]
+    d_pool = jnp.where(p_ids == INVALID, jnp.inf, p_d)
+    q_lid = lid_mod.online_lid(d_pool, k=min(budget_cfg.lid_k, l_max))
+    center = (jnp.float32(budget_cfg.center)
+              if budget_cfg.center is not None else jnp.mean(q_lid))
+    budgets = mapping_mod.adaptive_beam_budget(
+        q_lid, budget_cfg.lam, budget_cfg.l_min, budget_cfg.l_max, mu=center)
+    hop_limits = (jnp.int32(budget_cfg.probe_hops)
+                  + jnp.int32(budget_cfg.hop_factor) * budgets)
+    if max_hops is not None:
+        hop_limits = jnp.minimum(hop_limits, jnp.int32(max_hops))
+
+    def continue_one(state, c, b, h):
+        return _run_search(state, c, adj, eval_dists, l_max,
+                           hop_limit=h, budget=b)
+
+    beam_ids, beam_d, _, _, hops, evals = jax.vmap(continue_one)(
+        probe_state, ctxs, budgets, hop_limits)
+    return (beam_ids, beam_d, SearchStats(hops=hops, dist_evals=evals),
+            AdaptiveStats(q_lid=q_lid, budget=budgets))
 
 
 @functools.partial(
@@ -203,18 +341,85 @@ def beam_search_pq(
     beam_ids, beam_d, stats = jax.vmap(run)(luts)
 
     if rerank:
-        safe = jnp.maximum(beam_ids, 0)
-        vecs = x_slow[safe]  # (Q, L, D) — the batched slow-tier read
-        diff = vecs - queries[:, None, :]
-        d2 = jnp.sum(diff * diff, axis=-1)
-        d2 = jnp.where(beam_ids == INVALID, jnp.inf, d2)
-        order = jnp.argsort(d2, axis=-1)[:, :k]
-        return (
-            jnp.take_along_axis(beam_ids, order, axis=1),
-            jnp.take_along_axis(d2, order, axis=1),
-            stats,
-        )
+        ids, d2 = _rerank_slow_tier(beam_ids, x_slow, queries, k)
+        return ids, d2, stats
     return beam_ids[:, :k], beam_d[:, :k], stats
+
+
+def _rerank_slow_tier(beam_ids, x_slow, queries, k):
+    """Full-precision re-rank of the final beam (one batched slow-tier read)."""
+    safe = jnp.maximum(beam_ids, 0)
+    vecs = x_slow[safe]  # (Q, L, D) — the batched slow-tier read
+    diff = vecs - queries[:, None, :]
+    d2 = jnp.sum(diff * diff, axis=-1)
+    d2 = jnp.where(beam_ids == INVALID, jnp.inf, d2)
+    order = jnp.argsort(d2, axis=-1)[:, :k]
+    return (
+        jnp.take_along_axis(beam_ids, order, axis=1),
+        jnp.take_along_axis(d2, order, axis=1),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("budget_cfg", "k"))
+def beam_search_exact_adaptive(
+    x: Array,
+    adj: Array,
+    queries: Array,
+    entry: Array,
+    budget_cfg: AdaptiveBeamBudget,
+    k: int = 10,
+) -> tuple[Array, Array, SearchStats, AdaptiveStats]:
+    """Exact-distance adaptive-beam search (probe -> budget -> continue).
+
+    Per-query counterpart of :func:`beam_search_exact`: the frontier budget is
+    ``L(q)`` from the probe-phase LID estimate instead of a fixed
+    ``beam_width``. Returns (ids, d2, stats, adaptive_stats).
+    """
+    n = x.shape[0]
+
+    def eval_dists(q, ids, valid):
+        vecs = x[ids]
+        diff = vecs - q[None, :]
+        return jnp.sum(diff * diff, axis=-1)
+
+    beam_ids, beam_d, stats, astats = adaptive_search_batch(
+        queries, adj, entry, eval_dists, n, budget_cfg)
+    return beam_ids[:, :k], beam_d[:, :k], stats, astats
+
+
+@functools.partial(jax.jit, static_argnames=("budget_cfg", "k", "rerank"))
+def beam_search_pq_adaptive(
+    codes: Array,
+    luts: Array,
+    x_slow: Array,
+    adj: Array,
+    queries: Array,
+    entry: Array,
+    budget_cfg: AdaptiveBeamBudget,
+    k: int = 10,
+    rerank: bool = True,
+) -> tuple[Array, Array, SearchStats, AdaptiveStats]:
+    """PQ-routed adaptive-beam search + optional full-precision re-rank.
+
+    The probe-phase LID is estimated from ADC distances — the same values
+    that steer the walk — so the budget decision adds zero extra slow-tier
+    reads. Shapes as in :func:`beam_search_pq`.
+    """
+    n = codes.shape[0]
+
+    def eval_dists(lut, ids, valid):
+        c = codes[ids].astype(jnp.int32)
+        m = lut.shape[0]
+        gathered = jax.vmap(lambda row: lut[jnp.arange(m), row])(c)
+        return gathered.sum(axis=-1)
+
+    beam_ids, beam_d, stats, astats = adaptive_search_batch(
+        luts, adj, entry, eval_dists, n, budget_cfg)
+
+    if rerank:
+        ids, d2 = _rerank_slow_tier(beam_ids, x_slow, queries, k)
+        return ids, d2, stats, astats
+    return beam_ids[:, :k], beam_d[:, :k], stats, astats
 
 
 def medoid(x: Array) -> Array:

@@ -1,5 +1,7 @@
 from repro.distributed.sharded_search import (  # noqa: F401
     ShardedIndexSpecs,
     distributed_search,
+    make_distributed_search,
+    shard_medoids,
     sharded_index_specs,
 )

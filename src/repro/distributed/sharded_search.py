@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.core import search as search_mod
 
 Array = jax.Array
@@ -45,6 +46,7 @@ class ShardedIndexSpecs:
     centroids: jax.ShapeDtypeStruct
     queries: jax.ShapeDtypeStruct
     shard_ok: jax.ShapeDtypeStruct
+    entries: jax.ShapeDtypeStruct
 
 
 def _shard_axes(mesh) -> tuple[str, ...]:
@@ -76,17 +78,27 @@ def sharded_index_specs(
         ),
         queries=jax.ShapeDtypeStruct((n_queries, d), jnp.float32, sharding=repl),
         shard_ok=jax.ShapeDtypeStruct((n_shards,), jnp.bool_, sharding=row),
+        entries=jax.ShapeDtypeStruct((n_shards,), jnp.int32, sharding=row),
     )
 
 
 def _local_search(
-    adj, codes, vectors, centroids, queries, *,
+    adj, codes, vectors, centroids, queries, entry, *,
     beam_width: int, max_hops: int, k: int, query_chunk: int, use_pq: bool,
+    beam_budget: search_mod.AdaptiveBeamBudget | None = None,
 ):
     """Per-shard search over the local sub-graph. Returns (d2, local_ids)
-    each (Q, k)."""
+    each (Q, k).
+
+    ``entry`` is the shard's own entry point (its local medoid, computed at
+    index-build time and threaded through :class:`ShardedIndexSpecs`). With
+    ``beam_budget`` set, the shard runs the adaptive engine: each query's
+    budget is computed *on this shard* from its local probe beam (shard
+    geometry differs, so budgets legitimately differ per shard) and the
+    per-shard top-k are merged exactly as in the fixed-beam path.
+    """
     n_local = adj.shape[0]
-    entry = jnp.int32(0)  # per-shard entry point (medoid of the shard)
+    entry = entry.astype(jnp.int32)
 
     if use_pq:
         from repro.pq.adc import build_lut
@@ -116,7 +128,14 @@ def _local_search(
 
     def chunk_fn(args):
         ctx_chunk, q_chunk = args
-        beam_ids, beam_d, _ = jax.vmap(run)(ctx_chunk)
+        if beam_budget is not None:
+            # max_hops still caps every per-query hop limit: enabling
+            # adaptivity must not silently exceed the operator's I/O SLO.
+            beam_ids, beam_d, _, _ = search_mod.adaptive_search_batch(
+                ctx_chunk, adj, entry, eval_dists, n_local, beam_budget,
+                max_hops=max_hops)
+        else:
+            beam_ids, beam_d, _ = jax.vmap(run)(ctx_chunk)
         # Local exact rerank from the shard's own full-precision rows (the
         # "disk read" happens on the shard that owns the node).
         safe = jnp.maximum(beam_ids, 0)
@@ -147,14 +166,25 @@ def make_distributed_search(
     query_chunk: int = 128,
     use_pq: bool = True,
     merge: str = "hierarchical",
+    beam_budget: search_mod.AdaptiveBeamBudget | None = None,
 ):
     """Builds the jit-able sharded search step for ``mesh``.
 
-    step(adj, codes, vectors, centroids, queries, shard_ok)
+    step(adj, codes, vectors, centroids, queries, shard_ok, entries)
       -> (d2 (Q, k), shard_id (Q, k), local_id (Q, k))
+
+    ``entries`` is the (n_shards,) array of per-shard entry points (local
+    medoids), sharded one per device like ``shard_ok``.
 
     Global ids are returned as (shard, local_id) pairs — billion-scale ids
     exceed int32 when flattened.
+
+    beam_budget:
+      None runs every query at the fixed ``beam_width``; an
+      :class:`repro.core.search.AdaptiveBeamBudget` switches each shard to
+      the per-query adaptive engine (probe -> online LID -> budget ->
+      continue). Budgets are computed per shard from the shard's own probe
+      beam; the global merge is unchanged.
 
     merge:
       * "flat"          — one all_gather over every axis at once, then one
@@ -167,12 +197,14 @@ def make_distributed_search(
     """
     axes = _shard_axes(mesh)
 
-    def step(adj, codes, vectors, centroids, queries, shard_ok):
-        def shard_fn(adj_l, codes_l, vectors_l, centroids_l, queries_l, ok_l):
+    def step(adj, codes, vectors, centroids, queries, shard_ok, entries):
+        def shard_fn(adj_l, codes_l, vectors_l, centroids_l, queries_l, ok_l,
+                     entry_l):
             d2, ids = _local_search(
-                adj_l, codes_l, vectors_l, centroids_l, queries_l,
+                adj_l, codes_l, vectors_l, centroids_l, queries_l, entry_l[0],
                 beam_width=beam_width, max_hops=max_hops, k=k,
                 query_chunk=query_chunk, use_pq=use_pq,
+                beam_budget=beam_budget,
             )
             # Hedged-read mask: a late/dead shard contributes nothing.
             d2 = jnp.where(ok_l[0], d2, jnp.inf)
@@ -240,22 +272,43 @@ def make_distributed_search(
             P(),            # centroids
             P(),            # queries
             P(axes),        # shard_ok (1 flag per shard)
+            P(axes),        # entries  (1 entry point per shard)
         )
-        return jax.shard_map(
+        return compat.shard_map(
             shard_fn, mesh=mesh, in_specs=specs_in,
-            out_specs=(P(), P(), P()), check_vma=False,
-        )(adj, codes, vectors, centroids, queries, shard_ok)
+            out_specs=(P(), P(), P()),
+        )(adj, codes, vectors, centroids, queries, shard_ok, entries)
 
     return step
 
 
+def shard_medoids(vectors: Array, n_shards: int) -> Array:
+    """Per-shard entry points: the local medoid of each shard's rows.
+
+    ``vectors`` is shard-major (shard s owns rows [s*per, (s+1)*per)) —
+    the layout ``distributed_search`` already requires.
+    """
+    per = vectors.shape[0] // n_shards
+    blocks = vectors[: per * n_shards].reshape(n_shards, per, -1)
+    return jax.vmap(search_mod.medoid)(blocks)
+
+
 def distributed_search(mesh, index_arrays, queries, shard_ok=None, **kw):
     """Convenience eager entry (tests, examples): index_arrays is a dict with
-    adj/codes/vectors/centroids already laid out shard-major."""
+    adj/codes/vectors/centroids (optionally entries) laid out shard-major.
+
+    When ``entries`` is absent the per-shard medoids are recomputed here on
+    *every call* — an O(N·D) scan. Production callers should compute them
+    once at index-build time and put them in the dict.
+    """
     step = make_distributed_search(mesh, **kw)
+    n_shards = mesh.devices.size
     if shard_ok is None:
-        shard_ok = jnp.ones((mesh.devices.size,), jnp.bool_)
+        shard_ok = jnp.ones((n_shards,), jnp.bool_)
+    entries = index_arrays.get("entries")
+    if entries is None:
+        entries = shard_medoids(index_arrays["vectors"], n_shards)
     return step(
         index_arrays["adj"], index_arrays["codes"], index_arrays["vectors"],
-        index_arrays["centroids"], queries, shard_ok,
+        index_arrays["centroids"], queries, shard_ok, entries,
     )

@@ -1,2 +1,8 @@
-from repro.index.disk import DiskTierModel, TieredIndex, build_tiered_index  # noqa: F401
+from repro.index.disk import (  # noqa: F401
+    DiskTierModel,
+    TieredIndex,
+    build_tiered_index,
+    search_tiered,
+    search_tiered_adaptive,
+)
 from repro.index.serializer import load_index, save_index  # noqa: F401

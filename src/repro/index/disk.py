@@ -41,15 +41,19 @@ class DiskTierModel:
     read_latency_us: float = 90.0
     queue_depth: int = 8
 
-    def latency_us(self, reads: Array) -> Array:
-        """Modelled wall time for ``reads`` sequential beam expansions.
+    def latency_us(self, reads: Array, rerank_reads: Array | int = 0) -> Array:
+        """Modelled wall time for ``reads`` sequential beam expansions plus an
+        optional final rerank batch of ``rerank_reads`` node fetches.
 
         Each expansion is a dependent read (graph traversal is a pointer
-        chase); within one expansion, the R neighbour *code* lookups are fast
-        tier. The final rerank batch reads ``beam`` nodes at queue_depth
-        parallelism — folded into the per-read constant.
+        chase), so the ``reads`` term is serial. The rerank batch has no
+        dependencies, so its reads are issued ``queue_depth`` at a time:
+        ceil(rerank_reads / queue_depth) serialised rounds.
         """
-        return reads.astype(jnp.float32) * self.read_latency_us
+        serial = reads.astype(jnp.float32) * self.read_latency_us
+        rerank_reads = jnp.asarray(rerank_reads, jnp.float32)
+        rounds = jnp.ceil(rerank_reads / max(self.queue_depth, 1))
+        return serial + rounds * self.read_latency_us
 
 
 @jax.tree_util.register_dataclass
@@ -99,12 +103,39 @@ def search_tiered(
     rerank: bool = True,
 ) -> tuple[Array, Array, search_mod.SearchStats]:
     """PQ-routed beam search with slow-tier rerank (the deployed path)."""
-    d_book = index.codebook.m * index.codebook.dsub
-    q_pq = (jnp.pad(queries, ((0, 0), (0, d_book - queries.shape[1])))
-            if queries.shape[1] < d_book else queries)
-    luts = build_lut(q_pq, index.codebook.centroids)
+    luts = _query_luts(index, queries)
     return search_mod.beam_search_pq(
         index.codes, luts, index.vectors, index.graph.adj, queries,
         index.graph.entry, beam_width=beam_width, max_hops=max_hops,
         k=k, rerank=rerank,
     )
+
+
+def search_tiered_adaptive(
+    index: TieredIndex,
+    queries: Array,
+    budget_cfg: search_mod.AdaptiveBeamBudget,
+    k: int = 10,
+    rerank: bool = True,
+) -> tuple[Array, Array, search_mod.SearchStats, search_mod.AdaptiveStats]:
+    """Per-query adaptive-beam serving path (Prop. 4.2 in the engine).
+
+    Same tiers and cost model as :func:`search_tiered`, but each query's beam
+    budget is set from its own probe-phase LID estimate — easy queries retire
+    early and stop paying slow-tier reads for the hard ones. Returns
+    (ids, d2, stats, adaptive_stats); ``adaptive_stats`` carries the
+    per-query LID and granted budget for observability.
+    """
+    luts = _query_luts(index, queries)
+    return search_mod.beam_search_pq_adaptive(
+        index.codes, luts, index.vectors, index.graph.adj, queries,
+        index.graph.entry, budget_cfg=budget_cfg, k=k, rerank=rerank,
+    )
+
+
+def _query_luts(index: TieredIndex, queries: Array) -> Array:
+    """Per-query ADC LUTs, zero-padding queries to the PQ-padded dim."""
+    d_book = index.codebook.m * index.codebook.dsub
+    q_pq = (jnp.pad(queries, ((0, 0), (0, d_book - queries.shape[1])))
+            if queries.shape[1] < d_book else queries)
+    return build_lut(q_pq, index.codebook.centroids)

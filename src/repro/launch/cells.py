@@ -341,7 +341,7 @@ def _mcgi_cell(spec: cfg_base.ArchSpec, cell: cfg_base.ShapeCell, mesh,
         use_pq=cfg.m_pq is not None,
     )
     args = (specs.adj, specs.codes, specs.vectors, specs.centroids,
-            specs.queries, specs.shard_ok)
+            specs.queries, specs.shard_ok, specs.entries)
     return Cell(spec.arch_id, cell.name, step, args)
 
 

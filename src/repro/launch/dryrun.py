@@ -44,7 +44,9 @@ def _measure(cell):
     t0 = time.time()
     compiled = cell.lower().compile()
     t_compile = time.time() - t0
-    cost = compiled.cost_analysis() or {}
+    from repro import compat
+
+    cost = compat.cost_analysis(compiled)
     coll = hlo_analysis.collective_bytes(compiled.as_text())
     metrics = {
         "flops": float(cost.get("flops", 0.0)),

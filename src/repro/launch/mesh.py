@@ -12,24 +12,18 @@ Axis semantics:
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
-    )
+    return compat.make_mesh(shape, axes)
 
 
 def make_host_mesh(n_data: int = 2, n_model: int = 4):
     """Small mesh for CPU tests (requires >= n_data*n_model host devices)."""
-    return jax.make_mesh(
-        (n_data, n_model), ("data", "model"),
-        axis_types=(AxisType.Auto, AxisType.Auto),
-    )
+    return compat.make_mesh((n_data, n_model), ("data", "model"))
 
 
 def dp_axes(mesh) -> tuple[str, ...]:

@@ -3,7 +3,12 @@ queries, reporting the paper's operational metrics (QPS, recall if ground
 truth is available, I/O per query, modelled SSD latency).
 
     PYTHONPATH=src python -m repro.launch.serve --dataset tiny-mixture \
-        --beam 48 --batch 64 --num-batches 20 [--index PATH] [--online]
+        --beam 48 --batch 64 --num-batches 20 [--index PATH] [--online] \
+        [--adaptive [--l-min 16] [--l-max 64] [--lam 0.35]]
+
+``--adaptive`` switches to the per-query adaptive-beam engine
+(Prop. 4.2 deployed): each query's budget is set from its probe-phase LID,
+so easy queries stop paying slow-tier reads for hard ones.
 """
 from __future__ import annotations
 
@@ -28,12 +33,19 @@ def main() -> None:
                     help="build with Online-MCGI (Algorithm 2)")
     ap.add_argument("--vamana", action="store_true",
                     help="baseline build (static alpha=1.2)")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="per-query adaptive beam budgets (Prop. 4.2)")
+    ap.add_argument("--l-min", type=int, default=16)
+    ap.add_argument("--l-max", type=int, default=None,
+                    help="adaptive budget ceiling (default: --beam)")
+    ap.add_argument("--lam", type=float, default=0.35)
     args = ap.parse_args()
 
-    from repro.core import build, distance, online
+    from repro.core import build, distance, online, search
     from repro.data import make_dataset
     from repro.index import build_tiered_index, load_index, save_index
-    from repro.index.disk import DiskTierModel, search_tiered
+    from repro.index.disk import (DiskTierModel, search_tiered,
+                                  search_tiered_adaptive)
 
     x, queries = make_dataset(args.dataset, seed=0)
     import pathlib
@@ -60,29 +72,50 @@ def main() -> None:
     gt_d, gt_i = distance.brute_force_topk(queries, x, k=args.k)
     model = DiskTierModel()
 
+    if args.adaptive:
+        l_max = args.l_max or args.beam
+        budget_cfg = search.AdaptiveBeamBudget(
+            l_min=min(args.l_min, l_max), l_max=l_max, lam=args.lam)
+        rerank_batch = budget_cfg.l_max
+
+        def run(qb):
+            ids, d2, stats, astats = search_tiered_adaptive(
+                index, qb, budget_cfg, k=args.k)
+            return ids, stats, astats
+    else:
+        rerank_batch = args.beam
+
+        def run(qb):
+            ids, d2, stats = search_tiered(index, qb, beam_width=args.beam,
+                                           k=args.k)
+            return ids, stats, None
+
     # Warmup compile.
-    _ = search_tiered(index, queries[: args.batch], beam_width=args.beam,
-                      k=args.k)
-    lat_ms, recalls, ios = [], [], []
+    _ = run(queries[: args.batch])
+    lat_ms, recalls, ios, budgets = [], [], [], []
     rng = np.random.default_rng(0)
     t_all = time.time()
     for i in range(args.num_batches):
         sel = rng.integers(0, queries.shape[0], args.batch)
         qb = queries[sel]
         t0 = time.time()
-        ids, d2, stats = search_tiered(index, qb, beam_width=args.beam,
-                                       k=args.k)
+        ids, stats, astats = run(qb)
         jax.block_until_ready(ids)
         lat_ms.append((time.time() - t0) * 1e3)
         recalls.append(float(distance.recall_at_k(ids, gt_i[sel])))
         ios.append(float(stats.hops.mean()))
+        if astats is not None:
+            budgets.append(float(astats.budget.mean()))
     total = time.time() - t_all
     qps = args.batch * args.num_batches / total
+    ssd_ms = float(model.latency_us(
+        jnp.float32(np.mean(ios)), rerank_reads=rerank_batch)) / 1e3
+    extra = f"meanL={np.mean(budgets):.1f} " if budgets else ""
     print(f"[serve] recall@{args.k}={np.mean(recalls):.4f} qps={qps:.1f} "
-          f"io/query={np.mean(ios):.1f} "
+          f"io/query={np.mean(ios):.1f} {extra}"
           f"batch_lat p50={np.percentile(lat_ms,50):.1f}ms "
           f"p99={np.percentile(lat_ms,99):.1f}ms "
-          f"ssd_model={np.mean(ios)*model.read_latency_us/1e3:.2f}ms/query")
+          f"ssd_model={ssd_ms:.2f}ms/query")
 
 
 if __name__ == "__main__":

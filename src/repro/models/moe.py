@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.models.layers import ShardCtx, constrain, dense_init
 
 Array = jax.Array
@@ -186,9 +187,9 @@ def moe_apply_expert_parallel(
         P(tp, None, None),
         P(tp, None, None),
     )
-    out, aux = jax.shard_map(
+    out, aux = compat.shard_map(
         fn, mesh=mesh, in_specs=in_specs,
-        out_specs=(P(dp, tp, None), P()), check_vma=False,
+        out_specs=(P(dp, tp, None), P()),
     )(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
 
     if cfg.n_shared:

@@ -17,11 +17,13 @@ import sys  # noqa: E402
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro import compat  # noqa: E402
 
 
 def make_mesh(shape=(2, 4), names=("data", "model")):
-    return jax.make_mesh(shape, names, axis_types=(AxisType.Auto,) * len(shape))
+    return compat.make_mesh(shape, names)
 
 
 def scenario_sharded_search():
@@ -219,7 +221,7 @@ def scenario_cells_lower():
                         ("mcgi-gist1m", "serve")]:
         cell = cells_mod.build_cell(arch, shape, mesh, smoke=True)
         compiled = cell.lower().compile()
-        cost = compiled.cost_analysis() or {}
+        cost = compat.cost_analysis(compiled)
         results[f"{arch}/{shape}"] = cost.get("flops", 0) > 0
     print(json.dumps(results))
 

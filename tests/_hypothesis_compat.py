@@ -1,0 +1,88 @@
+"""Property-test shim: real hypothesis when installed, a deterministic
+sampler otherwise.
+
+The tier-1 suite must collect and run on a clean environment (no
+``pip install``), so the property tests in test_mapping.py / test_prune.py
+import ``given``/``settings``/``st`` from here. With hypothesis present they
+are the real thing (shrinking, example database, the works); without it, a
+small deterministic fallback draws a fixed number of seeded examples from
+the same strategy expressions — weaker, but the properties still execute.
+
+Only the strategy surface those two files use is implemented: ``floats``,
+``integers``, ``lists``.
+"""
+from __future__ import annotations
+
+import functools
+
+try:
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import inspect
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_EXAMPLES = 50
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class _St:
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            lo, hi = float(min_value), float(max_value)
+
+            def draw(rng):
+                # Hit the boundaries sometimes — that's where clipping and
+                # degenerate-variance behaviour lives.
+                r = rng.random()
+                if r < 0.05:
+                    return lo
+                if r < 0.10:
+                    return hi
+                return float(rng.uniform(lo, hi))
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                size = int(rng.integers(min_size, max_size + 1))
+                return [elements.draw(rng) for _ in range(size)]
+
+            return _Strategy(draw)
+
+    st = _St()
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                rng = np.random.default_rng(0)
+                for _ in range(_FALLBACK_EXAMPLES):
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    fn(*args, **kwargs, **drawn)
+
+            # Hide the strategy-filled parameters from pytest's fixture
+            # resolution (wraps copies __wrapped__, which inspect follows).
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+
+        return deco
+
+    def settings(**_kw):
+        return lambda fn: fn

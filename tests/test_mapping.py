@@ -1,8 +1,7 @@
 """Mapping function Phi (Eq. 8) — Props 3.5/3.6 as executable properties."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import mapping
 
