@@ -10,18 +10,27 @@ host-side bucketing, no brute-force k-NN pre-pass, no per-bucket recompiles.
 
 Reported: recall / mean I/O for (a) the fixed-L sweep, (b) the in-engine
 adaptive path — the iso-recall prediction is (b) matches the recall of some
-fixed L at strictly lower mean I/O.
+fixed L at strictly lower mean I/O — plus (c) *bucketed* vs single-ceiling
+continue-phase wall-clock: grouping queries by granted budget lets each
+bucket's vmapped while-loop stop at its own ceiling instead of every lane
+idling until the batch's slowest query, so granted budgets save real compute,
+not just counted I/O. Results are identical by construction, so the bucketed
+row is an equal-recall wall-clock comparison.
+
+``python -m benchmarks.adaptive_beam --smoke`` runs a ~30s CPU smoke of the
+bucketed path (used by CI).
 """
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks import common
-from repro.core import build, distance, search
+from repro.core import build, calibrate, distance, search
 
 FIXED_SWEEP = (16, 32, 64, 96)
 BUDGET = search.AdaptiveBeamBudget(l_min=16, l_max=96, lam=0.35,
                                    lid_k=16, probe_hops=8, hop_factor=4)
+NUM_BUCKETS = 4
 
 
 def run(csv: common.Csv, scale: str = "small"):
@@ -73,5 +82,85 @@ def run(csv: common.Csv, scale: str = "small"):
     else:
         csv.add("adaptive_beam/iso_recall", 0.0,
                 f"adaptive recall {r_adapt:.4f} exceeds every fixed L")
+
+    bucketed = bucketed_vs_unbucketed(csv, x, q, gt, idx)
+
+    # Calibration pass: fit lam to the fixed-l_max baseline's recall on a
+    # held-out sample — the transferable-knob claim (NSG-style).
+    target = min(base_r, 0.99)
+    result = calibrate.calibrate_budget_law(
+        calibrate.exact_recall_eval(x, idx.adj, idx.entry, q, gt,
+                                    sample=min(128, q.shape[0])),
+        BUDGET, target, max_iters=5)
+    csv.add("adaptive_beam/calibrated_lam", 0.0,
+            f"lam={result.lam:.4f} hop_factor={result.hop_factor} "
+            f"recall={result.recall:.4f} target={target:.4f} "
+            f"achieved={result.achieved} evals={len(result.history)}")
+
     return {"fixed": fixed, "adaptive": (r_adapt, io_adapt),
-            "baseline": (base_r, base_io)}
+            "baseline": (base_r, base_io), "bucketed": bucketed,
+            "calibration": result}
+
+
+def bucketed_vs_unbucketed(csv: common.Csv, x, q, gt, idx,
+                           budget=BUDGET, num_buckets=NUM_BUCKETS):
+    """Equal-recall wall-clock: single-ceiling vs budget-bucketed continue."""
+    (ids_u, _, stats_u, _), dt_u = common.timed(
+        lambda: search.beam_search_exact_adaptive(
+            x, idx.adj, q, idx.entry, budget, k=10))
+    (ids_b, _, stats_b, astats_b), dt_b = common.timed(
+        lambda: search.beam_search_exact_adaptive(
+            x, idx.adj, q, idx.entry, budget, k=10, num_buckets=num_buckets))
+    r_u = float(distance.recall_at_k(ids_u, gt))
+    r_b = float(distance.recall_at_k(ids_b, gt))
+    ceilings = search.budget_bucket_ceilings(
+        budget.l_min, budget.l_max, num_buckets)
+    counts = np.bincount(
+        np.asarray(search.quantize_budgets(astats_b.budget, ceilings)[0]),
+        minlength=len(ceilings))
+    csv.add("adaptive_beam/unbucketed", dt_u / q.shape[0],
+            f"recall={r_u:.4f} io={float(stats_u.hops.mean()):.1f} "
+            f"batch_wall={dt_u * 1e3:.1f}ms")
+    csv.add("adaptive_beam/bucketed", dt_b / q.shape[0],
+            f"recall={r_b:.4f} io={float(stats_b.hops.mean()):.1f} "
+            f"batch_wall={dt_b * 1e3:.1f}ms buckets="
+            + "/".join(f"L<={c}:{int(m)}" for c, m in zip(ceilings, counts)))
+    csv.add("adaptive_beam/bucket_speedup", 0.0,
+            f"wall_clock={dt_u / max(dt_b, 1e-12):.2f}x at equal recall "
+            f"(delta={r_b - r_u:+.4f})")
+    return {"unbucketed": (r_u, dt_u), "bucketed": (r_b, dt_b)}
+
+
+def smoke() -> None:
+    """~30s CPU smoke (CI): tiny graph, bucketed vs single-ceiling path."""
+    from repro.data import make_dataset
+
+    x, q = make_dataset("tiny-mixture", seed=0)
+    x, q = x[:2000], q[:64]
+    gt_d, gt = distance.brute_force_topk(q, x, k=10)
+    idx = build.build_mcgi(
+        x, build.BuildConfig(degree=16, beam_width=32, iters=1, batch=512,
+                             max_hops=64))
+    csv = common.Csv()
+    budget = search.AdaptiveBeamBudget(l_min=8, l_max=32, lam=0.35)
+    out = bucketed_vs_unbucketed(csv, x, q, gt, idx, budget=budget)
+    (r_u, _), (r_b, _) = out["unbucketed"], out["bucketed"]
+    assert abs(r_u - r_b) < 1e-6, (r_u, r_b)
+    assert r_b > 0.5, r_b
+    print(f"# smoke ok: bucketed recall={r_b:.4f} == unbucketed")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="~30s CI smoke of the bucketed path")
+    ap.add_argument("--scale", default="small", choices=("small", "paper"))
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+    else:
+        out_csv = common.Csv()
+        print("name,us_per_call,derived")
+        run(out_csv, scale=args.scale)

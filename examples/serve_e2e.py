@@ -4,6 +4,30 @@ index over ~50k vectors, then serve continuous batched query traffic through
 a request batcher, reporting recall / QPS / I-O / modelled-SSD latency live.
 
     PYTHONPATH=src python examples/serve_e2e.py [--n 50000] [--seconds 20]
+        [--adaptive [--buckets 4] [--calibrate [--recall-target 0.95]]]
+
+Calibration usage
+-----------------
+``--adaptive`` serves with per-query beam budgets (Prop. 4.2); the strength
+of the budget law, ``lam``, trades mean I/O for recall and is geometry
+dependent. Rather than hand-tuning it, pass ``--calibrate``: before traffic
+starts, ``repro.core.calibrate.calibrate_budget_law`` measures recall on a
+held-out query sample over the *deployed* two-tier path and bisects for the
+largest ``lam`` still meeting ``--recall-target`` — maximum budget-law I/O
+savings subject to the recall SLO. If even ``lam = 0`` misses the target,
+the hop budget is binding and ``hop_factor`` is doubled automatically. The
+same pass is available programmatically:
+
+    from repro.core import calibrate
+    result = calibrate.calibrate_budget_law(
+        calibrate.tiered_recall_eval(index, queries, gt_ids, k=10),
+        base_cfg, recall_target=0.95)
+    budget_cfg = result.budget_cfg(base_cfg)   # lam + hop_factor fitted
+
+``--buckets N`` additionally runs the continue phase budget-bucketed
+(queries grouped by granted budget, each bucket jitted to its own ceiling)
+— identical results, lower batch wall-clock, because converged lanes stop
+burning compute for the batch's slowest query.
 """
 import argparse
 import dataclasses
@@ -57,7 +81,18 @@ def main():
                     help="per-query adaptive beam budgets (l_min=16, "
                          "l_max=--beam)")
     ap.add_argument("--lam", type=float, default=0.35)
+    ap.add_argument("--buckets", type=int, default=0,
+                    help="budget buckets for the continue phase "
+                         "(0/1 = single-program path)")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="fit lam (and hop_factor if binding) to "
+                         "--recall-target on a held-out sample before "
+                         "serving")
+    ap.add_argument("--recall-target", type=float, default=0.95)
     args = ap.parse_args()
+    if not args.adaptive and (args.calibrate or args.buckets > 1):
+        ap.error("--calibrate/--buckets configure the adaptive engine; "
+                 "pass --adaptive as well")
 
     spec = dataclasses.replace(
         synthetic.REGISTRY["sift1b-proxy"], n=args.n, n_queries=1000)
@@ -75,9 +110,28 @@ def main():
     if args.adaptive:
         budget_cfg = AdaptiveBeamBudget(l_min=min(16, args.beam),
                                         l_max=args.beam, lam=args.lam)
-        search = jax.jit(
-            lambda q: search_tiered_adaptive(index, q, budget_cfg, k=10)[:3]
-        )
+        if args.calibrate:
+            from repro.core import calibrate
+
+            result = calibrate.calibrate_budget_law(
+                calibrate.tiered_recall_eval(index, queries, gt_ids, k=10),
+                budget_cfg, args.recall_target)
+            budget_cfg = result.budget_cfg(budget_cfg)
+            print(f"[e2e] calibrated lam={result.lam:.4f} "
+                  f"hop_factor={result.hop_factor} "
+                  f"recall={result.recall:.4f} target={result.target:.2f} "
+                  f"({'hit' if result.achieved else 'MISSED'})")
+        if args.buckets > 1:
+            # The bucketed scheduler is host-side: no outer jit (the probe
+            # and per-bucket continue calls are jitted internally).
+            num_buckets = args.buckets
+            search = lambda q: search_tiered_adaptive(
+                index, q, budget_cfg, k=10, num_buckets=num_buckets)[:3]
+        else:
+            search = jax.jit(
+                lambda q: search_tiered_adaptive(
+                    index, q, budget_cfg, k=10)[:3]
+            )
     else:
         search = jax.jit(
             lambda q: search_tiered(index, q, beam_width=args.beam, k=10)

@@ -26,14 +26,56 @@ class McgiDatasetConfig:
     l_search: int = 128
     k: int = 10
     max_hops: int = 192
+    # Adaptive budget-law serving defaults (Prop. 4.2 + calibration pass).
+    # ``lam`` values are calibrated against ``recall_target`` on held-out
+    # query samples of the matching proxy datasets
+    # (repro.core.calibrate.calibrate_budget_law); re-fit after any index
+    # build-parameter change. Higher-LID datasets (GIST/T2I mixtures) need a
+    # stronger budget spread than the near-homogeneous SIFT geometry.
+    lam: float = 0.35
+    probe_hops: int = 8
+    hop_factor: int = 4
+    recall_target: float = 0.95
+    budget_buckets: int = 4      # bucketed continue-phase execution
+
+    def beam_budget(self):
+        """The serving engine's AdaptiveBeamBudget for this dataset:
+        l_max = l_search (same worst-case quality budget as fixed-beam),
+        l_min an eighth of it (floor 8)."""
+        from repro.core.search import AdaptiveBeamBudget
+
+        return AdaptiveBeamBudget(
+            l_min=max(8, self.l_search // 8), l_max=self.l_search,
+            lam=self.lam, probe_hops=self.probe_hops,
+            hop_factor=self.hop_factor)
+
+    def calibrated_beam_budget(self, eval_recall):
+        """Re-fit this dataset's budget law against its own recall target.
+
+        ``eval_recall`` measures one candidate config on held-out queries
+        (``repro.core.calibrate.{exact,tiered}_recall_eval``); the stored
+        ``lam`` default is the seed, ``recall_target`` the constraint. Run
+        after any index build-parameter change and fold the fitted values
+        back into this config.
+        """
+        from repro.core.calibrate import calibrate_budget_law
+
+        base = self.beam_budget()
+        return calibrate_budget_law(
+            eval_recall, base, self.recall_target).budget_cfg(base)
 
 
 _DATASETS = (
-    McgiDatasetConfig("mcgi-sift1m", 1_000_000, 128, 64, 100, None, "float32"),
-    McgiDatasetConfig("mcgi-glove100", 1_200_000, 100, 64, 100, None, "float32"),
-    McgiDatasetConfig("mcgi-gist1m", 1_000_000, 960, 96, 150, None, "float32"),
-    McgiDatasetConfig("mcgi-sift1b", 1_000_000_000, 128, 32, 50, 16, "uint8"),
-    McgiDatasetConfig("mcgi-t2i1b", 1_000_000_000, 200, 32, 50, 16, "float32"),
+    McgiDatasetConfig("mcgi-sift1m", 1_000_000, 128, 64, 100, None, "float32",
+                      lam=0.25),
+    McgiDatasetConfig("mcgi-glove100", 1_200_000, 100, 64, 100, None,
+                      "float32", lam=0.3),
+    McgiDatasetConfig("mcgi-gist1m", 1_000_000, 960, 96, 150, None, "float32",
+                      lam=0.5),
+    McgiDatasetConfig("mcgi-sift1b", 1_000_000_000, 128, 32, 50, 16, "uint8",
+                      lam=0.25),
+    McgiDatasetConfig("mcgi-t2i1b", 1_000_000_000, 200, 32, 50, 16, "float32",
+                      lam=0.45),
 )
 
 

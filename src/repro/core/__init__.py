@@ -7,12 +7,17 @@ Public surface:
   * Offline build (Algorithm 1)       — :mod:`repro.core.build`
   * Online build  (Algorithm 2)       — :mod:`repro.core.online`
   * Batched beam search (exact / PQ)  — :mod:`repro.core.search`
+  * Budget-law calibration (lam fit)  — :mod:`repro.core.calibrate`
   * Baselines: Vamana / IVF / HNSW    — build.py / ivf.py / hnsw.py
   * Theory oracles (Prop. 4.3)        — :mod:`repro.core.theory`
+
+NOTE: ``repro.core.calibrate`` is the calibration *module*; the LID
+population-stats helper formerly re-exported here under that name lives at
+:func:`repro.core.lid.calibrate`.
 """
 from repro.core.build import BuildConfig, build_mcgi, build_vamana  # noqa: F401
 from repro.core.distance import brute_force_topk, knn_graph, recall_at_k  # noqa: F401
-from repro.core.lid import LidProfile, calibrate, estimate_dataset_lid, lid_from_dists  # noqa: F401
+from repro.core.lid import LidProfile, estimate_dataset_lid, lid_from_dists  # noqa: F401
 from repro.core.mapping import ALPHA_MAX, ALPHA_MIN, AlphaMapping, phi  # noqa: F401
 from repro.core.online import build_online_mcgi  # noqa: F401
 from repro.core.search import (  # noqa: F401
@@ -23,6 +28,13 @@ from repro.core.search import (  # noqa: F401
     beam_search_exact_adaptive,
     beam_search_pq,
     beam_search_pq_adaptive,
+    budget_bucket_ceilings,
     medoid,
 )
 from repro.core.types import GraphIndex  # noqa: F401
+from repro.core.calibrate import (  # noqa: F401
+    CalibrationResult,
+    calibrate_budget_law,
+    exact_recall_eval,
+    tiered_recall_eval,
+)

@@ -1,0 +1,252 @@
+"""Budget-law calibration: fit ``lam`` (and optionally ``hop_factor``) to a
+recall target on a held-out query sample.
+
+MCGI's Prop. 4.2 gives the *shape* of the per-query budget law
+(L(q) ∝ exp(lam * LID(q))) but not its strength: ``lam`` trades mean I/O for
+recall, and the right value is dataset geometry dependent. Following NSG's
+treatment of its search parameter, the single knob is made transferable by
+calibrating it against an operational recall target instead of hand-tuning
+per dataset.
+
+Monotonicity makes this a bisection, not a grid search: with the budget
+center at the batch-mean LID, ``lam = 0`` serves every query at the
+geometric-mean budget, and raising ``lam`` spreads budgets apart —
+below-average-LID queries shrink toward ``l_min`` (that's where the I/O
+savings come from) while above-average ones grow toward ``l_max``. Measured
+recall on a fixed sample is (noisily but reliably) monotone *non-increasing*
+in ``lam``: the saturated hard queries gain little from the extra headroom,
+while the shrunk easy lanes are where recall pressure appears. The
+calibrated value is therefore the **largest** ``lam`` that still meets the
+target — maximum budget-law savings subject to the recall SLO — found in
+O(log(range/tol)) search evaluations. If even ``lam = lam_lo`` misses the
+target, the hop budget (not the beam law) is the binding constraint:
+``hop_factor`` is escalated and the bisection re-run.
+
+Everything is deterministic under a fixed seed: the held-out sample, the
+search engine, and the bisection path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import distance as distance_mod
+from repro.core import search as search_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibrationResult:
+    """Outcome of a budget-law calibration run.
+
+    Attributes:
+      lam:        fitted budget-law exponent — the largest value whose
+                  measured recall still meets the target (max I/O savings
+                  subject to the recall SLO).
+      hop_factor: hop budget multiplier the fit succeeded at.
+      recall:     measured recall at (lam, hop_factor) on the held-out sample.
+      target:     the recall target that was requested.
+      achieved:   whether ``recall >= target`` was reached inside the ranges.
+      history:    every (lam, hop_factor, recall) evaluation, in order — the
+                  measured recall curve the bisection walked.
+    """
+
+    lam: float       # fitted exponent: largest value still meeting target
+    hop_factor: int
+    recall: float
+    target: float
+    achieved: bool
+    history: tuple[tuple[float, int, float], ...]
+
+    def budget_cfg(
+        self, base: search_mod.AdaptiveBeamBudget
+    ) -> search_mod.AdaptiveBeamBudget:
+        """The base config with the fitted knobs substituted in."""
+        return dataclasses.replace(
+            base, lam=self.lam, hop_factor=self.hop_factor)
+
+
+def bisect_lam(
+    eval_recall: Callable[[float], float],
+    target: float,
+    lam_lo: float = 0.0,
+    lam_hi: float = 1.0,
+    tol: float = 0.02,
+    max_iters: int = 8,
+) -> tuple[float, float, list[tuple[float, float]]]:
+    """Largest ``lam`` in [lam_lo, lam_hi] with ``eval_recall(lam) >= target``.
+
+    Assumes ``eval_recall`` is monotone non-increasing in ``lam`` (see module
+    docstring): the bisection keeps a feasible lower end and pushes it up.
+    Returns (lam, recall_at_lam, [(lam, recall) evaluations]). When even
+    ``lam_lo`` misses the target, returns (lam_lo, recall_at_lo, history) —
+    the caller decides whether to escalate another knob (hop_factor).
+    """
+    history: list[tuple[float, float]] = []
+
+    def f(lam: float) -> float:
+        r = float(eval_recall(float(lam)))
+        history.append((float(lam), r))
+        return r
+
+    r_lo = f(lam_lo)
+    if r_lo < target:
+        return lam_lo, r_lo, history
+    r_hi = f(lam_hi)
+    if r_hi >= target:
+        return lam_hi, r_hi, history
+    lo, hi, r_at_lo = lam_lo, lam_hi, r_lo
+    for _ in range(max_iters):
+        if hi - lo <= tol:
+            break
+        mid = 0.5 * (lo + hi)
+        r_mid = f(mid)
+        if r_mid >= target:
+            lo, r_at_lo = mid, r_mid
+        else:
+            hi = mid
+    return lo, r_at_lo, history
+
+
+def holdout_sample(
+    n_queries: int, sample: int, seed: int = 0
+) -> np.ndarray:
+    """Deterministic held-out query subset (sorted indices for stable
+    gather order — bit-reproducible recall measurements)."""
+    sample = min(sample, n_queries)
+    rng = np.random.default_rng(seed)
+    sel = rng.choice(n_queries, size=sample, replace=False)
+    return np.sort(sel)
+
+
+def calibrate_budget_law(
+    eval_recall: Callable[[search_mod.AdaptiveBeamBudget], float],
+    base_cfg: search_mod.AdaptiveBeamBudget,
+    recall_target: float,
+    *,
+    lam_range: tuple[float, float] = (0.0, 1.0),
+    max_hop_factor: int = 16,
+    tol: float = 0.02,
+    max_iters: int = 8,
+) -> CalibrationResult:
+    """Fit ``lam`` (escalating ``hop_factor`` when needed) to ``recall_target``.
+
+    ``eval_recall`` measures recall of one candidate config on the held-out
+    sample (see :func:`exact_recall_eval` / :func:`tiered_recall_eval`).
+    ``hop_factor`` doubles from ``base_cfg.hop_factor`` up to
+    ``max_hop_factor`` whenever even ``lam = lam_range[0]`` misses the
+    target (the hop budget, not the beam law, is binding there).
+    """
+    history: list[tuple[float, int, float]] = []
+    hop_factor = base_cfg.hop_factor
+    while True:
+        cfg_at = dataclasses.replace(base_cfg, hop_factor=hop_factor)
+
+        def eval_lam(lam: float, _cfg=cfg_at) -> float:
+            return eval_recall(dataclasses.replace(_cfg, lam=lam))
+
+        lam, recall, lam_hist = bisect_lam(
+            eval_lam, recall_target, lam_range[0], lam_range[1],
+            tol=tol, max_iters=max_iters)
+        history.extend((lm, hop_factor, r) for lm, r in lam_hist)
+        if recall >= recall_target or hop_factor * 2 > max_hop_factor:
+            return CalibrationResult(
+                lam=float(lam), hop_factor=int(hop_factor),
+                recall=float(recall), target=float(recall_target),
+                achieved=bool(recall >= recall_target),
+                history=tuple(history))
+        hop_factor *= 2
+
+
+def _candidate_grants(cfg: search_mod.AdaptiveBeamBudget, q_lid):
+    """Budgets + hop limits for one candidate config, from a shared probe's
+    LID estimates — plain traced arithmetic, no recompilation per candidate
+    (the jitted probe/continue programs are keyed on the *base* config only;
+    lam / hop_factor / center never enter a static argument here)."""
+    from repro.core import mapping as mapping_mod
+
+    center = (jnp.float32(cfg.center) if cfg.center is not None
+              else jnp.mean(q_lid))
+    budgets = mapping_mod.adaptive_beam_budget(
+        q_lid, cfg.lam, cfg.l_min, cfg.l_max, mu=center)
+    return budgets, search_mod._bucket_hop_limits(cfg, budgets, None)
+
+
+def _check_shape_knobs(cfg, base):
+    """The shared probe state is only valid while the shape knobs match —
+    the calibration loop varies lam/hop_factor/center exclusively."""
+    same = (cfg.l_min == base.l_min and cfg.l_max == base.l_max
+            and cfg.probe_hops == base.probe_hops
+            and cfg.lid_k == base.lid_k)
+    if not same:
+        raise ValueError(
+            f"calibration evaluator is specialised to probe knobs of {base}; "
+            f"got {cfg}")
+
+
+def exact_recall_eval(
+    x, adj, entry, queries, gt_ids, *, k: int = 10,
+    sample: int = 256, seed: int = 0,
+    base_cfg: search_mod.AdaptiveBeamBudget | None = None,
+) -> Callable[[search_mod.AdaptiveBeamBudget], float]:
+    """Recall evaluator over the exact-distance adaptive engine.
+
+    Draws a deterministic held-out sample of ``queries`` (with matching
+    ground-truth rows) once. The probe walk depends only on the shape knobs
+    (l_min/l_max/probe_hops/lid_k), never on lam or hop_factor, so it runs
+    *once*, lazily, at the first evaluation; each candidate then re-runs only
+    the continue phase with its own (traced) budgets and hop limits — the
+    whole bisection shares two compiled programs.
+    """
+    sel = holdout_sample(queries.shape[0], sample, seed)
+    q_s, gt_s = queries[sel], gt_ids[sel][:, :k]
+    probe = {}
+
+    def eval_recall(cfg: search_mod.AdaptiveBeamBudget) -> float:
+        if not probe:
+            probe["base"] = base_cfg or cfg
+            probe["state"], _, _, probe["q_lid"] = search_mod._probe_exact_jit(
+                x, adj, q_s, entry, probe["base"])
+        _check_shape_knobs(cfg, probe["base"])
+        budgets, hop_limits = _candidate_grants(cfg, probe["q_lid"])
+        beam_ids, _, _, _ = search_mod._continue_exact_jit(
+            x, adj, probe["state"], q_s, budgets, hop_limits,
+            budget_cfg=probe["base"])
+        return float(distance_mod.recall_at_k(beam_ids[:, :k], gt_s))
+
+    return eval_recall
+
+
+def tiered_recall_eval(
+    index, queries, gt_ids, *, k: int = 10, sample: int = 256, seed: int = 0,
+    base_cfg: search_mod.AdaptiveBeamBudget | None = None,
+) -> Callable[[search_mod.AdaptiveBeamBudget], float]:
+    """Recall evaluator over the deployed two-tier path: PQ-routed walk +
+    slow-tier rerank, so the fitted lam reflects ADC distance noise too.
+    Same shared-probe structure as :func:`exact_recall_eval` — one probe, one
+    continue program, no per-candidate recompilation."""
+    from repro.index.disk import _query_luts
+
+    sel = holdout_sample(queries.shape[0], sample, seed)
+    q_s, gt_s = queries[sel], gt_ids[sel][:, :k]
+    luts = _query_luts(index, q_s)
+    probe = {}
+
+    def eval_recall(cfg: search_mod.AdaptiveBeamBudget) -> float:
+        if not probe:
+            probe["base"] = base_cfg or cfg
+            probe["state"], _, _, probe["q_lid"] = search_mod._probe_pq_jit(
+                index.codes, index.graph.adj, luts, index.graph.entry,
+                probe["base"])
+        _check_shape_knobs(cfg, probe["base"])
+        budgets, hop_limits = _candidate_grants(cfg, probe["q_lid"])
+        beam_ids, _, _, _ = search_mod._continue_pq_jit(
+            index.codes, index.graph.adj, probe["state"], luts, budgets,
+            hop_limits, budget_cfg=probe["base"])
+        ids, _ = search_mod._rerank_slow_tier_jit(
+            beam_ids, index.vectors, q_s, k=k)
+        return float(distance_mod.recall_at_k(ids, gt_s))
+
+    return eval_recall

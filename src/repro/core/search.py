@@ -22,6 +22,7 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Array = jax.Array
 INVALID = -1
@@ -198,7 +199,51 @@ def _search_one(
     return beam_ids, beam_d, SearchStats(hops=hops, dist_evals=evals)
 
 
-def adaptive_search_batch(
+def budget_bucket_ceilings(
+    l_min: int, l_max: int, max_buckets: int = 4
+) -> tuple[int, ...]:
+    """Power-of-two-style budget ceilings covering [l_min, l_max], ascending.
+
+    Halving down from ``l_max`` gives at most ``max_buckets`` ceilings whose
+    last element is always ``l_max`` (so every granted budget has a bucket).
+    E.g. (16, 96, 4) -> (16, 24, 48, 96). The small, geometric family keeps
+    host-side bucket scheduling to a handful of padded batch shapes.
+    """
+    assert max_buckets >= 1 and 0 < l_min <= l_max
+    cs = [int(l_max)]
+    while len(cs) < max_buckets and cs[-1] > int(l_min):
+        cs.append(max(int(l_min), cs[-1] // 2))
+    return tuple(sorted(set(cs)))
+
+
+def quantize_budgets(
+    budgets: Array, ceilings: tuple[int, ...]
+) -> tuple[Array, Array]:
+    """Round each granted budget *up* to its bucket ceiling (jit-safe).
+
+    Returns (bucket_index, quantized_budget); ``ceilings`` must be ascending
+    with ``ceilings[-1] >= budgets.max()``. Used in-graph by the distributed
+    path, where the bucket ceiling doubles as the hedged per-query hop
+    deadline, and on the host by the bucket scheduler.
+    """
+    ceil_arr = jnp.asarray(ceilings, dtype=jnp.int32)
+    idx = jnp.searchsorted(ceil_arr, budgets.astype(jnp.int32), side="left")
+    idx = jnp.minimum(idx, len(ceilings) - 1)
+    return idx, ceil_arr[idx]
+
+
+def _bucket_hop_limits(
+    budget_cfg: AdaptiveBeamBudget, budgets: Array, max_hops: int | None
+) -> Array:
+    """Per-query hop limit = probe + hop_factor * budget, SLO-capped."""
+    hop_limits = (jnp.int32(budget_cfg.probe_hops)
+                  + jnp.int32(budget_cfg.hop_factor) * budgets)
+    if max_hops is not None:
+        hop_limits = jnp.minimum(hop_limits, jnp.int32(max_hops))
+    return hop_limits
+
+
+def adaptive_probe_batch(
     ctxs: Array,
     adj: Array,
     entry: Array,
@@ -206,21 +251,16 @@ def adaptive_search_batch(
     n: int,
     budget_cfg: AdaptiveBeamBudget,
     max_hops: int | None = None,
-) -> tuple[Array, Array, SearchStats, AdaptiveStats]:
-    """The per-query adaptive-beam engine (Prop. 4.2 deployed in-graph).
+):
+    """Phases 1-2 of the adaptive engine: probe walk + budget grant.
 
-    Three phases, one compiled program, no host round-trip:
-      1. *probe*   — every query walks ``probe_hops`` hops at ``l_min``
-         frontier budget, filling the (fixed-shape, ``l_max``-wide) beam;
-      2. *budget*  — each query's LID is estimated from the probe beam's own
-         candidate distances (``lid.online_lid``; no brute-force k-NN
-         pre-pass) and mapped to ``L(q)`` by ``mapping.adaptive_beam_budget``;
-      3. *continue* — the same search states resume (warm beam + visited set,
-         no repeated hops) with per-query frontier budgets and hop limits.
+    Every query walks ``probe_hops`` hops at ``l_min`` frontier budget into a
+    fixed-shape ``l_max``-wide beam; its LID is estimated from the probe
+    beam's own candidate distances (``lid.online_lid`` — no brute-force k-NN
+    pre-pass) and mapped to ``L(q)`` by ``mapping.adaptive_beam_budget``.
 
-    Returns (beam_ids, beam_d, stats, adaptive_stats); hops in ``stats``
-    count probe + continuation. ``max_hops``, when given, caps every
-    per-query hop limit — an operator's latency SLO outranks the budget law.
+    Returns (probe_state, budgets, hop_limits, q_lid); ``probe_state`` is the
+    warm per-query search state the continue phase resumes from.
     """
     from repro.core import lid as lid_mod
     from repro.core import mapping as mapping_mod
@@ -243,10 +283,26 @@ def adaptive_search_batch(
               if budget_cfg.center is not None else jnp.mean(q_lid))
     budgets = mapping_mod.adaptive_beam_budget(
         q_lid, budget_cfg.lam, budget_cfg.l_min, budget_cfg.l_max, mu=center)
-    hop_limits = (jnp.int32(budget_cfg.probe_hops)
-                  + jnp.int32(budget_cfg.hop_factor) * budgets)
-    if max_hops is not None:
-        hop_limits = jnp.minimum(hop_limits, jnp.int32(max_hops))
+    hop_limits = _bucket_hop_limits(budget_cfg, budgets, max_hops)
+    return probe_state, budgets, hop_limits, q_lid
+
+
+def adaptive_continue_batch(
+    probe_state,
+    ctxs: Array,
+    adj: Array,
+    eval_dists: DistEval,
+    budget_cfg: AdaptiveBeamBudget,
+    budgets: Array,
+    hop_limits: Array,
+):
+    """Phase 3: resume the probe states (warm beam + visited set, no repeated
+    hops) with per-query frontier budgets and hop limits.
+
+    Returns (beam_ids, beam_d, hops, evals); the counters include the probe
+    phase (the continue loop resumes them).
+    """
+    l_max = budget_cfg.l_max
 
     def continue_one(state, c, b, h):
         return _run_search(state, c, adj, eval_dists, l_max,
@@ -254,8 +310,74 @@ def adaptive_search_batch(
 
     beam_ids, beam_d, _, _, hops, evals = jax.vmap(continue_one)(
         probe_state, ctxs, budgets, hop_limits)
+    return beam_ids, beam_d, hops, evals
+
+
+def adaptive_search_batch(
+    ctxs: Array,
+    adj: Array,
+    entry: Array,
+    eval_dists: DistEval,
+    n: int,
+    budget_cfg: AdaptiveBeamBudget,
+    max_hops: int | None = None,
+    bucket_ceilings: tuple[int, ...] | None = None,
+) -> tuple[Array, Array, SearchStats, AdaptiveStats]:
+    """The per-query adaptive-beam engine (Prop. 4.2 deployed in-graph).
+
+    Three phases, one compiled program, no host round-trip:
+      1. *probe*   — every query walks ``probe_hops`` hops at ``l_min``
+         frontier budget, filling the (fixed-shape, ``l_max``-wide) beam;
+      2. *budget*  — each query's LID is estimated from the probe beam's own
+         candidate distances and mapped to ``L(q)``;
+      3. *continue* — the same search states resume (warm state, no repeated
+         hops) with per-query frontier budgets and hop limits.
+
+    Returns (beam_ids, beam_d, stats, adaptive_stats); hops in ``stats``
+    count probe + continuation. ``max_hops``, when given, caps every
+    per-query hop limit — an operator's latency SLO outranks the budget law.
+
+    ``bucket_ceilings`` (an ascending static tuple from
+    :func:`budget_bucket_ceilings`) quantizes each granted budget *up* to its
+    bucket ceiling in-graph and derives the hop limit from the ceiling — the
+    hedged per-shard hop deadline of the distributed path: a straggler
+    query's walk is cut off at its bucket's deadline instead of the shard
+    dropping its whole contribution. For host-side bucket *scheduling* (which
+    keeps results bit-identical to this unbucketed path) see
+    :func:`beam_search_exact_adaptive` / :func:`beam_search_pq_adaptive` with
+    ``num_buckets``.
+    """
+    probe_state, budgets, hop_limits, q_lid = adaptive_probe_batch(
+        ctxs, adj, entry, eval_dists, n, budget_cfg, max_hops)
+    if bucket_ceilings is not None:
+        _, budgets = quantize_budgets(budgets, bucket_ceilings)
+        hop_limits = _bucket_hop_limits(budget_cfg, budgets, max_hops)
+    beam_ids, beam_d, hops, evals = adaptive_continue_batch(
+        probe_state, ctxs, adj, eval_dists, budget_cfg, budgets, hop_limits)
     return (beam_ids, beam_d, SearchStats(hops=hops, dist_evals=evals),
             AdaptiveStats(q_lid=q_lid, budget=budgets))
+
+
+def _exact_eval(x: Array) -> DistEval:
+    """Full-precision squared-L2 distance evaluator (in-memory mode)."""
+    def eval_dists(q, ids, valid):
+        vecs = x[ids]
+        diff = vecs - q[None, :]
+        return jnp.sum(diff * diff, axis=-1)
+
+    return eval_dists
+
+
+def _pq_eval(codes: Array) -> DistEval:
+    """ADC distance evaluator over PQ codes; the query ctx is its LUT."""
+    def eval_dists(lut, ids, valid):
+        # lut: (M, K); codes[ids]: (R, M) -> sum_m lut[m, code[r, m]]
+        c = codes[ids].astype(jnp.int32)
+        m = lut.shape[0]
+        gathered = jax.vmap(lambda row: lut[jnp.arange(m), row])(c)
+        return gathered.sum(axis=-1)
+
+    return eval_dists
 
 
 @functools.partial(
@@ -275,11 +397,7 @@ def beam_search_exact(
     Returns (ids, d2, stats): (Q, k) ascending results + per-query counters.
     """
     n = x.shape[0]
-
-    def eval_dists(q, ids, valid):
-        vecs = x[ids]
-        diff = vecs - q[None, :]
-        return jnp.sum(diff * diff, axis=-1)
+    eval_dists = _exact_eval(x)
 
     run = functools.partial(
         _search_one,
@@ -321,13 +439,7 @@ def beam_search_pq(
       adj:    (N, R) graph.
     """
     n = codes.shape[0]
-
-    def eval_dists(lut, ids, valid):
-        # lut: (M, K); codes[ids]: (R, M) -> sum_m lut[m, code[r, m]]
-        c = codes[ids].astype(jnp.int32)
-        m = lut.shape[0]
-        gathered = jax.vmap(lambda row: lut[jnp.arange(m), row])(c)
-        return gathered.sum(axis=-1)
+    eval_dists = _pq_eval(codes)
 
     run = functools.partial(
         _search_one,
@@ -361,6 +473,112 @@ def _rerank_slow_tier(beam_ids, x_slow, queries, k):
 
 
 @functools.partial(jax.jit, static_argnames=("budget_cfg", "k"))
+def _beam_search_exact_adaptive_jit(
+    x, adj, queries, entry, budget_cfg: AdaptiveBeamBudget, k: int = 10
+):
+    """Single-program adaptive path: probe + continue in one compiled call."""
+    beam_ids, beam_d, stats, astats = adaptive_search_batch(
+        queries, adj, entry, _exact_eval(x), x.shape[0], budget_cfg)
+    return beam_ids[:, :k], beam_d[:, :k], stats, astats
+
+
+@functools.partial(jax.jit, static_argnames=("budget_cfg",))
+def _probe_exact_jit(x, adj, queries, entry, budget_cfg: AdaptiveBeamBudget):
+    return adaptive_probe_batch(
+        queries, adj, entry, _exact_eval(x), x.shape[0], budget_cfg)
+
+
+@functools.partial(jax.jit, static_argnames=("budget_cfg",))
+def _continue_exact_jit(x, adj, probe_state, ctxs, budgets, hop_limits,
+                        budget_cfg: AdaptiveBeamBudget):
+    return adaptive_continue_batch(
+        probe_state, ctxs, adj, _exact_eval(x), budget_cfg, budgets,
+        hop_limits)
+
+
+@functools.partial(jax.jit, static_argnames=("budget_cfg",))
+def _probe_pq_jit(codes, adj, luts, entry, budget_cfg: AdaptiveBeamBudget):
+    return adaptive_probe_batch(
+        luts, adj, entry, _pq_eval(codes), codes.shape[0], budget_cfg)
+
+
+@functools.partial(jax.jit, static_argnames=("budget_cfg",))
+def _continue_pq_jit(codes, adj, probe_state, luts, budgets, hop_limits,
+                     budget_cfg: AdaptiveBeamBudget):
+    return adaptive_continue_batch(
+        probe_state, luts, adj, _pq_eval(codes), budget_cfg, budgets,
+        hop_limits)
+
+
+def _pad_bucket_size(n: int, quantum: int = 8) -> int:
+    """Round a bucket's lane count up to a multiple of ``quantum``.
+
+    A vmapped ``while_loop`` pays full body cost for *every* lane on every
+    iteration (padding lanes are not free), so the pad grid must be fine:
+    multiples of 8 cap the inflation at <= 12.5% for any bucket of >= 8 real
+    lanes, while keeping the jit cache to at most Q/8 shapes per bucket —
+    coarser (power-of-two) padding was measured to give back the entire
+    bucketing win on the largest bucket (66 -> 128 lanes ~= 2x its work).
+    """
+    return max(quantum, ((n + quantum - 1) // quantum) * quantum)
+
+
+def _bucketed_continue(
+    continue_fn,
+    probe_state,
+    ctxs: Array,
+    budgets: Array,
+    hop_limits: Array,
+    ceilings: tuple[int, ...],
+):
+    """Host-side bucket scheduler for the continue phase.
+
+    Queries are grouped by granted budget into the ``ceilings`` buckets and
+    each bucket resumes as its own (cached-jit) continue call. A vmapped
+    ``while_loop`` iterates until its *slowest* lane converges, so in the
+    single-program path a batch with one hard query burns every easy lane's
+    compute until the hard one finishes; per-bucket, the slowest lane is
+    bounded by the bucket's own ceiling-derived hop limit — converged lanes
+    actually free compute instead of idling.
+
+    Per-query budgets/hop limits are passed through *unquantized*, so every
+    lane computes exactly what the unbucketed path would: results are
+    identical (scheduling changes, math doesn't). Buckets are padded to a
+    multiple-of-8 lane count (repeating a member row, results discarded) so
+    the jit cache sees a bounded shape family at <= 12.5% lane inflation.
+
+    Returns (beam_ids, beam_d, hops, evals) in the original query order.
+    """
+    q = ctxs.shape[0]
+    l_max = probe_state[0].shape[1]
+    bucket_idx = np.asarray(
+        quantize_budgets(budgets, ceilings)[0])
+    out_ids = np.empty((q, l_max), np.int32)
+    out_d = np.empty((q, l_max), np.float32)
+    out_hops = np.empty((q,), np.int32)
+    out_evals = np.empty((q,), np.int32)
+    for bi in range(len(ceilings)):
+        members = np.nonzero(bucket_idx == bi)[0]
+        if members.size == 0:
+            continue
+        padded = np.concatenate([
+            members,
+            np.full(_pad_bucket_size(members.size) - members.size,
+                    members[0]),
+        ])
+        sel = jnp.asarray(padded)
+        sub_state = jax.tree_util.tree_map(lambda a: a[sel], probe_state)
+        ids_b, d_b, hops_b, evals_b = continue_fn(
+            sub_state, ctxs[sel], budgets[sel], hop_limits[sel])
+        m = members.size
+        out_ids[members] = np.asarray(ids_b)[:m]
+        out_d[members] = np.asarray(d_b)[:m]
+        out_hops[members] = np.asarray(hops_b)[:m]
+        out_evals[members] = np.asarray(evals_b)[:m]
+    return (jnp.asarray(out_ids), jnp.asarray(out_d),
+            jnp.asarray(out_hops), jnp.asarray(out_evals))
+
+
 def beam_search_exact_adaptive(
     x: Array,
     adj: Array,
@@ -368,26 +586,51 @@ def beam_search_exact_adaptive(
     entry: Array,
     budget_cfg: AdaptiveBeamBudget,
     k: int = 10,
+    num_buckets: int | None = None,
 ) -> tuple[Array, Array, SearchStats, AdaptiveStats]:
     """Exact-distance adaptive-beam search (probe -> budget -> continue).
 
     Per-query counterpart of :func:`beam_search_exact`: the frontier budget is
     ``L(q)`` from the probe-phase LID estimate instead of a fixed
     ``beam_width``. Returns (ids, d2, stats, adaptive_stats).
+
+    ``num_buckets`` >= 2 switches the continue phase to budget-bucketed
+    execution (:func:`_bucketed_continue`): queries are grouped by granted
+    budget and each bucket runs to its own ceiling, so converged lanes free
+    real compute. Results are identical to the single-program path.
     """
-    n = x.shape[0]
-
-    def eval_dists(q, ids, valid):
-        vecs = x[ids]
-        diff = vecs - q[None, :]
-        return jnp.sum(diff * diff, axis=-1)
-
-    beam_ids, beam_d, stats, astats = adaptive_search_batch(
-        queries, adj, entry, eval_dists, n, budget_cfg)
-    return beam_ids[:, :k], beam_d[:, :k], stats, astats
+    if num_buckets is None or num_buckets <= 1:
+        return _beam_search_exact_adaptive_jit(
+            x, adj, queries, entry, budget_cfg, k=k)
+    probe_state, budgets, hop_limits, q_lid = _probe_exact_jit(
+        x, adj, queries, entry, budget_cfg)
+    ceilings = budget_bucket_ceilings(
+        budget_cfg.l_min, budget_cfg.l_max, num_buckets)
+    cont = functools.partial(_continue_exact_jit, x, adj,
+                             budget_cfg=budget_cfg)
+    beam_ids, beam_d, hops, evals = _bucketed_continue(
+        cont, probe_state, queries, budgets, hop_limits, ceilings)
+    return (beam_ids[:, :k], beam_d[:, :k],
+            SearchStats(hops=hops, dist_evals=evals),
+            AdaptiveStats(q_lid=q_lid, budget=budgets))
 
 
 @functools.partial(jax.jit, static_argnames=("budget_cfg", "k", "rerank"))
+def _beam_search_pq_adaptive_jit(
+    codes, luts, x_slow, adj, queries, entry,
+    budget_cfg: AdaptiveBeamBudget, k: int = 10, rerank: bool = True,
+):
+    beam_ids, beam_d, stats, astats = adaptive_search_batch(
+        luts, adj, entry, _pq_eval(codes), codes.shape[0], budget_cfg)
+    if rerank:
+        ids, d2 = _rerank_slow_tier(beam_ids, x_slow, queries, k)
+        return ids, d2, stats, astats
+    return beam_ids[:, :k], beam_d[:, :k], stats, astats
+
+
+_rerank_slow_tier_jit = jax.jit(_rerank_slow_tier, static_argnames=("k",))
+
+
 def beam_search_pq_adaptive(
     codes: Array,
     luts: Array,
@@ -398,26 +641,33 @@ def beam_search_pq_adaptive(
     budget_cfg: AdaptiveBeamBudget,
     k: int = 10,
     rerank: bool = True,
+    num_buckets: int | None = None,
 ) -> tuple[Array, Array, SearchStats, AdaptiveStats]:
     """PQ-routed adaptive-beam search + optional full-precision re-rank.
 
     The probe-phase LID is estimated from ADC distances — the same values
     that steer the walk — so the budget decision adds zero extra slow-tier
-    reads. Shapes as in :func:`beam_search_pq`.
+    reads. Shapes as in :func:`beam_search_pq`. ``num_buckets`` >= 2 enables
+    budget-bucketed continue execution (see
+    :func:`beam_search_exact_adaptive`); the final rerank stays one batched
+    slow-tier read over the whole batch.
     """
-    n = codes.shape[0]
-
-    def eval_dists(lut, ids, valid):
-        c = codes[ids].astype(jnp.int32)
-        m = lut.shape[0]
-        gathered = jax.vmap(lambda row: lut[jnp.arange(m), row])(c)
-        return gathered.sum(axis=-1)
-
-    beam_ids, beam_d, stats, astats = adaptive_search_batch(
-        luts, adj, entry, eval_dists, n, budget_cfg)
-
+    if num_buckets is None or num_buckets <= 1:
+        return _beam_search_pq_adaptive_jit(
+            codes, luts, x_slow, adj, queries, entry, budget_cfg,
+            k=k, rerank=rerank)
+    probe_state, budgets, hop_limits, q_lid = _probe_pq_jit(
+        codes, adj, luts, entry, budget_cfg)
+    ceilings = budget_bucket_ceilings(
+        budget_cfg.l_min, budget_cfg.l_max, num_buckets)
+    cont = functools.partial(_continue_pq_jit, codes, adj,
+                             budget_cfg=budget_cfg)
+    beam_ids, beam_d, hops, evals = _bucketed_continue(
+        cont, probe_state, luts, budgets, hop_limits, ceilings)
+    stats = SearchStats(hops=hops, dist_evals=evals)
+    astats = AdaptiveStats(q_lid=q_lid, budget=budgets)
     if rerank:
-        ids, d2 = _rerank_slow_tier(beam_ids, x_slow, queries, k)
+        ids, d2 = _rerank_slow_tier_jit(beam_ids, x_slow, queries, k=k)
         return ids, d2, stats, astats
     return beam_ids[:, :k], beam_d[:, :k], stats, astats
 

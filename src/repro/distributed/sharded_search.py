@@ -86,6 +86,7 @@ def _local_search(
     adj, codes, vectors, centroids, queries, entry, *,
     beam_width: int, max_hops: int, k: int, query_chunk: int, use_pq: bool,
     beam_budget: search_mod.AdaptiveBeamBudget | None = None,
+    bucket_ceilings: tuple[int, ...] | None = None,
 ):
     """Per-shard search over the local sub-graph. Returns (d2, local_ids)
     each (Q, k).
@@ -96,6 +97,18 @@ def _local_search(
     budget is computed *on this shard* from its local probe beam (shard
     geometry differs, so budgets legitimately differ per shard) and the
     per-shard top-k are merged exactly as in the fixed-beam path.
+
+    ``bucket_ceilings`` additionally quantizes each granted budget up to its
+    bucket ceiling *in-graph* and derives the per-query hop limit from that
+    ceiling, giving the shard a small *discrete family of hop deadlines*
+    (probe + hop_factor * ceiling, always capped by ``max_hops``): a walk
+    that hits its deadline stops mid-graph and still contributes its
+    best-so-far beam to the merge. Note the quantization rounds *up*, so a
+    query's limit is never tighter than the raw adaptive path's — the hedge
+    is against unbounded straggling (deadlines are enforced mid-walk and the
+    shard's completion time is governed by its top occupied bucket), not a
+    tightening of the budget law. ``shard_ok`` remains the orthogonal
+    mechanism for shards that are down entirely.
     """
     n_local = adj.shape[0]
     entry = entry.astype(jnp.int32)
@@ -133,7 +146,7 @@ def _local_search(
             # adaptivity must not silently exceed the operator's I/O SLO.
             beam_ids, beam_d, _, _ = search_mod.adaptive_search_batch(
                 ctx_chunk, adj, entry, eval_dists, n_local, beam_budget,
-                max_hops=max_hops)
+                max_hops=max_hops, bucket_ceilings=bucket_ceilings)
         else:
             beam_ids, beam_d, _ = jax.vmap(run)(ctx_chunk)
         # Local exact rerank from the shard's own full-precision rows (the
@@ -167,6 +180,7 @@ def make_distributed_search(
     use_pq: bool = True,
     merge: str = "hierarchical",
     beam_budget: search_mod.AdaptiveBeamBudget | None = None,
+    budget_buckets: int | None = None,
 ):
     """Builds the jit-able sharded search step for ``mesh``.
 
@@ -186,6 +200,18 @@ def make_distributed_search(
       continue). Budgets are computed per shard from the shard's own probe
       beam; the global merge is unchanged.
 
+    budget_buckets:
+      with ``beam_budget`` set, quantizes each shard's granted budgets up to
+      at most this many power-of-two bucket ceilings
+      (:func:`repro.core.search.budget_bucket_ceilings`) and derives every
+      query's hop limit from its bucket ceiling — a discrete per-shard
+      deadline family (see :func:`_local_search`): straggling walks stop at
+      their bucket's deadline, mid-graph, and still contribute best-so-far
+      candidates to the merge. Complements (does not replace) ``shard_ok``,
+      which stays the drop mechanism for dead shards; quantization rounds
+      up, so recall is >= the unquantized adaptive path's at slightly more
+      counted I/O.
+
     merge:
       * "flat"          — one all_gather over every axis at once, then one
         sort (the obvious baseline; payload grows with total shard count).
@@ -196,6 +222,10 @@ def make_distributed_search(
         stays inside a chip row).
     """
     axes = _shard_axes(mesh)
+    bucket_ceilings = None
+    if beam_budget is not None and budget_buckets and budget_buckets > 1:
+        bucket_ceilings = search_mod.budget_bucket_ceilings(
+            beam_budget.l_min, beam_budget.l_max, budget_buckets)
 
     def step(adj, codes, vectors, centroids, queries, shard_ok, entries):
         def shard_fn(adj_l, codes_l, vectors_l, centroids_l, queries_l, ok_l,
@@ -204,7 +234,7 @@ def make_distributed_search(
                 adj_l, codes_l, vectors_l, centroids_l, queries_l, entry_l[0],
                 beam_width=beam_width, max_hops=max_hops, k=k,
                 query_chunk=query_chunk, use_pq=use_pq,
-                beam_budget=beam_budget,
+                beam_budget=beam_budget, bucket_ceilings=bucket_ceilings,
             )
             # Hedged-read mask: a late/dead shard contributes nothing.
             d2 = jnp.where(ok_l[0], d2, jnp.inf)

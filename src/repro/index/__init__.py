@@ -5,4 +5,4 @@ from repro.index.disk import (  # noqa: F401
     search_tiered,
     search_tiered_adaptive,
 )
-from repro.index.serializer import load_index, save_index  # noqa: F401
+from repro.index.serializer import load_disk_model, load_index, save_index  # noqa: F401

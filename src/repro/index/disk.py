@@ -117,6 +117,7 @@ def search_tiered_adaptive(
     budget_cfg: search_mod.AdaptiveBeamBudget,
     k: int = 10,
     rerank: bool = True,
+    num_buckets: int | None = None,
 ) -> tuple[Array, Array, search_mod.SearchStats, search_mod.AdaptiveStats]:
     """Per-query adaptive-beam serving path (Prop. 4.2 in the engine).
 
@@ -125,11 +126,17 @@ def search_tiered_adaptive(
     early and stop paying slow-tier reads for the hard ones. Returns
     (ids, d2, stats, adaptive_stats); ``adaptive_stats`` carries the
     per-query LID and granted budget for observability.
+
+    ``num_buckets`` >= 2 runs the continue phase budget-bucketed (queries
+    grouped by granted budget, each bucket jitted to its own ceiling) so
+    converged lanes free real compute; results are identical to the
+    single-program path.
     """
     luts = _query_luts(index, queries)
     return search_mod.beam_search_pq_adaptive(
         index.codes, luts, index.vectors, index.graph.adj, queries,
         index.graph.entry, budget_cfg=budget_cfg, k=k, rerank=rerank,
+        num_buckets=num_buckets,
     )
 
 

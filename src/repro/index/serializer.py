@@ -14,13 +14,31 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.types import GraphIndex
-from repro.index.disk import TieredIndex
+from repro.index.disk import DiskTierModel, TieredIndex
 from repro.pq import PqCodebook
 
 
-def save_index(path: str | pathlib.Path, index: TieredIndex) -> None:
+def save_index(
+    path: str | pathlib.Path,
+    index: TieredIndex,
+    disk_model: DiskTierModel | None = None,
+) -> None:
+    """Write one index shard; ``disk_model`` (the slow-tier latency model the
+    index was benchmarked/SLO'd under) rides along in the manifest so a
+    reloaded deployment reproduces the same modelled latencies."""
     path = pathlib.Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
+    manifest = {
+        "format": "repro.tiered_index.v1",
+        "n": int(index.n),
+        "degree": int(index.graph.degree_cap),
+        "m_pq": int(index.codebook.m),
+    }
+    if disk_model is not None:
+        manifest["disk_model"] = {
+            "read_latency_us": float(disk_model.read_latency_us),
+            "queue_depth": int(disk_model.queue_depth),
+        }
     np.savez_compressed(
         path,
         adj=np.asarray(index.graph.adj),
@@ -32,14 +50,21 @@ def save_index(path: str | pathlib.Path, index: TieredIndex) -> None:
         centroids=np.asarray(index.codebook.centroids),
         codes=np.asarray(index.codes),
         vectors=np.asarray(index.vectors),
-        manifest=json.dumps(
-            {
-                "format": "repro.tiered_index.v1",
-                "n": int(index.n),
-                "degree": int(index.graph.degree_cap),
-                "m_pq": int(index.codebook.m),
-            }
-        ),
+        manifest=json.dumps(manifest),
+    )
+
+
+def load_disk_model(path: str | pathlib.Path) -> DiskTierModel | None:
+    """The DiskTierModel stored alongside the index, or None for indexes
+    saved without one (pre-v1.1 files parse fine — the key is optional)."""
+    with np.load(pathlib.Path(path), allow_pickle=False) as z:
+        manifest = json.loads(str(z["manifest"]))
+    dm = manifest.get("disk_model")
+    if dm is None:
+        return None
+    return DiskTierModel(
+        read_latency_us=float(dm["read_latency_us"]),
+        queue_depth=int(dm["queue_depth"]),
     )
 
 

@@ -335,10 +335,15 @@ def _mcgi_cell(spec: cfg_base.ArchSpec, cell: cfg_base.ShapeCell, mesh,
         n_queries=cell.meta["queries"] if not smoke else cfg.queries,
         data_dtype=dtype,
     )
+    # The serve cell lowers the *deployed* engine: per-query adaptive budgets
+    # (the dataset's calibrated budget law) with in-graph budget buckets /
+    # hop deadlines — what production serves is what the dry-run prices.
     step = ss.make_distributed_search(
         mesh, beam_width=cfg.l_search, max_hops=cfg.max_hops,
         k=cell.meta["k"], query_chunk=min(128, cfg.queries),
         use_pq=cfg.m_pq is not None,
+        beam_budget=cfg.beam_budget(),
+        budget_buckets=cfg.budget_buckets,
     )
     args = (specs.adj, specs.codes, specs.vectors, specs.centroids,
             specs.queries, specs.shard_ok, specs.entries)

@@ -4,11 +4,17 @@ truth is available, I/O per query, modelled SSD latency).
 
     PYTHONPATH=src python -m repro.launch.serve --dataset tiny-mixture \
         --beam 48 --batch 64 --num-batches 20 [--index PATH] [--online] \
-        [--adaptive [--l-min 16] [--l-max 64] [--lam 0.35]]
+        [--adaptive [--l-min 16] [--l-max 64] [--lam 0.35] [--buckets 4] \
+         [--calibrate [--recall-target 0.95]]]
 
 ``--adaptive`` switches to the per-query adaptive-beam engine
 (Prop. 4.2 deployed): each query's budget is set from its probe-phase LID,
-so easy queries stop paying slow-tier reads for hard ones.
+so easy queries stop paying slow-tier reads for hard ones. ``--buckets N``
+runs the continue phase budget-bucketed: queries grouped by granted budget,
+each bucket jitted to its own ceiling, so converged lanes free real compute
+(identical results, lower wall-clock). ``--calibrate`` fits ``lam`` (and, if
+needed, ``hop_factor``) to ``--recall-target`` on a held-out query sample
+before serving, instead of trusting the ``--lam`` default.
 """
 from __future__ import annotations
 
@@ -39,7 +45,18 @@ def main() -> None:
     ap.add_argument("--l-max", type=int, default=None,
                     help="adaptive budget ceiling (default: --beam)")
     ap.add_argument("--lam", type=float, default=0.35)
+    ap.add_argument("--buckets", type=int, default=0,
+                    help="budget buckets for the continue phase "
+                         "(0/1 = single-program path)")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="fit lam to --recall-target on a held-out sample "
+                         "before serving")
+    ap.add_argument("--recall-target", type=float, default=0.95)
+    ap.add_argument("--calib-sample", type=int, default=256)
     args = ap.parse_args()
+    if not args.adaptive and (args.calibrate or args.buckets > 1):
+        ap.error("--calibrate/--buckets configure the adaptive engine; "
+                 "pass --adaptive as well")
 
     from repro.core import build, distance, online, search
     from repro.data import make_dataset
@@ -76,11 +93,27 @@ def main() -> None:
         l_max = args.l_max or args.beam
         budget_cfg = search.AdaptiveBeamBudget(
             l_min=min(args.l_min, l_max), l_max=l_max, lam=args.lam)
+        if args.calibrate:
+            from repro.core import calibrate as calib
+
+            result = calib.calibrate_budget_law(
+                calib.tiered_recall_eval(
+                    index, queries, gt_i, k=args.k,
+                    sample=args.calib_sample),
+                budget_cfg, args.recall_target)
+            budget_cfg = result.budget_cfg(budget_cfg)
+            print(f"[serve] calibrated lam={result.lam:.4f} "
+                  f"hop_factor={result.hop_factor} "
+                  f"recall={result.recall:.4f} "
+                  f"(target {result.target:.2f}, "
+                  f"{'hit' if result.achieved else 'MISSED'}, "
+                  f"{len(result.history)} evals)")
         rerank_batch = budget_cfg.l_max
+        num_buckets = args.buckets if args.buckets > 1 else None
 
         def run(qb):
             ids, d2, stats, astats = search_tiered_adaptive(
-                index, qb, budget_cfg, k=args.k)
+                index, qb, budget_cfg, k=args.k, num_buckets=num_buckets)
             return ids, stats, astats
     else:
         rerank_batch = args.beam

@@ -72,7 +72,9 @@ except ImportError:
             @functools.wraps(fn)
             def wrapper(*args, **kwargs):
                 rng = np.random.default_rng(0)
-                for _ in range(_FALLBACK_EXAMPLES):
+                n = getattr(wrapper, "_fallback_max_examples",
+                            _FALLBACK_EXAMPLES)
+                for _ in range(n):
                     drawn = {k: s.draw(rng) for k, s in strategies.items()}
                     fn(*args, **kwargs, **drawn)
 
@@ -84,5 +86,13 @@ except ImportError:
 
         return deco
 
-    def settings(**_kw):
-        return lambda fn: fn
+    def settings(max_examples=None, **_kw):
+        """Honour max_examples in the fallback (apply @settings *above*
+        @given, the usual hypothesis stacking); other knobs are ignored."""
+
+        def deco(fn):
+            if max_examples is not None:
+                fn._fallback_max_examples = max_examples
+            return fn
+
+        return deco

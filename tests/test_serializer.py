@@ -1,0 +1,88 @@
+"""Round-trip coverage for the index serializer: a built TieredIndex
+(adjacency, PQ codebook, medoid entry, geometric profile, disk-tier model)
+must survive serialize/deserialize with bit-identical search behaviour."""
+import numpy as np
+import pytest
+
+from repro.core import build, search
+from repro.index import (build_tiered_index, load_disk_model, load_index,
+                         save_index)
+from repro.index.disk import (DiskTierModel, search_tiered,
+                              search_tiered_adaptive)
+
+CFG = build.BuildConfig(degree=16, beam_width=32, iters=1, batch=256,
+                        max_hops=64)
+
+
+@pytest.fixture(scope="module")
+def built(tiny_dataset):
+    x, q = tiny_dataset
+    x, q = x[:1000], q[:24]
+    idx = build.build_mcgi(x, CFG)
+    return build_tiered_index(x, idx, m_pq=8), q
+
+
+def test_round_trip_bit_identical_arrays(built, tmp_path):
+    index, _ = built
+    p = tmp_path / "idx.npz"
+    save_index(p, index)
+    loaded = load_index(p)
+    for name, a, b in (
+        ("adj", index.graph.adj, loaded.graph.adj),
+        ("entry", index.graph.entry, loaded.graph.entry),
+        ("alpha", index.graph.alpha, loaded.graph.alpha),
+        ("lid", index.graph.lid, loaded.graph.lid),
+        ("mu", index.graph.mu, loaded.graph.mu),
+        ("sigma", index.graph.sigma, loaded.graph.sigma),
+        ("centroids", index.codebook.centroids, loaded.codebook.centroids),
+        ("codes", index.codes, loaded.codes),
+        ("vectors", index.vectors, loaded.vectors),
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=name)
+        assert np.asarray(a).dtype == np.asarray(b).dtype, name
+    assert loaded.n == index.n
+    assert loaded.fast_tier_bytes() == index.fast_tier_bytes()
+
+
+def test_round_trip_search_bit_identical(built, tmp_path):
+    """The loaded index serves *exactly* what the in-memory one serves —
+    fixed-beam and adaptive (bucketed) paths both, ids and distances."""
+    index, q = built
+    p = tmp_path / "idx.npz"
+    save_index(p, index)
+    loaded = load_index(p)
+
+    ids_a, d2_a, _ = search_tiered(index, q, beam_width=24, k=10)
+    ids_b, d2_b, _ = search_tiered(loaded, q, beam_width=24, k=10)
+    np.testing.assert_array_equal(np.asarray(ids_a), np.asarray(ids_b))
+    np.testing.assert_array_equal(np.asarray(d2_a), np.asarray(d2_b))
+
+    cfg = search.AdaptiveBeamBudget(l_min=8, l_max=24, lam=0.3)
+    for num_buckets in (None, 3):
+        ia, da, sa, aa = search_tiered_adaptive(
+            index, q, cfg, k=10, num_buckets=num_buckets)
+        ib, db, sb, ab = search_tiered_adaptive(
+            loaded, q, cfg, k=10, num_buckets=num_buckets)
+        np.testing.assert_array_equal(np.asarray(ia), np.asarray(ib))
+        np.testing.assert_array_equal(np.asarray(da), np.asarray(db))
+        np.testing.assert_array_equal(np.asarray(sa.hops), np.asarray(sb.hops))
+        np.testing.assert_array_equal(np.asarray(aa.budget),
+                                      np.asarray(ab.budget))
+
+
+def test_round_trip_disk_model(built, tmp_path):
+    index, _ = built
+    model = DiskTierModel(read_latency_us=20.0, queue_depth=16)
+    p = tmp_path / "with_model.npz"
+    save_index(p, index, disk_model=model)
+    loaded = load_disk_model(p)
+    assert loaded == model
+    # The reloaded model prices work identically.
+    import jax.numpy as jnp
+    assert float(loaded.latency_us(jnp.float32(10), rerank_reads=32)) == \
+        float(model.latency_us(jnp.float32(10), rerank_reads=32))
+    # Indexes saved without a model stay loadable and report None.
+    p2 = tmp_path / "without_model.npz"
+    save_index(p2, index)
+    assert load_disk_model(p2) is None
+    assert load_index(p2).n == index.n
