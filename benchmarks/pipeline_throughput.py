@@ -1,0 +1,193 @@
+"""Batch-stream throughput of the staged double-buffered serving engine.
+
+The PR 2 bucketed path syncs on every batch's probe before host-side
+bucketing, so the accelerator idles exactly while the host partitions — and
+again between buckets, whose results it gathered eagerly. The serving engine
+(``repro.serving.SearchEngine.search_batches``) removes both stalls: batch
+i+1's probe is dispatched before batch i's bucketing/continue are collected
+(double buffering), and within a batch every bucket's continue program is
+dispatched before any is gathered. Scheduling only — results are
+bit-identical to the unpipelined path, so the comparison is equal-recall by
+construction (asserted here, and property-tested in
+``tests/test_serving_pipeline.py``).
+
+Reported: batch-stream throughput (queries/s over a fixed stream of batches)
+for (a) the PR 2 bucketed path (per-batch
+``beam_search_exact_adaptive(num_buckets=4)``, blocking each batch), (b) the
+engine unpipelined (same staging, no lookahead), (c) the engine
+double-buffered, and (d) double-buffered with the auto-picked bucket family
+(granted-budget histogram) instead of the fixed 4.
+
+``python -m benchmarks.pipeline_throughput --smoke`` runs a ~60s CPU smoke
+(tiny graph) that asserts result identity and a sane speedup; CI runs it
+next to the bucketed smoke.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro import serving
+from repro.core import build, distance, search
+
+BUDGET = search.AdaptiveBeamBudget(l_min=16, l_max=96, lam=0.35,
+                                   lid_k=16, probe_hops=8, hop_factor=4)
+NUM_BUCKETS = 4          # the PR 2 fixed bucket family
+BATCH = 24
+NUM_BATCHES = 16
+
+
+def make_stream(q, batch: int = BATCH, num_batches: int = NUM_BATCHES,
+                seed: int = 0):
+    """Deterministic batch stream: fixed-size batches sampled with
+    replacement from the query pool (a steady-traffic proxy). Returns
+    (batches, selections) — selections index the ground-truth rows."""
+    rng = np.random.default_rng(seed)
+    qn = np.asarray(q)
+    sels = [rng.integers(0, qn.shape[0], batch) for _ in range(num_batches)]
+    return [qn[s] for s in sels], sels
+
+
+def _baseline_pr2(x, idx, batches, budget, num_buckets):
+    """The PR 2 bucketed path: one blocking engine call per batch."""
+    out = []
+    for qb in batches:
+        ids, d2, stats, astats = search.beam_search_exact_adaptive(
+            x, idx.adj, qb, idx.entry, budget, k=10, num_buckets=num_buckets)
+        jax.block_until_ready(ids)
+        out.append((np.asarray(ids), np.asarray(d2),
+                    np.asarray(stats.hops)))
+    return out
+
+
+def _engine_results(results):
+    return [(r.ids, r.d2, np.asarray(r.stats.hops)) for r in results]
+
+
+def _timed_rounds(fns: dict, warmup: int = 1, rounds: int = 4):
+    """Interleaved timing: each round runs every variant once, in order, and
+    each variant keeps its best round.  Interleaving decorrelates the
+    comparison from time-local machine noise (CPU throttling, co-tenants) —
+    sequential best-of-N was measured to swing the ratio by +/-30% on a
+    shared 2-core box.  Returns ({name: last result}, {name: best seconds})."""
+    outs = {}
+    for _ in range(warmup):
+        for name, fn in fns.items():
+            outs[name] = fn()
+    best = {name: float("inf") for name in fns}
+    for _ in range(rounds):
+        for name, fn in fns.items():
+            t0 = time.perf_counter()
+            outs[name] = fn()
+            best[name] = min(best[name], time.perf_counter() - t0)
+    return outs, best
+
+
+def _assert_identical(a, b, what):
+    for (ia, da, ha), (ib, db, hb) in zip(a, b):
+        np.testing.assert_array_equal(ia, ib, err_msg=what)
+        np.testing.assert_array_equal(da, db, err_msg=what)
+        np.testing.assert_array_equal(ha, hb, err_msg=what)
+
+
+def compare(csv: common.Csv, x, q, gt, idx, budget=BUDGET,
+            num_buckets=NUM_BUCKETS, batch=BATCH, num_batches=NUM_BATCHES):
+    """Throughput of baseline vs engine (unpipelined / pipelined / auto)."""
+    batches, sels = make_stream(q, batch, num_batches)
+    n_q = batch * num_batches
+    backend = serving.ExactBackend(x, idx.adj, idx.entry)
+    eng = serving.SearchEngine(backend, budget, k=10, num_buckets=num_buckets)
+    eng_auto = serving.SearchEngine(backend, budget, k=10, num_buckets="auto")
+
+    outs, times = _timed_rounds({
+        "pr2": lambda: _baseline_pr2(x, idx, batches, budget, num_buckets),
+        "unp": lambda: _engine_results([eng.search(qb) for qb in batches]),
+        "pip": lambda: _engine_results(list(eng.search_batches(batches))),
+        "auto": lambda: list(eng_auto.search_batches(batches)),
+    })
+    base_out, dt_base = outs["pr2"], times["pr2"]
+    unp_out, dt_unp = outs["unp"], times["unp"]
+    pip_out, dt_pip = outs["pip"], times["pip"]
+    auto_res, dt_auto = outs["auto"], times["auto"]
+
+    # Equal results by construction: the pipeline only reorders dispatch,
+    # and the bucket family (fixed or histogram-picked) is pure scheduling.
+    _assert_identical(pip_out, unp_out, "pipelined != unpipelined")
+    _assert_identical(pip_out, base_out, "engine != PR2 bucketed path")
+    _assert_identical(_engine_results(auto_res), base_out,
+                      "auto-bucketed != PR2 bucketed path")
+
+    # Headline: the engine as deployed (double buffering + deferred bucket
+    # gathers + auto bucket family) vs the PR 2 per-batch bucketed path.
+    speedup = dt_base / max(dt_auto, 1e-12)
+    speedup_fixed = dt_base / max(dt_pip, 1e-12)
+    recall = float(np.mean([
+        distance.recall_at_k(ids, gt[s]) for (ids, _, _), s
+        in zip(pip_out, sels)]))
+    csv.add("pipeline/pr2_bucketed", dt_base / n_q,
+            f"stream_wall={dt_base * 1e3:.1f}ms qps={n_q / dt_base:.1f} "
+            f"recall={recall:.4f} (all rows serve identical results)")
+    csv.add("pipeline/engine_unpipelined_fixed4", dt_unp / n_q,
+            f"stream_wall={dt_unp * 1e3:.1f}ms qps={n_q / dt_unp:.1f}")
+    csv.add("pipeline/engine_pipelined_fixed4", dt_pip / n_q,
+            f"stream_wall={dt_pip * 1e3:.1f}ms qps={n_q / dt_pip:.1f} "
+            f"speedup_vs_pr2={speedup_fixed:.2f}x")
+    ceilings = sorted({r.ceilings for r in auto_res})
+    csv.add("pipeline/engine_pipelined", dt_auto / n_q,
+            f"stream_wall={dt_auto * 1e3:.1f}ms qps={n_q / dt_auto:.1f} "
+            f"speedup_vs_pr2={speedup:.2f}x ceilings={ceilings}")
+    return {"pr2": dt_base, "unpipelined": dt_unp,
+            "pipelined_fixed": dt_pip, "pipelined": dt_auto,
+            "speedup": speedup, "speedup_fixed": speedup_fixed}
+
+
+def run(csv: common.Csv, scale: str = "small"):
+    x, q, gt = common.dataset("gist-proxy", scale)
+    idx = common.cached_graph(
+        f"gist-proxy-{scale}-mcgi",
+        lambda: build.build_mcgi(x, common.BUILD_CFG))
+    out = compare(csv, x, q, gt, idx)
+    csv.add("pipeline/headline", 0.0,
+            f"double-buffered engine {out['speedup']:.2f}x vs PR2 bucketed "
+            f"path on gist-proxy {scale} (identical results)")
+    return out
+
+
+def smoke() -> None:
+    """~60s CPU smoke (CI): tiny graph; asserts identity + a sane speedup."""
+    from repro.data import make_dataset
+
+    x, q = make_dataset("tiny-mixture", seed=0)
+    x, q = x[:2000], q[:64]
+    gt_d, gt = distance.brute_force_topk(q, x, k=10)
+    idx = build.build_mcgi(
+        x, build.BuildConfig(degree=16, beam_width=32, iters=1, batch=512,
+                             max_hops=64))
+    csv = common.Csv()
+    budget = search.AdaptiveBeamBudget(l_min=8, l_max=32, lam=0.35)
+    out = compare(csv, x, q, gt, idx, budget=budget, num_buckets=4,
+                  batch=16, num_batches=8)
+    # Identity is asserted inside compare(); the smoke only sanity-bounds the
+    # schedule (CI boxes are noisy — the >=1.2x claim is the full run's).
+    assert out["pipelined"] <= out["pr2"] * 1.15, out
+    print(f"# smoke ok: pipelined {out['speedup']:.2f}x vs PR2 bucketed, "
+          f"identical results")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="~60s CI smoke of the pipelined engine")
+    ap.add_argument("--scale", default="small", choices=("small", "paper"))
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+    else:
+        out_csv = common.Csv()
+        print("name,us_per_call,derived")
+        run(out_csv, scale=args.scale)

@@ -15,8 +15,6 @@ from __future__ import annotations
 
 import functools
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
@@ -26,7 +24,6 @@ from repro.core.ivf import build_ivf, search_ivf
 
 L_SWEEP = (8, 16, 24, 32, 48, 64, 96)
 NPROBE_SWEEP = (1, 2, 4, 8, 16, 32)
-ADAPTIVE_BUCKETS = 4
 
 
 def _graph_ops(x, q, gt, idx, tag, csv, sweep=L_SWEEP):
@@ -47,22 +44,24 @@ def _graph_ops(x, q, gt, idx, tag, csv, sweep=L_SWEEP):
 
 
 def _adaptive_ops(x, q, gt, idx, tag, csv, sweep=L_SWEEP):
-    """The deployed engine: per-query budgets over [min(sweep), max(sweep)],
-    budget-bucketed continue phase. One row — the engine picks its own
-    per-query operating point inside the sweep's range."""
+    """The deployed engine (``repro.serving.SearchEngine``): per-query
+    budgets over [min(sweep), max(sweep)], histogram-picked budget buckets.
+    One row — the engine picks its own per-query operating point inside the
+    sweep's range."""
+    from repro import serving
+
     cfg = search.AdaptiveBeamBudget(
         l_min=min(sweep), l_max=max(sweep), lam=0.35)
-    fn = functools.partial(
-        search.beam_search_exact_adaptive, x, idx.adj, q, idx.entry,
-        cfg, k=10, num_buckets=ADAPTIVE_BUCKETS,
-    )
-    (ids, _, stats, astats), dt = common.timed(lambda: fn())
-    r = float(distance.recall_at_k(ids, gt))
+    eng = serving.SearchEngine(
+        serving.ExactBackend(x, idx.adj, idx.entry), cfg, k=10,
+        num_buckets="auto")
+    res, dt = common.timed(lambda: eng.search(q))
+    r = float(distance.recall_at_k(res.ids, gt))
     qps = q.shape[0] / dt
-    hops = float(stats.hops.mean())
+    hops = float(np.mean(np.asarray(res.stats.hops)))
     csv.add(f"recall_qps/{tag}/adaptive", dt / q.shape[0],
             f"recall={r:.4f} qps={qps:.1f} io_hops={hops:.1f} "
-            f"meanL={float(astats.budget.mean()):.1f}")
+            f"meanL={float(np.mean(np.asarray(res.astats.budget))):.1f}")
     return (r, qps, hops)
 
 

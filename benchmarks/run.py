@@ -27,6 +27,7 @@ def main() -> None:
         kernel_bench,
         latency,
         lid_accuracy,
+        pipeline_throughput,
         recall_qps,
         recall_vs_L,
         scalability,
@@ -40,6 +41,7 @@ def main() -> None:
         "scalability": scalability.run,         # Fig 2a / Fig 3
         "build_time": build_time.run,           # §3.3
         "adaptive_beam": adaptive_beam.run,     # beyond-paper (Prop. 4.2)
+        "pipeline": pipeline_throughput.run,    # serving-engine pipeline
         "kernels": kernel_bench.run,            # hot-op microbench
     }
     if args.only:

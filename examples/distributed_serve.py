@@ -1,6 +1,11 @@
-"""Distributed MCGI serving on a virtual 8-device mesh: shard the index,
-fan out queries, merge global top-k, then kill a shard and watch the hedged
-merge degrade gracefully — the fault-tolerance story at example scale.
+"""Distributed MCGI serving on a virtual 8-device mesh, lowered through the
+unified serving engine (``repro.serving.SearchEngine`` over a
+``DistributedBackend``): shard the index, fan out queries, merge global
+top-k, then kill a shard and watch the hedged merge degrade gracefully — the
+fault-tolerance story at example scale. The distributed step is one compiled
+program (adaptive budgets and bucket deadlines are in-graph), so the engine
+pipelines it at step granularity: ``search_batches`` dispatches batch i+1
+before collecting batch i.
 
     PYTHONPATH=src python examples/distributed_serve.py
 (sets XLA_FLAGS itself; run as a script, not inside another jax process)
@@ -56,35 +61,44 @@ def main():
     }
     gt_d, gt_ids = brute_force_topk(queries, x, k=10)
 
-    d2, shard_ids, local_ids = ss.distributed_search(
-        mesh, arrays, queries, beam_width=32, max_hops=64, k=10,
-        query_chunk=16)
-    gids = np.asarray(shard_ids) * per + np.asarray(local_ids)
-    print(f"[dist] all shards up:   recall@10="
-          f"{float(recall_at_k(jnp.asarray(gids), gt_ids)):.4f}")
+    from repro import serving  # noqa: E402
 
-    # Straggler/fault injection: shard 5 misses its deadline.
+    backend = serving.DistributedBackend(
+        mesh, arrays, beam_width=32, max_hops=64, k=10, query_chunk=16)
+    engine = serving.SearchEngine(backend, k=10)
+
+    # Stream two chunks through the pipelined executor: batch 1 is
+    # dispatched before batch 0 is collected (step-granularity overlap).
+    res = list(engine.search_batches([queries[:32], queries[32:]]))
+    gids = np.concatenate([r.ids for r in res])
+    print(f"[dist] all shards up:   recall@10="
+          f"{float(recall_at_k(jnp.asarray(gids), gt_ids)):.4f} "
+          f"(2-batch double-buffered stream)")
+
+    # Straggler/fault injection: shard 5 misses its deadline — a runtime
+    # mask on the live engine, no recompilation.
     ok = jnp.ones((n_shards,), jnp.bool_).at[5].set(False)
-    ok = jax.device_put(ok, flag)
-    d2, shard_ids, local_ids = ss.distributed_search(
-        mesh, arrays, queries, shard_ok=ok, beam_width=32, max_hops=64,
-        k=10, query_chunk=16)
-    gids = np.asarray(shard_ids) * per + np.asarray(local_ids)
-    r = float(recall_at_k(jnp.asarray(gids), gt_ids))
+    backend.set_shard_ok(jax.device_put(ok, flag))
+    res = engine.search(queries)
+    r = float(recall_at_k(jnp.asarray(res.ids), gt_ids))
     print(f"[dist] shard 5 dropped: recall@10={r:.4f} "
           f"(graceful: lost ~1/{n_shards} of the data, no recompilation, "
           f"no stall)")
-    assert (np.asarray(shard_ids) != 5).all()
+    assert (res.extras["shard_ids"] != 5).all()
+    backend.set_shard_ok(jax.device_put(jnp.ones((n_shards,), jnp.bool_),
+                                        flag))
 
     # Adaptive per-query budgets on every shard (Prop. 4.2 in the engine):
-    # each shard grants each query a budget from its own probe-phase LID.
+    # each shard grants each query a budget from its own probe-phase LID,
+    # in-graph — the engine treats the whole step as one monolithic program.
     from repro.core.search import AdaptiveBeamBudget
-    d2, shard_ids, local_ids = ss.distributed_search(
-        mesh, arrays, queries, beam_width=32, max_hops=64, k=10,
-        query_chunk=16,
-        beam_budget=AdaptiveBeamBudget(l_min=8, l_max=32, lam=0.35))
-    gids = np.asarray(shard_ids) * per + np.asarray(local_ids)
-    r = float(recall_at_k(jnp.asarray(gids), gt_ids))
+    adaptive = serving.SearchEngine(
+        serving.DistributedBackend(
+            mesh, arrays, beam_width=32, max_hops=64, k=10, query_chunk=16,
+            beam_budget=AdaptiveBeamBudget(l_min=8, l_max=32, lam=0.35)),
+        k=10)
+    res = adaptive.search(queries)
+    r = float(recall_at_k(jnp.asarray(res.ids), gt_ids))
     print(f"[dist] adaptive budgets: recall@10={r:.4f} "
           f"(per-shard probe -> online LID -> per-query beam budget)")
 

@@ -1,33 +1,36 @@
 """End-to-end serving driver (the paper's kind of system is a *serving*
 system, so this is the required e2e example): build a disk-resident MCGI
 index over ~50k vectors, then serve continuous batched query traffic through
-a request batcher, reporting recall / QPS / I-O / modelled-SSD latency live.
+a request batcher and the unified serving engine
+(``repro.serving.SearchEngine`` over a ``TieredBackend``), reporting
+recall / QPS / I-O / modelled-SSD latency live.
 
     PYTHONPATH=src python examples/serve_e2e.py [--n 50000] [--seconds 20]
-        [--adaptive [--buckets 4] [--calibrate [--recall-target 0.95]]]
+        [--adaptive [--buckets auto] [--calibrate [--joint]
+         [--recall-target 0.95]]]
 
 Calibration usage
 -----------------
 ``--adaptive`` serves with per-query beam budgets (Prop. 4.2); the strength
 of the budget law, ``lam``, trades mean I/O for recall and is geometry
 dependent. Rather than hand-tuning it, pass ``--calibrate``: before traffic
-starts, ``repro.core.calibrate.calibrate_budget_law`` measures recall on a
-held-out query sample over the *deployed* two-tier path and bisects for the
-largest ``lam`` still meeting ``--recall-target`` — maximum budget-law I/O
-savings subject to the recall SLO. If even ``lam = 0`` misses the target,
-the hop budget is binding and ``hop_factor`` is doubled automatically. The
-same pass is available programmatically:
+starts, the engine's recalibration hook measures recall on a held-out query
+sample over the *deployed* two-tier path and bisects for the largest ``lam``
+still meeting ``--recall-target`` — maximum budget-law I/O savings subject
+to the recall SLO. If even ``lam = 0`` misses the target, the hop budget is
+binding and ``hop_factor`` is doubled automatically. ``--joint`` extends the
+fit to (lam, l_min) — the smallest feasible budget floor, then the largest
+feasible lam at it. The same hook serves index refreshes programmatically
+(Online-MCGI inserts shift the LID population):
 
-    from repro.core import calibrate
-    result = calibrate.calibrate_budget_law(
-        calibrate.tiered_recall_eval(index, queries, gt_ids, k=10),
-        base_cfg, recall_target=0.95)
-    budget_cfg = result.budget_cfg(base_cfg)   # lam + hop_factor fitted
+    engine.update_backend(new_index)           # swap arrays, keep jit caches
+    engine.recalibrate(queries, gt_ids, recall_target=0.95, joint=True)
 
-``--buckets N`` additionally runs the continue phase budget-bucketed
-(queries grouped by granted budget, each bucket jitted to its own ceiling)
-— identical results, lower batch wall-clock, because converged lanes stop
-burning compute for the batch's slowest query.
+``--buckets`` controls the continue phase's budget buckets — ``auto``
+(default) picks the bucket-ceiling family per batch from the granted-budget
+histogram; an integer pins the fixed family; 0/1 disables bucketing.
+Identical results either way, lower batch wall-clock, because converged
+lanes stop burning compute for the batch's slowest query.
 """
 import argparse
 import dataclasses
@@ -35,16 +38,15 @@ import queue
 import threading
 import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import serving
 from repro.core import BuildConfig, brute_force_topk, build_mcgi, recall_at_k
 from repro.core.search import AdaptiveBeamBudget
 from repro.data import synthetic
 from repro.index import build_tiered_index
-from repro.index.disk import (DiskTierModel, search_tiered,
-                              search_tiered_adaptive)
+from repro.index.disk import DiskTierModel
 
 
 class RequestBatcher:
@@ -81,18 +83,27 @@ def main():
                     help="per-query adaptive beam budgets (l_min=16, "
                          "l_max=--beam)")
     ap.add_argument("--lam", type=float, default=0.35)
-    ap.add_argument("--buckets", type=int, default=0,
-                    help="budget buckets for the continue phase "
-                         "(0/1 = single-program path)")
+    from repro.launch.serve import buckets_arg
+
+    ap.add_argument("--buckets", default="auto", type=buckets_arg,
+                    help="continue-phase bucket family: 'auto' "
+                         "(histogram-picked, default), an integer count, "
+                         "or 0/1 for the single-program path")
     ap.add_argument("--calibrate", action="store_true",
                     help="fit lam (and hop_factor if binding) to "
                          "--recall-target on a held-out sample before "
                          "serving")
+    ap.add_argument("--joint", action="store_true",
+                    help="with --calibrate: fit (lam, l_min) jointly")
     ap.add_argument("--recall-target", type=float, default=0.95)
     args = ap.parse_args()
-    if not args.adaptive and (args.calibrate or args.buckets > 1):
+    num_buckets = args.buckets
+    if not args.adaptive and (args.calibrate or
+                              (num_buckets != "auto" and num_buckets > 1)):
         ap.error("--calibrate/--buckets configure the adaptive engine; "
                  "pass --adaptive as well")
+    if args.joint and not args.calibrate:
+        ap.error("--joint refines --calibrate; pass both")
 
     spec = dataclasses.replace(
         synthetic.REGISTRY["sift1b-proxy"], n=args.n, n_queries=1000)
@@ -107,36 +118,25 @@ def main():
           f"{index.slow_tier_bytes()/1e6:.0f}MB")
     gt_d, gt_ids = brute_force_topk(queries, x, k=10)
 
+    backend = serving.TieredBackend(index)
     if args.adaptive:
         budget_cfg = AdaptiveBeamBudget(l_min=min(16, args.beam),
                                         l_max=args.beam, lam=args.lam)
+        engine = serving.SearchEngine(backend, budget_cfg, k=10,
+                                      num_buckets=num_buckets)
         if args.calibrate:
-            from repro.core import calibrate
-
-            result = calibrate.calibrate_budget_law(
-                calibrate.tiered_recall_eval(index, queries, gt_ids, k=10),
-                budget_cfg, args.recall_target)
-            budget_cfg = result.budget_cfg(budget_cfg)
+            result = engine.recalibrate(
+                queries, gt_ids, recall_target=args.recall_target,
+                joint=args.joint)
             print(f"[e2e] calibrated lam={result.lam:.4f} "
+                  f"l_min={engine.budget_cfg.l_min} "
                   f"hop_factor={result.hop_factor} "
                   f"recall={result.recall:.4f} target={result.target:.2f} "
                   f"({'hit' if result.achieved else 'MISSED'})")
-        if args.buckets > 1:
-            # The bucketed scheduler is host-side: no outer jit (the probe
-            # and per-bucket continue calls are jitted internally).
-            num_buckets = args.buckets
-            search = lambda q: search_tiered_adaptive(
-                index, q, budget_cfg, k=10, num_buckets=num_buckets)[:3]
-        else:
-            search = jax.jit(
-                lambda q: search_tiered_adaptive(
-                    index, q, budget_cfg, k=10)[:3]
-            )
     else:
-        search = jax.jit(
-            lambda q: search_tiered(index, q, beam_width=args.beam, k=10)
-        )
-    _ = search(queries[:64])  # warm the compile cache
+        engine = serving.SearchEngine(backend, None, k=10,
+                                      beam_width=args.beam)
+    _ = engine.search(queries[:64])  # warm the compile cache
 
     batcher = RequestBatcher(max_batch=64)
     stop = threading.Event()
@@ -171,12 +171,12 @@ def main():
         # vector is a wildly atypical "query" that would skew every real
         # query's budget at low load.
         qb_p = np.pad(qb, ((0, pad), (0, 0)), mode="wrap") if pad else qb
-        ids, d2, stats = search(jnp.asarray(qb_p))
-        jax.block_until_ready(ids)
+        res = engine.search(jnp.asarray(qb_p))
         now = time.perf_counter()
         lat.extend((now - s) * 1e3 for s in submit_times)
-        recs.append(float(recall_at_k(ids[: len(items)], gt_ids[idxs])))
-        ios.append(float(stats.hops[: len(items)].mean()))
+        recs.append(float(recall_at_k(
+            jnp.asarray(res.ids[: len(items)]), gt_ids[idxs])))
+        ios.append(float(np.mean(np.asarray(res.stats.hops)[: len(items)])))
         served += len(items)
     stop.set()
 

@@ -27,25 +27,31 @@ class McgiDatasetConfig:
     k: int = 10
     max_hops: int = 192
     # Adaptive budget-law serving defaults (Prop. 4.2 + calibration pass).
-    # ``lam`` values are calibrated against ``recall_target`` on held-out
-    # query samples of the matching proxy datasets
-    # (repro.core.calibrate.calibrate_budget_law); re-fit after any index
-    # build-parameter change. Higher-LID datasets (GIST/T2I mixtures) need a
-    # stronger budget spread than the near-homogeneous SIFT geometry.
+    # ``lam`` and ``l_min`` are *jointly* calibrated against
+    # ``recall_target`` on held-out query samples of the matching proxy
+    # datasets (repro.core.calibrate.calibrate_budget_law_joint: smallest
+    # feasible budget floor, then largest feasible lam at that floor);
+    # re-fit after any index build-parameter change. Higher-LID datasets
+    # (GIST/T2I mixtures) need a stronger budget spread *and* a higher
+    # floor than the near-homogeneous SIFT geometry, whose easy lanes
+    # tolerate l_min = l_search/16.
     lam: float = 0.35
+    l_min: int | None = None     # None -> max(8, l_search // 8)
     probe_hops: int = 8
     hop_factor: int = 4
     recall_target: float = 0.95
-    budget_buckets: int = 4      # bucketed continue-phase execution
+    budget_buckets: int = 4      # ceiling of the auto-picked bucket family
 
     def beam_budget(self):
         """The serving engine's AdaptiveBeamBudget for this dataset:
         l_max = l_search (same worst-case quality budget as fixed-beam),
-        l_min an eighth of it (floor 8)."""
+        l_min the jointly calibrated floor (default: an eighth, floor 8)."""
         from repro.core.search import AdaptiveBeamBudget
 
+        l_min = self.l_min if self.l_min is not None else max(
+            8, self.l_search // 8)
         return AdaptiveBeamBudget(
-            l_min=max(8, self.l_search // 8), l_max=self.l_search,
+            l_min=min(l_min, self.l_search), l_max=self.l_search,
             lam=self.lam, probe_hops=self.probe_hops,
             hop_factor=self.hop_factor)
 
@@ -64,18 +70,36 @@ class McgiDatasetConfig:
         return calibrate_budget_law(
             eval_recall, base, self.recall_target).budget_cfg(base)
 
+    def jointly_calibrated_beam_budget(self, make_eval):
+        """Joint (lam, l_min) re-fit against this dataset's recall target.
+
+        ``make_eval`` builds a recall evaluator specialised to one candidate
+        floor (``lambda cfg: calibrate.tiered_recall_eval(..., base_cfg=cfg)``);
+        the fitted floor and exponent come back as a ready-to-serve budget.
+        Fold the fitted values into this config's ``lam``/``l_min`` defaults
+        after any index build-parameter change.
+        """
+        from repro.core.calibrate import calibrate_budget_law_joint
+
+        base = self.beam_budget()
+        return calibrate_budget_law_joint(
+            make_eval, base, self.recall_target).budget_cfg(base)
+
 
 _DATASETS = (
+    # (lam, l_min) pairs from the joint calibration pass on the proxies:
+    # SIFT-like geometry sustains the halved floor (l_search/16), the
+    # high-LID GIST/T2I mixtures keep the default eighth.
     McgiDatasetConfig("mcgi-sift1m", 1_000_000, 128, 64, 100, None, "float32",
-                      lam=0.25),
+                      lam=0.25, l_min=8),
     McgiDatasetConfig("mcgi-glove100", 1_200_000, 100, 64, 100, None,
-                      "float32", lam=0.3),
+                      "float32", lam=0.3, l_min=8),
     McgiDatasetConfig("mcgi-gist1m", 1_000_000, 960, 96, 150, None, "float32",
-                      lam=0.5),
+                      lam=0.5, l_min=16),
     McgiDatasetConfig("mcgi-sift1b", 1_000_000_000, 128, 32, 50, 16, "uint8",
-                      lam=0.25),
+                      lam=0.25, l_min=8),
     McgiDatasetConfig("mcgi-t2i1b", 1_000_000_000, 200, 32, 50, 16, "float32",
-                      lam=0.45),
+                      lam=0.45, l_min=16),
 )
 
 

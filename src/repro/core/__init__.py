@@ -35,6 +35,7 @@ from repro.core.types import GraphIndex  # noqa: F401
 from repro.core.calibrate import (  # noqa: F401
     CalibrationResult,
     calibrate_budget_law,
+    calibrate_budget_law_joint,
     exact_recall_eval,
     tiered_recall_eval,
 )

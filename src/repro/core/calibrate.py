@@ -24,6 +24,14 @@ target, the hop budget (not the beam law) is the binding constraint:
 
 Everything is deterministic under a fixed seed: the held-out sample, the
 search engine, and the bisection path.
+
+Beyond the single-knob fit, :func:`calibrate_budget_law_joint` fits
+(lam, l_min) *jointly*: the budget floor l_min sets the law's geometric mid
+(the real mean-I/O lever) and is exactly the recall pressure point the lam
+bisection works around, so the joint pass scans candidate floors ascending
+(max savings first) and runs the lam bisection at each until one meets the
+target. The serving engine exposes both passes live via
+``repro.serving.SearchEngine.recalibrate`` (the Online-MCGI refresh hook).
 """
 from __future__ import annotations
 
@@ -51,6 +59,12 @@ class CalibrationResult:
       achieved:   whether ``recall >= target`` was reached inside the ranges.
       history:    every (lam, hop_factor, recall) evaluation, in order — the
                   measured recall curve the bisection walked.
+      l_min:      fitted budget floor when the joint (lam, l_min) pass ran
+                  (:func:`calibrate_budget_law_joint`); None for the plain
+                  lam-only fit.
+      joint_history: per-l_min-candidate summary of the joint pass —
+                  (l_min, lam, hop_factor, recall, achieved) in evaluation
+                  order; empty for the plain fit.
     """
 
     lam: float       # fitted exponent: largest value still meeting target
@@ -59,13 +73,18 @@ class CalibrationResult:
     target: float
     achieved: bool
     history: tuple[tuple[float, int, float], ...]
+    l_min: int | None = None
+    joint_history: tuple[tuple[int, float, int, float, bool], ...] = ()
 
     def budget_cfg(
         self, base: search_mod.AdaptiveBeamBudget
     ) -> search_mod.AdaptiveBeamBudget:
         """The base config with the fitted knobs substituted in."""
-        return dataclasses.replace(
+        out = dataclasses.replace(
             base, lam=self.lam, hop_factor=self.hop_factor)
+        if self.l_min is not None:
+            out = dataclasses.replace(out, l_min=self.l_min)
+        return out
 
 
 def bisect_lam(
@@ -158,6 +177,74 @@ def calibrate_budget_law(
                 achieved=bool(recall >= recall_target),
                 history=tuple(history))
         hop_factor *= 2
+
+
+def joint_l_min_candidates(
+    base_cfg: search_mod.AdaptiveBeamBudget, floor: int = 2
+) -> tuple[int, ...]:
+    """Default l_min grid for the joint fit: halving down from the base
+    config's floor to ``floor``, returned ascending (max-savings first)."""
+    cands = [int(base_cfg.l_min)]
+    while cands[-1] // 2 >= max(1, floor):
+        cands.append(cands[-1] // 2)
+    return tuple(sorted(set(cands)))
+
+
+def calibrate_budget_law_joint(
+    make_eval: Callable[
+        [search_mod.AdaptiveBeamBudget],
+        Callable[[search_mod.AdaptiveBeamBudget], float]],
+    base_cfg: search_mod.AdaptiveBeamBudget,
+    recall_target: float,
+    *,
+    l_min_candidates: tuple[int, ...] | None = None,
+    lam_range: tuple[float, float] = (0.0, 1.0),
+    max_hop_factor: int = 16,
+    tol: float = 0.02,
+    max_iters: int = 8,
+) -> CalibrationResult:
+    """Joint (lam, l_min) fit: the smallest feasible budget floor, then the
+    largest feasible lam at that floor.
+
+    ``l_min`` is the recall pressure point the lam bisection works around:
+    the budget law centers at the geometric mid ``sqrt(l_min * l_max)``, so
+    lowering ``l_min`` lowers *every* query's expected budget (the real I/O
+    lever), while recall pressure concentrates on the easy lanes shrunk
+    toward the floor. Feasibility is monotone in ``l_min`` (raising the floor
+    only widens frontiers), so the joint fit scans the candidate floors
+    *ascending* and returns the first whose lam bisection
+    (:func:`calibrate_budget_law`, hop_factor escalation included) meets the
+    target — maximum savings subject to the recall SLO. If no floor is
+    feasible the largest candidate's (best-recall) fit is returned with
+    ``achieved=False``.
+
+    ``make_eval`` builds a recall evaluator *specialised to one candidate's
+    shape knobs* — the shared-probe evaluators
+    (:func:`exact_recall_eval` / :func:`tiered_recall_eval` with
+    ``base_cfg=``) compile one probe per l_min candidate and reuse it across
+    that candidate's whole lam bisection. Deterministic end to end under a
+    fixed seed, like the plain fit.
+    """
+    if l_min_candidates is None:
+        l_min_candidates = joint_l_min_candidates(base_cfg)
+    cands = sorted({int(c) for c in l_min_candidates})
+    assert cands and 0 < cands[0] and cands[-1] <= base_cfg.l_max, cands
+    joint_hist: list[tuple[int, float, int, float, bool]] = []
+    last: CalibrationResult | None = None
+    for lm in cands:
+        cfg_lm = dataclasses.replace(base_cfg, l_min=lm)
+        result = calibrate_budget_law(
+            make_eval(cfg_lm), cfg_lm, recall_target, lam_range=lam_range,
+            max_hop_factor=max_hop_factor, tol=tol, max_iters=max_iters)
+        joint_hist.append((lm, result.lam, result.hop_factor, result.recall,
+                           result.achieved))
+        last = result
+        if result.achieved:
+            return dataclasses.replace(
+                result, l_min=lm, joint_history=tuple(joint_hist))
+    assert last is not None
+    return dataclasses.replace(
+        last, l_min=cands[-1], joint_history=tuple(joint_hist))
 
 
 def _candidate_grants(cfg: search_mod.AdaptiveBeamBudget, q_lid):

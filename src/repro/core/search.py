@@ -13,6 +13,12 @@ Two distance regimes:
 
 I/O accounting is carried in :class:`SearchStats` and surfaced by every
 benchmark.
+
+This module holds the *pure search kernels* only — fixed-beam and adaptive
+probe/continue programs plus their jit wrappers. Serve-time control flow
+(host-side bucket scheduling, batch pipelining, recalibration) lives in
+:mod:`repro.serving`; the ``num_buckets=`` convenience on the adaptive entry
+points below delegates to that scheduler.
 """
 from __future__ import annotations
 
@@ -22,7 +28,6 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 Array = jax.Array
 INVALID = -1
@@ -510,19 +515,6 @@ def _continue_pq_jit(codes, adj, probe_state, luts, budgets, hop_limits,
         hop_limits)
 
 
-def _pad_bucket_size(n: int, quantum: int = 8) -> int:
-    """Round a bucket's lane count up to a multiple of ``quantum``.
-
-    A vmapped ``while_loop`` pays full body cost for *every* lane on every
-    iteration (padding lanes are not free), so the pad grid must be fine:
-    multiples of 8 cap the inflation at <= 12.5% for any bucket of >= 8 real
-    lanes, while keeping the jit cache to at most Q/8 shapes per bucket —
-    coarser (power-of-two) padding was measured to give back the entire
-    bucketing win on the largest bucket (66 -> 128 lanes ~= 2x its work).
-    """
-    return max(quantum, ((n + quantum - 1) // quantum) * quantum)
-
-
 def _bucketed_continue(
     continue_fn,
     probe_state,
@@ -531,50 +523,19 @@ def _bucketed_continue(
     hop_limits: Array,
     ceilings: tuple[int, ...],
 ):
-    """Host-side bucket scheduler for the continue phase.
+    """Host-side budget-bucketed continue phase, via the serving scheduler.
 
-    Queries are grouped by granted budget into the ``ceilings`` buckets and
-    each bucket resumes as its own (cached-jit) continue call. A vmapped
-    ``while_loop`` iterates until its *slowest* lane converges, so in the
-    single-program path a batch with one hard query burns every easy lane's
-    compute until the hard one finishes; per-bucket, the slowest lane is
-    bounded by the bucket's own ceiling-derived hop limit — converged lanes
-    actually free compute instead of idling.
-
-    Per-query budgets/hop limits are passed through *unquantized*, so every
-    lane computes exactly what the unbucketed path would: results are
-    identical (scheduling changes, math doesn't). Buckets are padded to a
-    multiple-of-8 lane count (repeating a member row, results discarded) so
-    the jit cache sees a bounded shape family at <= 12.5% lane inflation.
-
+    The scheduling itself lives in :mod:`repro.serving.pipeline` (this module
+    keeps only the device-side search kernels); the eager per-bucket gather
+    discipline here is the historical behaviour of the ``num_buckets=`` entry
+    points.  The staged engine (:class:`repro.serving.engine.SearchEngine`)
+    drives the same scheduler with deferred gathers and double buffering.
     Returns (beam_ids, beam_d, hops, evals) in the original query order.
     """
-    q = ctxs.shape[0]
-    l_max = probe_state[0].shape[1]
-    bucket_idx = np.asarray(
-        quantize_budgets(budgets, ceilings)[0])
-    out_ids = np.empty((q, l_max), np.int32)
-    out_d = np.empty((q, l_max), np.float32)
-    out_hops = np.empty((q,), np.int32)
-    out_evals = np.empty((q,), np.int32)
-    for bi in range(len(ceilings)):
-        members = np.nonzero(bucket_idx == bi)[0]
-        if members.size == 0:
-            continue
-        padded = np.concatenate([
-            members,
-            np.full(_pad_bucket_size(members.size) - members.size,
-                    members[0]),
-        ])
-        sel = jnp.asarray(padded)
-        sub_state = jax.tree_util.tree_map(lambda a: a[sel], probe_state)
-        ids_b, d_b, hops_b, evals_b = continue_fn(
-            sub_state, ctxs[sel], budgets[sel], hop_limits[sel])
-        m = members.size
-        out_ids[members] = np.asarray(ids_b)[:m]
-        out_d[members] = np.asarray(d_b)[:m]
-        out_hops[members] = np.asarray(hops_b)[:m]
-        out_evals[members] = np.asarray(evals_b)[:m]
+    from repro.serving import pipeline as pipe
+
+    out_ids, out_d, out_hops, out_evals = pipe.bucketed_continue(
+        continue_fn, probe_state, ctxs, budgets, hop_limits, ceilings)
     return (jnp.asarray(out_ids), jnp.asarray(out_d),
             jnp.asarray(out_hops), jnp.asarray(out_evals))
 

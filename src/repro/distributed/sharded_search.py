@@ -18,6 +18,13 @@ mask is a runtime input, so dropping shards needs no recompilation.
 Memory discipline at N=10^9: per device the shard is ~3.9M points; queries
 are processed in ``query_chunk`` groups under ``lax.map`` so the visited
 bitmap stays at chunk x N_local bools.
+
+This module owns the *in-graph* distributed step only (shard walks, hedged
+merge, in-graph budget buckets / hop deadlines). Serving lowers through
+:class:`repro.serving.DistributedBackend` — the unified engine treats the
+step as one monolithic program and pipelines batch streams at step
+granularity; ``launch/cells.py`` prices the same step in the dry-run via
+``DistributedBackend.make_step``.
 """
 from __future__ import annotations
 

@@ -13,6 +13,19 @@ is the I/O metric the paper's Figures 2a/2c report. :class:`DiskTierModel`
 converts counted reads into modelled latency so benchmarks can report the
 paper's latency numbers under an explicit, documented hardware model rather
 than a hidden one.
+
+Serving architecture: the functions below (:func:`search_tiered`,
+:func:`search_tiered_adaptive`) are the kernel-level entry points over one
+tiered index; production serving lowers through
+:class:`repro.serving.SearchEngine` with a :class:`~repro.serving.TieredBackend`
+— the staged pipeline (admission -> probe -> host-bucket -> continue ->
+slow-tier rerank, double-buffered across batches) drives these same compiled
+programs, auto-picks the continue phase's bucket family from the
+granted-budget histogram, and hosts the recalibration hook for Online-MCGI
+index refreshes. ``DiskTierModel.latency_us(..., overlapped=True)`` is the
+matching latency model: the rerank batch of batch i is issued while batch
+i+1's walk computes, so per-batch modelled time is the max of the two
+stages, not their sum.
 """
 from __future__ import annotations
 
@@ -41,7 +54,8 @@ class DiskTierModel:
     read_latency_us: float = 90.0
     queue_depth: int = 8
 
-    def latency_us(self, reads: Array, rerank_reads: Array | int = 0) -> Array:
+    def latency_us(self, reads: Array, rerank_reads: Array | int = 0,
+                   *, overlapped: bool = False) -> Array:
         """Modelled wall time for ``reads`` sequential beam expansions plus an
         optional final rerank batch of ``rerank_reads`` node fetches.
 
@@ -49,11 +63,22 @@ class DiskTierModel:
         chase), so the ``reads`` term is serial. The rerank batch has no
         dependencies, so its reads are issued ``queue_depth`` at a time:
         ceil(rerank_reads / queue_depth) serialised rounds.
+
+        ``overlapped=True`` models the staged double-buffered engine
+        (``repro.serving.SearchEngine.search_batches``): reads are issued
+        while compute proceeds — batch i's independent rerank reads are in
+        flight during batch i+1's dependent walk chain, so in steady state a
+        batch costs the *max* of the two stages instead of their sum. The
+        dependent chain itself cannot be hidden (each hop's address comes
+        from the previous read); only the stage overlap is modelled.
         """
         serial = reads.astype(jnp.float32) * self.read_latency_us
         rerank_reads = jnp.asarray(rerank_reads, jnp.float32)
         rounds = jnp.ceil(rerank_reads / max(self.queue_depth, 1))
-        return serial + rounds * self.read_latency_us
+        rerank_time = rounds * self.read_latency_us
+        if overlapped:
+            return jnp.maximum(serial, rerank_time)
+        return serial + rerank_time
 
 
 @jax.tree_util.register_dataclass

@@ -324,6 +324,7 @@ def _recsys_cell(spec: cfg_base.ArchSpec, cell: cfg_base.ShapeCell, mesh,
 def _mcgi_cell(spec: cfg_base.ArchSpec, cell: cfg_base.ShapeCell, mesh,
                smoke: bool = False) -> Cell:
     from repro.distributed import sharded_search as ss
+    from repro.serving import DistributedBackend
 
     cfg = spec.smoke_config if smoke else spec.config
     dtype = jnp.uint8 if cfg.data_dtype == "uint8" else jnp.float32
@@ -335,10 +336,12 @@ def _mcgi_cell(spec: cfg_base.ArchSpec, cell: cfg_base.ShapeCell, mesh,
         n_queries=cell.meta["queries"] if not smoke else cfg.queries,
         data_dtype=dtype,
     )
-    # The serve cell lowers the *deployed* engine: per-query adaptive budgets
-    # (the dataset's calibrated budget law) with in-graph budget buckets /
-    # hop deadlines — what production serves is what the dry-run prices.
-    step = ss.make_distributed_search(
+    # The serve cell lowers the *deployed* engine: the serving subsystem's
+    # distributed step with per-query adaptive budgets (the dataset's jointly
+    # calibrated budget law) and in-graph budget buckets / hop deadlines —
+    # what production serves (repro.serving.SearchEngine over a
+    # DistributedBackend) is what the dry-run prices.
+    step = DistributedBackend.make_step(
         mesh, beam_width=cfg.l_search, max_hops=cfg.max_hops,
         k=cell.meta["k"], query_chunk=min(128, cfg.queries),
         use_pq=cfg.m_pq is not None,

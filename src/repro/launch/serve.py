@@ -1,20 +1,26 @@
 """MCGI serving launcher — build (or load) a tiered index and serve batched
-queries, reporting the paper's operational metrics (QPS, recall if ground
-truth is available, I/O per query, modelled SSD latency).
+queries through the unified serving engine (:mod:`repro.serving`), reporting
+the paper's operational metrics (QPS, recall if ground truth is available,
+I/O per query, modelled SSD latency).
 
     PYTHONPATH=src python -m repro.launch.serve --dataset tiny-mixture \
         --beam 48 --batch 64 --num-batches 20 [--index PATH] [--online] \
-        [--adaptive [--l-min 16] [--l-max 64] [--lam 0.35] [--buckets 4] \
-         [--calibrate [--recall-target 0.95]]]
+        [--adaptive [--l-min 16] [--l-max 64] [--lam 0.35] [--buckets auto] \
+         [--pipeline] [--calibrate [--joint] [--recall-target 0.95]]]
 
-``--adaptive`` switches to the per-query adaptive-beam engine
-(Prop. 4.2 deployed): each query's budget is set from its probe-phase LID,
-so easy queries stop paying slow-tier reads for hard ones. ``--buckets N``
-runs the continue phase budget-bucketed: queries grouped by granted budget,
-each bucket jitted to its own ceiling, so converged lanes free real compute
-(identical results, lower wall-clock). ``--calibrate`` fits ``lam`` (and, if
-needed, ``hop_factor``) to ``--recall-target`` on a held-out query sample
-before serving, instead of trusting the ``--lam`` default.
+``--adaptive`` serves the per-query adaptive-beam engine (Prop. 4.2
+deployed): each query's budget is set from its probe-phase LID, so easy
+queries stop paying slow-tier reads for hard ones. ``--buckets`` controls
+the continue phase's bucket family — ``auto`` (default) picks it per batch
+from the granted-budget histogram, an integer pins the fixed family, 0/1
+disables bucketing. ``--pipeline`` streams the batches through the
+double-buffered executor (batch i+1's probe dispatched before batch i is
+collected) instead of blocking per batch — identical results, higher
+throughput. ``--calibrate`` refits ``lam`` (and ``hop_factor`` if binding)
+to ``--recall-target`` on a held-out sample before serving; with ``--joint``
+the budget floor ``l_min`` is fitted too (smallest feasible floor, then the
+largest feasible lam at it). All serving paths — fixed and adaptive — lower
+through :class:`repro.serving.SearchEngine`.
 """
 from __future__ import annotations
 
@@ -24,6 +30,17 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+def buckets_arg(value: str):
+    """--buckets accepts 'auto' (histogram-picked family) or an integer."""
+    if value == "auto":
+        return value
+    try:
+        return int(value)
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"expected 'auto' or an integer, got {value!r}")
 
 
 def main() -> None:
@@ -45,24 +62,34 @@ def main() -> None:
     ap.add_argument("--l-max", type=int, default=None,
                     help="adaptive budget ceiling (default: --beam)")
     ap.add_argument("--lam", type=float, default=0.35)
-    ap.add_argument("--buckets", type=int, default=0,
-                    help="budget buckets for the continue phase "
-                         "(0/1 = single-program path)")
+    ap.add_argument("--buckets", default="auto", type=buckets_arg,
+                    help="continue-phase bucket family: 'auto' (histogram-"
+                         "picked, default), an integer count, or 0/1 for "
+                         "the single-program path")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="double-buffered batch stream (identical results, "
+                         "higher throughput)")
     ap.add_argument("--calibrate", action="store_true",
                     help="fit lam to --recall-target on a held-out sample "
                          "before serving")
+    ap.add_argument("--joint", action="store_true",
+                    help="with --calibrate: fit (lam, l_min) jointly")
     ap.add_argument("--recall-target", type=float, default=0.95)
     ap.add_argument("--calib-sample", type=int, default=256)
     args = ap.parse_args()
-    if not args.adaptive and (args.calibrate or args.buckets > 1):
-        ap.error("--calibrate/--buckets configure the adaptive engine; "
-                 "pass --adaptive as well")
+    num_buckets = args.buckets
+    if not args.adaptive and (args.calibrate or args.pipeline
+                              or (num_buckets != "auto" and num_buckets > 1)):
+        ap.error("--calibrate/--buckets/--pipeline configure the adaptive "
+                 "engine; pass --adaptive as well")
+    if args.joint and not args.calibrate:
+        ap.error("--joint refines --calibrate; pass both")
 
+    from repro import serving
     from repro.core import build, distance, online, search
     from repro.data import make_dataset
     from repro.index import build_tiered_index, load_index, save_index
-    from repro.index.disk import (DiskTierModel, search_tiered,
-                                  search_tiered_adaptive)
+    from repro.index.disk import DiskTierModel
 
     x, queries = make_dataset(args.dataset, seed=0)
     import pathlib
@@ -89,63 +116,73 @@ def main() -> None:
     gt_d, gt_i = distance.brute_force_topk(queries, x, k=args.k)
     model = DiskTierModel()
 
+    backend = serving.TieredBackend(index)
     if args.adaptive:
         l_max = args.l_max or args.beam
         budget_cfg = search.AdaptiveBeamBudget(
             l_min=min(args.l_min, l_max), l_max=l_max, lam=args.lam)
+        engine = serving.SearchEngine(backend, budget_cfg, k=args.k,
+                                      num_buckets=num_buckets)
         if args.calibrate:
-            from repro.core import calibrate as calib
-
-            result = calib.calibrate_budget_law(
-                calib.tiered_recall_eval(
-                    index, queries, gt_i, k=args.k,
-                    sample=args.calib_sample),
-                budget_cfg, args.recall_target)
-            budget_cfg = result.budget_cfg(budget_cfg)
+            result = engine.recalibrate(
+                queries, gt_i, recall_target=args.recall_target,
+                joint=args.joint, sample=args.calib_sample)
+            fitted = engine.budget_cfg
             print(f"[serve] calibrated lam={result.lam:.4f} "
-                  f"hop_factor={result.hop_factor} "
+                  f"l_min={fitted.l_min} hop_factor={result.hop_factor} "
                   f"recall={result.recall:.4f} "
                   f"(target {result.target:.2f}, "
                   f"{'hit' if result.achieved else 'MISSED'}, "
                   f"{len(result.history)} evals)")
-        rerank_batch = budget_cfg.l_max
-        num_buckets = args.buckets if args.buckets > 1 else None
-
-        def run(qb):
-            ids, d2, stats, astats = search_tiered_adaptive(
-                index, qb, budget_cfg, k=args.k, num_buckets=num_buckets)
-            return ids, stats, astats
+        rerank_batch = engine.budget_cfg.l_max
     else:
+        engine = serving.SearchEngine(backend, None, k=args.k,
+                                      beam_width=args.beam)
         rerank_batch = args.beam
 
-        def run(qb):
-            ids, d2, stats = search_tiered(index, qb, beam_width=args.beam,
-                                           k=args.k)
-            return ids, stats, None
-
     # Warmup compile.
-    _ = run(queries[: args.batch])
-    lat_ms, recalls, ios, budgets = [], [], [], []
+    _ = engine.search(queries[: args.batch])
     rng = np.random.default_rng(0)
-    t_all = time.time()
-    for i in range(args.num_batches):
-        sel = rng.integers(0, queries.shape[0], args.batch)
-        qb = queries[sel]
-        t0 = time.time()
-        ids, stats, astats = run(qb)
-        jax.block_until_ready(ids)
-        lat_ms.append((time.time() - t0) * 1e3)
-        recalls.append(float(distance.recall_at_k(ids, gt_i[sel])))
-        ios.append(float(stats.hops.mean()))
-        if astats is not None:
-            budgets.append(float(astats.budget.mean()))
-    total = time.time() - t_all
+    sels = [rng.integers(0, queries.shape[0], args.batch)
+            for _ in range(args.num_batches)]
+    qn = np.asarray(queries)
+    batches = [qn[s] for s in sels]
+    lat_ms, recalls, ios, budgets = [], [], [], []
+
+    def account(res, sel, t0):
+        lat_ms.append((time.perf_counter() - t0) * 1e3)
+        recalls.append(float(distance.recall_at_k(
+            jnp.asarray(res.ids), gt_i[sel])))
+        ios.append(float(np.mean(np.asarray(res.stats.hops))))
+        if res.astats is not None:
+            budgets.append(float(np.mean(np.asarray(res.astats.budget))))
+
+    t_all = time.perf_counter()
+    if args.pipeline:
+        # Double-buffered stream: per-batch latency is completion-to-
+        # completion (the pipeline hides the probe sync inside it).
+        t0 = t_all
+        for res, sel in zip(engine.search_batches(batches), sels):
+            account(res, sel, t0)
+            t0 = time.perf_counter()
+    else:
+        for qb, sel in zip(batches, sels):
+            t0 = time.perf_counter()
+            account(engine.search(qb), sel, t0)
+    total = time.perf_counter() - t_all
+    if args.pipeline and len(lat_ms) > 1:
+        # The first completion spans the whole pipeline fill (two batches
+        # dispatched + scheduled before anything is gathered); keep it in
+        # the throughput figure but not in the steady-state percentiles.
+        lat_ms = lat_ms[1:]
     qps = args.batch * args.num_batches / total
     ssd_ms = float(model.latency_us(
-        jnp.float32(np.mean(ios)), rerank_reads=rerank_batch)) / 1e3
+        jnp.float32(np.mean(ios)), rerank_reads=rerank_batch,
+        overlapped=args.pipeline)) / 1e3
     extra = f"meanL={np.mean(budgets):.1f} " if budgets else ""
+    mode = "pipelined" if args.pipeline else "per-batch"
     print(f"[serve] recall@{args.k}={np.mean(recalls):.4f} qps={qps:.1f} "
-          f"io/query={np.mean(ios):.1f} {extra}"
+          f"io/query={np.mean(ios):.1f} {extra}({mode}) "
           f"batch_lat p50={np.percentile(lat_ms,50):.1f}ms "
           f"p99={np.percentile(lat_ms,99):.1f}ms "
           f"ssd_model={ssd_ms:.2f}ms/query")

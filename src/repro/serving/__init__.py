@@ -1,0 +1,72 @@
+"""repro.serving — the unified MCGI serving engine.
+
+One subsystem owns the serve-time control flow that used to be spread across
+``core/search.py`` (adaptive entry points), ``launch/serve.py``,
+``launch/cells.py`` and ``distributed/sharded_search.py``:
+:class:`~repro.serving.engine.SearchEngine` wraps the exact / PQ / tiered /
+distributed backends behind one API, and a staged pipeline executor turns a
+stream of query batches into overlapped device + host work.
+
+Stage graph (per batch)
+-----------------------
+
+::
+
+    admission ──> probe ──> host-bucket ──> continue ──> slow-tier rerank
+    (device put,  (jitted   (sync budgets,  (one cached-  (one batched
+     LUT build)    l_min     pick ceilings   jit call per   slow-tier read
+                   walk)     from budget     bucket,        + top-k)
+                             histogram,      dispatched
+                             partition,      back-to-back,
+                             pad lanes)      gathered late)
+
+``admission``, ``probe``, ``continue`` and ``rerank`` are device programs
+(:mod:`repro.core.search` kernels, jitted once per shape); ``host-bucket`` is
+numpy scheduling (:mod:`repro.serving.pipeline`).  The bucket-ceiling family
+is auto-picked per batch from the granted-budget histogram
+(:func:`~repro.serving.pipeline.auto_bucket_ceilings`), replacing the fixed
+``num_buckets=4``.
+
+Buffering contract (double buffering)
+-------------------------------------
+
+``SearchEngine.search_batches`` keeps two batches in flight: batch i+1's
+``admission`` + ``probe`` are **dispatched** before batch i's budgets are
+synced and its continue programs **dispatched**, and batch i-1's continues
+are **gathered** only after that.  Because jax dispatch is asynchronous, the
+host's blocking transfers (batch i's granted budgets, batch i-1's results)
+overlap batch i+1's probe and batch i's continue compute — converged lanes
+free real wall-clock instead of the scheduler idling on the next probe sync.
+Within a batch, every bucket's continue program is dispatched before any is
+gathered, so the device queue never drains while the host reassembles.
+
+Invariants:
+
+* **Result transparency** — scheduling never changes math.  Pipelined
+  results are bit-identical to the unpipelined path (same compiled programs,
+  same inputs; only dispatch order moves), which is property-tested in
+  ``tests/test_serving_pipeline.py``.
+* **Order preservation** — results are yielded in admission order, one per
+  input batch; a single-batch stream degrades to plain ``search`` (no
+  prefetch partner, nothing blocks early).
+* **Ragged tails** — the final batch of a stream may be any size; it simply
+  jit-caches its own shape.
+
+Live reconfiguration: ``SearchEngine.recalibrate`` refits the budget law
+(lam, optionally jointly with l_min) against a recall target and deploys it
+in place; ``SearchEngine.update_backend`` swaps refreshed index arrays after
+Online-MCGI inserts.  Neither rebuilds the engine.
+"""
+from repro.serving.engine import (  # noqa: F401
+    BatchResult,
+    DistributedBackend,
+    ExactBackend,
+    SearchEngine,
+    TieredBackend,
+)
+from repro.serving.pipeline import (  # noqa: F401
+    auto_bucket_ceilings,
+    bucketed_continue,
+    pad_bucket_size,
+    partition_by_bucket,
+)

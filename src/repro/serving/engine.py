@@ -1,0 +1,445 @@
+"""The unified serving engine: one API over exact / PQ / tiered /
+distributed backends, with a staged double-buffered batch pipeline.
+
+See the package docstring (:mod:`repro.serving`) for the stage graph and the
+buffering contract.  The short version:
+
+* :class:`SearchEngine` wraps a *backend* (how distances are evaluated and
+  where the slow tier lives) behind ``search`` (one batch) and
+  ``search_batches`` (a stream, double-buffered).
+* *Staged* backends (:class:`ExactBackend`, :class:`TieredBackend`) expose
+  the adaptive engine's probe / continue / rerank programs separately, so the
+  pipeline can put the host's bucket scheduling *between* device programs of
+  different batches.  Results are bit-identical to the unpipelined path —
+  the same jitted programs run on the same inputs; only dispatch order moves.
+* *Monolithic* backends (:class:`DistributedBackend`, and every fixed-beam
+  path) run one compiled program per batch; the pipeline still overlaps
+  batch i's host-side collection with batch i+1's dispatched program.
+
+Recalibration is a first-class hook: :meth:`SearchEngine.recalibrate` refits
+the budget law (lam — and jointly l_min, see
+:func:`repro.core.calibrate.calibrate_budget_law_joint`) against a recall
+target on held-out queries and swaps the fitted config into the live engine.
+Online-MCGI inserts shift the LID population, so an index refresh calls
+:meth:`SearchEngine.update_backend` + ``recalibrate`` instead of rebuilding
+the engine; jit caches are keyed on shapes and survive both.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Iterable, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import search as search_mod
+from repro.serving import pipeline as pipe
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class BatchResult:
+    """One batch's results, host-side (numpy), original query order."""
+
+    ids: np.ndarray                       # (Q, k)
+    d2: np.ndarray                        # (Q, k)
+    stats: search_mod.SearchStats | None = None
+    astats: search_mod.AdaptiveStats | None = None
+    ceilings: tuple[int, ...] | None = None   # bucket family actually used
+    extras: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+class ExactBackend:
+    """Full-precision in-memory backend (benchmark mode): exact distances
+    steer the walk; the final "rerank" is just the beam's top-k slice."""
+
+    staged = True
+
+    def __init__(self, x: Array, adj: Array, entry: Array):
+        self.update(x, adj, entry)
+
+    def update(self, x: Array, adj: Array, entry: Array) -> None:
+        """Swap the index arrays in place (Online-MCGI refresh path)."""
+        self.x, self.adj, self.entry = x, adj, entry
+
+    def admit(self, queries: Array) -> Array:
+        return jnp.asarray(queries)
+
+    def probe(self, ctxs, budget_cfg):
+        return search_mod._probe_exact_jit(
+            self.x, self.adj, ctxs, self.entry, budget_cfg)
+
+    def continue_fn(self, budget_cfg):
+        import functools
+
+        return functools.partial(search_mod._continue_exact_jit, self.x,
+                                 self.adj, budget_cfg=budget_cfg)
+
+    def rerank(self, beam_ids, beam_d, queries, k: int):
+        return beam_ids[:, :k], beam_d[:, :k]
+
+    def fixed(self, queries, *, beam_width: int, max_hops: int, k: int):
+        ids, d2, stats = search_mod.beam_search_exact(
+            self.x, self.adj, queries, self.entry, beam_width=beam_width,
+            max_hops=max_hops, k=k)
+        return ids, d2, stats, None
+
+    def recall_eval(self, queries, gt_ids, *, k, sample, seed, base_cfg):
+        from repro.core import calibrate as calib
+
+        return calib.exact_recall_eval(
+            self.x, self.adj, self.entry, queries, gt_ids, k=k,
+            sample=sample, seed=seed, base_cfg=base_cfg)
+
+
+class TieredBackend:
+    """The deployed two-tier path: PQ codes route the walk (fast tier), the
+    final beam is reranked from full-precision vectors (slow tier).
+    ``rerank=False`` serves raw ADC results (the pure-PQ variant)."""
+
+    staged = True
+
+    def __init__(self, index, rerank: bool = True):
+        self.do_rerank = rerank
+        self.update(index)
+
+    def update(self, index) -> None:
+        """Swap the tiered index in place (Online-MCGI refresh path)."""
+        self.index = index
+
+    def admit(self, queries: Array) -> Array:
+        from repro.index.disk import _query_luts
+
+        return _query_luts(self.index, jnp.asarray(queries))
+
+    def probe(self, ctxs, budget_cfg):
+        return search_mod._probe_pq_jit(
+            self.index.codes, self.index.graph.adj, ctxs,
+            self.index.graph.entry, budget_cfg)
+
+    def continue_fn(self, budget_cfg):
+        import functools
+
+        return functools.partial(
+            search_mod._continue_pq_jit, self.index.codes,
+            self.index.graph.adj, budget_cfg=budget_cfg)
+
+    def rerank(self, beam_ids, beam_d, queries, k: int):
+        if not self.do_rerank:
+            return beam_ids[:, :k], beam_d[:, :k]
+        return search_mod._rerank_slow_tier_jit(
+            jnp.asarray(beam_ids), self.index.vectors, jnp.asarray(queries),
+            k=k)
+
+    def fixed(self, queries, *, beam_width: int, max_hops: int, k: int):
+        from repro.index.disk import search_tiered
+
+        ids, d2, stats = search_tiered(
+            self.index, queries, beam_width=beam_width, max_hops=max_hops,
+            k=k, rerank=self.do_rerank)
+        return ids, d2, stats, None
+
+    def recall_eval(self, queries, gt_ids, *, k, sample, seed, base_cfg):
+        from repro.core import calibrate as calib
+
+        return calib.tiered_recall_eval(
+            self.index, queries, gt_ids, k=k, sample=sample, seed=seed,
+            base_cfg=base_cfg)
+
+
+class DistributedBackend:
+    """Sharded scatter-gather serving over a mesh: each shard walks its own
+    sub-graph (adaptive budgets and bucket deadlines are *in-graph* here —
+    see :func:`repro.distributed.sharded_search.make_distributed_search`),
+    so the whole step is one compiled program and the pipeline overlaps at
+    step granularity."""
+
+    staged = False
+
+    def __init__(self, mesh, arrays: dict, *, beam_width: int, max_hops: int,
+                 k: int, query_chunk: int = 128, use_pq: bool = True,
+                 beam_budget=None, budget_buckets: int | None = None,
+                 shard_ok=None):
+        from repro.distributed import sharded_search as ss
+
+        self.mesh = mesh
+        self.arrays = dict(arrays)
+        n_shards = mesh.devices.size
+        self.rows_per_shard = arrays["vectors"].shape[0] // n_shards
+        if "entries" not in self.arrays:
+            self.arrays["entries"] = ss.shard_medoids(
+                arrays["vectors"], n_shards)
+        self.shard_ok = (shard_ok if shard_ok is not None
+                         else jnp.ones((n_shards,), jnp.bool_))
+        self.step = ss.make_distributed_search(
+            mesh, beam_width=beam_width, max_hops=max_hops, k=k,
+            query_chunk=query_chunk, use_pq=use_pq, beam_budget=beam_budget,
+            budget_buckets=budget_buckets)
+
+    @staticmethod
+    def make_step(mesh, *, beam_width: int, max_hops: int, k: int,
+                  query_chunk: int = 128, use_pq: bool = True,
+                  beam_budget=None, budget_buckets: int | None = None):
+        """The raw jit-able sharded step — what launch/cells.py lowers for
+        the dry-run (same builder the live backend runs)."""
+        from repro.distributed import sharded_search as ss
+
+        return ss.make_distributed_search(
+            mesh, beam_width=beam_width, max_hops=max_hops, k=k,
+            query_chunk=query_chunk, use_pq=use_pq, beam_budget=beam_budget,
+            budget_buckets=budget_buckets)
+
+    def set_shard_ok(self, shard_ok) -> None:
+        """Runtime straggler/fault mask — no recompilation."""
+        self.shard_ok = shard_ok
+
+    def dispatch(self, queries):
+        a = self.arrays
+        return self.step(a["adj"], a["codes"], a["vectors"], a["centroids"],
+                         jnp.asarray(queries), self.shard_ok, a["entries"])
+
+    def collect(self, handles) -> BatchResult:
+        d2, shard_ids, local_ids = handles
+        sid = np.asarray(shard_ids).astype(np.int64)
+        lid = np.asarray(local_ids).astype(np.int64)
+        gids = sid * self.rows_per_shard + lid
+        return BatchResult(ids=gids, d2=np.asarray(d2),
+                           extras={"shard_ids": sid, "local_ids": lid})
+
+
+@dataclasses.dataclass
+class _InFlight:
+    """One admitted batch whose device programs are dispatched, not collected."""
+
+    queries: Any
+    ctxs: Any = None
+    probe_state: Any = None
+    budgets: Any = None
+    hop_limits: Any = None
+    q_lid: Any = None
+    handles: Any = None        # monolithic mode: the dispatched program's outputs
+    # Filled by the schedule stage (staged mode):
+    budgets_np: Any = None
+    ceilings: tuple[int, ...] | None = None
+    dispatched: Any = None     # [(members, continue handles)] or full-batch handles
+
+
+class SearchEngine:
+    """One serving API over every backend, with a double-buffered pipeline.
+
+    Modes:
+      * ``budget_cfg=None`` — fixed-beam serving at ``beam_width``.
+      * ``budget_cfg=AdaptiveBeamBudget(...)`` — the adaptive engine
+        (probe -> budget -> bucketed continue -> rerank), staged per batch.
+
+    ``num_buckets``: ``"auto"`` (default) picks the bucket-ceiling family per
+    batch from the granted-budget histogram
+    (:func:`repro.serving.pipeline.auto_bucket_ceilings`); an int >= 2 pins
+    the historical fixed family; ``None``/1 disables bucketing (single
+    continue program).  Scheduling never changes results.
+
+    ``search`` serves one batch, unpipelined.  ``search_batches`` serves a
+    stream with double buffering: batch i+1's admission + probe are
+    *dispatched* before batch i's bucketing/continue are *collected*, so the
+    accelerator works through the next probe while the host partitions the
+    current batch (jax dispatch is asynchronous).  Each batch's results are
+    bit-identical between the two entry points — the same compiled programs
+    run on the same inputs; only the moment of the blocking host transfer
+    moves.
+
+    Batches may be ragged (each shape jit-caches separately; pad upstream to
+    a shape quantum if compile count matters).  The engine is mutable where
+    serving needs it to be: :meth:`recalibrate` refits the budget law in
+    place; :meth:`update_backend` swaps refreshed index arrays (Online-MCGI
+    inserts) without losing the engine or its jit caches.
+    """
+
+    def __init__(self, backend, budget_cfg=None, *, k: int = 10,
+                 beam_width: int = 48, max_hops: int = 2048,
+                 num_buckets: int | str | None = "auto",
+                 pad_quantum: int = 4):
+        self.backend = backend
+        self.budget_cfg = budget_cfg
+        self.k = k
+        self.beam_width = beam_width
+        self.max_hops = max_hops
+        self.num_buckets = num_buckets
+        # Bucket lane counts are padded to this grid (jit-cache shape family
+        # vs lane inflation; a per-accelerator tuning knob). The engine's
+        # default is finer than the historical 8: with tight DP-chosen
+        # ceilings and serving-size micro-batches, quantum-4 padding was
+        # measured (CPU) to cut padded-lane inflation enough to beat the
+        # extra compile shapes.
+        self.pad_quantum = pad_quantum
+
+    # ------------------------------------------------------------- serving
+
+    def search(self, queries) -> BatchResult:
+        """Serve one batch (unpipelined): all stages back to back."""
+        return self._gather(self._schedule(self._dispatch(queries)))
+
+    def search_batches(self, batches: Iterable) -> Iterator[BatchResult]:
+        """Serve a stream of query batches, double-buffered.
+
+        Two batches are in flight: batch i+1's admission + probe are
+        dispatched before batch i's budgets are synced and its continue
+        programs dispatched, and batch i-1's continues are gathered only
+        after that — the device queue always holds the next batch's work
+        while the host buckets and reassembles. Yields one
+        :class:`BatchResult` per input batch, in order. A single-batch
+        stream degrades to exactly :meth:`search` (no prefetch partner).
+        The generator is lazy — iterate it to drive the pipeline.
+        """
+        front: _InFlight | None = None   # probe dispatched
+        mid: _InFlight | None = None     # continues dispatched
+        for qb in batches:
+            cur = self._dispatch(qb)       # batch i+1 enters the device queue
+            if front is not None:
+                nxt = self._schedule(front)  # bucket batch i, queue continues
+                if mid is not None:
+                    yield self._gather(mid)  # ... then collect batch i-1
+                mid = nxt
+            front = cur
+        if front is not None:
+            nxt = self._schedule(front)
+            if mid is not None:
+                yield self._gather(mid)
+            mid = nxt
+        if mid is not None:
+            yield self._gather(mid)
+
+    # ------------------------------------------------- pipeline stage thirds
+
+    def _dispatch(self, queries) -> _InFlight:
+        """Admission + probe (staged) or the whole program (monolithic);
+        returns device handles without blocking."""
+        if not self._staged():
+            if self.backend.staged:
+                q = jnp.asarray(queries)
+                handles = self.backend.fixed(
+                    q, beam_width=self.beam_width, max_hops=self.max_hops,
+                    k=self.k)
+            else:
+                handles = self.backend.dispatch(queries)
+            return _InFlight(queries=queries, handles=handles)
+        ctxs = self.backend.admit(queries)
+        probe_state, budgets, hop_limits, q_lid = self.backend.probe(
+            ctxs, self.budget_cfg)
+        return _InFlight(queries=queries, ctxs=ctxs, probe_state=probe_state,
+                         budgets=budgets, hop_limits=hop_limits, q_lid=q_lid)
+
+    def _schedule(self, f: _InFlight) -> _InFlight:
+        """Host-bucket stage: sync the granted budgets (the transfer the
+        lookahead hides), pick the bucket family, dispatch every continue
+        program.  Monolithic batches pass through untouched."""
+        if not self._staged():
+            return f
+        cfg = self.budget_cfg
+        f.budgets_np = np.asarray(f.budgets)
+        f.ceilings = self._resolve_ceilings(f.budgets_np, cfg)
+        cont = self.backend.continue_fn(cfg)
+        if f.ceilings is None or len(f.ceilings) <= 1:
+            f.dispatched = cont(f.probe_state, f.ctxs, f.budgets,
+                                f.hop_limits)
+        else:
+            f.dispatched = pipe.dispatch_bucketed_continue(
+                cont, f.probe_state, f.ctxs, f.budgets, f.hop_limits,
+                f.ceilings, budgets_np=f.budgets_np,
+                quantum=self.pad_quantum)
+        return f
+
+    def _gather(self, f: _InFlight) -> BatchResult:
+        """Collection stage: pull continue results, rerank, reassemble."""
+        if not self._staged():
+            if self.backend.staged:
+                ids, d2, stats, astats = f.handles
+                return BatchResult(ids=np.asarray(ids), d2=np.asarray(d2),
+                                   stats=stats, astats=astats)
+            return self.backend.collect(f.handles)
+        if f.ceilings is None or len(f.ceilings) <= 1:
+            beam_ids, beam_d, hops, evals = (np.asarray(a)
+                                             for a in f.dispatched)
+        else:
+            beam_ids, beam_d, hops, evals = pipe.gather_bucketed_continue(
+                f.budgets_np.shape[0], f.probe_state[0].shape[1],
+                f.dispatched)
+        ids, d2 = self.backend.rerank(beam_ids, beam_d, f.queries, self.k)
+        return BatchResult(
+            ids=np.asarray(ids), d2=np.asarray(d2),
+            stats=search_mod.SearchStats(hops=np.asarray(hops),
+                                         dist_evals=np.asarray(evals)),
+            astats=search_mod.AdaptiveStats(
+                q_lid=np.asarray(f.q_lid), budget=f.budgets_np),
+            ceilings=f.ceilings)
+
+    def _staged(self) -> bool:
+        return self.budget_cfg is not None and self.backend.staged
+
+    def _resolve_ceilings(self, budgets_np, cfg) -> tuple[int, ...] | None:
+        if self.num_buckets == "auto":
+            return pipe.auto_bucket_ceilings(budgets_np, cfg,
+                                             quantum=self.pad_quantum)
+        if self.num_buckets is None or self.num_buckets <= 1:
+            return None
+        return search_mod.budget_bucket_ceilings(
+            cfg.l_min, cfg.l_max, self.num_buckets)
+
+    # ------------------------------------------------------- live reconfigure
+
+    def recalibrate(self, queries=None, gt_ids=None, *,
+                    recall_target: float = 0.95, joint: bool = False,
+                    sample: int = 256, seed: int = 0,
+                    eval_recall: Callable | None = None,
+                    make_eval: Callable | None = None, **fit_kw):
+        """Refit the budget law against ``recall_target`` and deploy it.
+
+        The hook Online-MCGI needs: inserts shift the LID population, so an
+        index refresh calls :meth:`update_backend` then this — the engine
+        object, its backend wiring, and its shape-keyed jit caches all
+        survive; only the (lam, hop_factor[, l_min]) knobs move (one
+        recompile of probe/continue, since the config is a static jit key).
+
+        ``joint=True`` runs the joint (lam, l_min) fit
+        (:func:`repro.core.calibrate.calibrate_budget_law_joint`); otherwise
+        the lam bisection of :func:`~repro.core.calibrate.calibrate_budget_law`.
+        Evaluators default to the backend's own recall measurement on a
+        held-out sample of ``queries``/``gt_ids``; pass ``eval_recall`` /
+        ``make_eval`` to override.  Returns the
+        :class:`~repro.core.calibrate.CalibrationResult`; the fitted config is
+        already live on return.
+        """
+        from repro.core import calibrate as calib
+
+        if self.budget_cfg is None:
+            raise ValueError("recalibrate() needs an adaptive engine "
+                             "(budget_cfg is None)")
+        base = self.budget_cfg
+        if joint:
+            if make_eval is None:
+                if queries is None or gt_ids is None:
+                    raise ValueError("joint recalibration needs queries + "
+                                     "gt_ids (or make_eval)")
+                make_eval = lambda cfg: self.backend.recall_eval(
+                    queries, gt_ids, k=self.k, sample=sample, seed=seed,
+                    base_cfg=cfg)
+            result = calib.calibrate_budget_law_joint(
+                make_eval, base, recall_target, **fit_kw)
+        else:
+            if eval_recall is None:
+                if queries is None or gt_ids is None:
+                    raise ValueError("recalibration needs queries + gt_ids "
+                                     "(or eval_recall)")
+                eval_recall = self.backend.recall_eval(
+                    queries, gt_ids, k=self.k, sample=sample, seed=seed,
+                    base_cfg=base)
+            result = calib.calibrate_budget_law(
+                eval_recall, base, recall_target, **fit_kw)
+        self.budget_cfg = result.budget_cfg(base)
+        return result
+
+    def update_backend(self, *args, **kw) -> None:
+        """Swap refreshed index arrays into the live backend (Online-MCGI
+        insert path); see the backend's ``update`` signature."""
+        self.backend.update(*args, **kw)

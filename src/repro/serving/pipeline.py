@@ -1,0 +1,250 @@
+"""Host-side scheduling for the staged serving pipeline.
+
+This module owns everything the serving engine does *between* jitted device
+programs: partitioning a batch into budget buckets, padding bucket lane
+counts, choosing the bucket-ceiling family from the granted-budget histogram,
+and reassembling per-bucket results into the original query order. The
+device-side programs themselves (probe / continue / rerank) stay in
+:mod:`repro.core.search` — they are pure kernels; this file is the scheduler
+that drives them.
+
+Two gather disciplines are provided:
+
+* eager (:func:`bucketed_continue`) — each bucket's results are pulled to
+  the host before the next bucket is dispatched.  This is the historical
+  behaviour that ``repro.core.search.beam_search_{exact,pq}_adaptive``'s
+  ``num_buckets=`` convenience keeps, byte for byte, so existing callers
+  and property tests see no change.
+* deferred (:func:`dispatch_bucketed_continue` +
+  :func:`gather_bucketed_continue`) — every bucket's continue program is
+  dispatched before any result is gathered, so the device queue runs the
+  buckets back to back while the host does its numpy reassembly.  The
+  staged engine (:class:`repro.serving.engine.SearchEngine`) runs the two
+  halves in different pipeline stages; results are the same arrays either
+  way (identical programs, identical inputs — only the moment of the
+  blocking transfer moves).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import search as search_mod
+
+# Continue-phase dispatch overhead expressed in modelled lane-hops: one more
+# bucket costs one more (dispatch + host gather + pad) round trip.  The value
+# is a scheduling constant, not a measured quantity — it only has to be large
+# enough that splitting a bucket which saves fewer than ~a padded row of hops
+# is rejected (measured CPU-only break-even is a few hundred lane-hops).
+BUCKET_LAUNCH_COST_HOPS = 512
+
+
+def pad_bucket_size(n: int, quantum: int = 8) -> int:
+    """Round a bucket's lane count up to a multiple of ``quantum``.
+
+    A vmapped ``while_loop`` pays full body cost for *every* lane on every
+    iteration (padding lanes are not free), so the pad grid must be fine:
+    multiples of 8 cap the inflation at <= 12.5% for any bucket of >= 8 real
+    lanes, while keeping the jit cache to at most Q/8 shapes per bucket —
+    coarser (power-of-two) padding was measured to give back the entire
+    bucketing win on the largest bucket (66 -> 128 lanes ~= 2x its work).
+    """
+    return max(quantum, ((n + quantum - 1) // quantum) * quantum)
+
+
+def partition_by_bucket(
+    budgets: np.ndarray, ceilings: tuple[int, ...], quantum: int = 8
+) -> list[tuple[int, np.ndarray, np.ndarray]]:
+    """Group queries by bucket: [(bucket_index, members, padded_members)].
+
+    ``members`` are original batch positions; ``padded_members`` repeats
+    ``members[0]`` up to the padded lane count (those lanes' results are
+    discarded on reassembly).  Empty buckets are skipped.  Membership is a
+    per-query property of the granted budget, never of batch order.
+    """
+    ceil_arr = np.asarray(ceilings, dtype=np.int64)
+    bucket_idx = np.minimum(
+        np.searchsorted(ceil_arr, np.asarray(budgets), side="left"),
+        len(ceilings) - 1)
+    out = []
+    for bi in range(len(ceilings)):
+        members = np.nonzero(bucket_idx == bi)[0]
+        if members.size == 0:
+            continue
+        padded = np.concatenate([
+            members,
+            np.full(pad_bucket_size(members.size, quantum) - members.size,
+                    members[0]),
+        ])
+        out.append((bi, members, padded))
+    return out
+
+
+def auto_bucket_ceilings(
+    budgets: np.ndarray,
+    budget_cfg: "search_mod.AdaptiveBeamBudget",
+    max_buckets: int = 8,
+    quantum: int = 8,
+    launch_cost_hops: int = BUCKET_LAUNCH_COST_HOPS,
+) -> tuple[int, ...]:
+    """Pick the bucket-ceiling family from the granted-budget histogram.
+
+    Replaces the fixed ``num_buckets=4`` default.  The batch's occupied
+    budget values v_1 < ... < v_m are partitioned into at most
+    ``max_buckets`` contiguous groups; a group's ceiling is its own largest
+    occupied value (tight — a halving family's ceilings sit above the
+    occupied values and buy nothing), and its modelled cost is
+
+        padded_lanes * hop_factor * ceiling  +  launch_cost_hops
+
+    (each bucket's vmapped while-loop is bounded by its slowest lane, itself
+    bounded by the ceiling-derived hop limit, and pays every padded lane on
+    every iteration; each extra bucket costs one more dispatch + host
+    gather).  The exact minimiser over all contiguous partitions is found by
+    a small dynamic program — O(m^2 * max_buckets) with m bounded by the
+    distinct granted budgets, at most l_max - l_min + 1.  Ties break toward
+    fewer buckets.  The choice is a pure function of the budget *histogram*
+    — deterministic, and invariant under batch permutation — and scheduling
+    never changes results, so auto-picking is result-transparent.
+    """
+    budgets = np.asarray(budgets)
+    values, counts = np.unique(budgets, return_counts=True)
+    m = values.size
+    if m == 0:
+        return (int(budget_cfg.l_max),)
+    k_max = min(max_buckets, m)
+    csum = np.concatenate([[0], np.cumsum(counts)])  # O(1) group counts
+
+    def group_cost(i: int, j: int) -> float:
+        """Cost of one bucket covering values[i:j] (j exclusive)."""
+        lanes = pad_bucket_size(int(csum[j] - csum[i]), quantum)
+        return (lanes * budget_cfg.hop_factor * int(values[j - 1])
+                + launch_cost_hops)
+
+    # best[j] = (cost, partition) for values[:j] using any number of groups
+    # <= k_max; rebuilt k layers deep.
+    inf = float("inf")
+    prev = [inf] * (m + 1)
+    prev[0] = 0.0
+    cuts: list[list[tuple[int, ...] | None]] = [[None] * (m + 1)]
+    cuts[0][0] = ()
+    best_cost, best_cs = inf, None
+    for _k in range(k_max):
+        cur = [inf] * (m + 1)
+        cur_cuts: list[tuple[int, ...] | None] = [None] * (m + 1)
+        for j in range(1, m + 1):
+            for i in range(j):
+                if prev[i] == inf:
+                    continue
+                c = prev[i] + group_cost(i, j)
+                if c < cur[j]:
+                    cur[j] = c
+                    cur_cuts[j] = cuts[-1][i] + (int(values[j - 1]),)
+        cuts.append(cur_cuts)
+        prev = cur
+        if cur[m] < best_cost:  # strict: ties keep fewer buckets
+            best_cost, best_cs = cur[m], cur_cuts[m]
+    assert best_cs is not None
+    return best_cs
+
+
+def bucketed_continue(
+    continue_fn,
+    probe_state,
+    ctxs,
+    budgets,
+    hop_limits,
+    ceilings: tuple[int, ...],
+):
+    """Budget-bucketed continue phase over one batch.
+
+    Queries are grouped by granted budget into the ``ceilings`` buckets and
+    each bucket resumes as its own (cached-jit) continue call. A vmapped
+    ``while_loop`` iterates until its *slowest* lane converges, so in the
+    single-program path a batch with one hard query burns every easy lane's
+    compute until the hard one finishes; per-bucket, the slowest lane is
+    bounded by the bucket's own ceiling-derived hop limit — converged lanes
+    actually free compute instead of idling.
+
+    Per-query budgets/hop limits are passed through *unquantized*, so every
+    lane computes exactly what the unbucketed path would: results are
+    identical (scheduling changes, math doesn't). Buckets are padded to a
+    multiple-of-8 lane count (repeating a member row, results discarded) so
+    the jit cache sees a bounded shape family at <= 12.5% lane inflation.
+
+    This is the eager discipline the core ``num_buckets=`` entry points
+    keep; the staged engine instead drives the deferred halves
+    (:func:`dispatch_bucketed_continue` + :func:`gather_bucketed_continue`)
+    from different pipeline stages, so every bucket is dispatched before any
+    is gathered and another batch's programs sit in between.
+
+    Returns (beam_ids, beam_d, hops, evals) as numpy, original query order.
+    """
+    q = ctxs.shape[0]
+    l_max = probe_state[0].shape[1]
+    out = _alloc_outputs(q, l_max)
+    for _bi, members, padded in partition_by_bucket(
+            np.asarray(budgets), ceilings):
+        handles = _dispatch_bucket(continue_fn, probe_state, ctxs, budgets,
+                                   hop_limits, padded)
+        _scatter_bucket(out, members, handles)
+    return out
+
+
+def dispatch_bucketed_continue(
+    continue_fn,
+    probe_state,
+    ctxs,
+    budgets,
+    hop_limits,
+    ceilings: tuple[int, ...],
+    budgets_np: np.ndarray | None = None,
+    quantum: int = 8,
+) -> list[tuple[np.ndarray, tuple]]:
+    """Dispatch half of the deferred discipline: partition the batch and
+    enqueue every bucket's continue program; nothing blocks.  Returns
+    [(members, device handles)] for :func:`gather_bucketed_continue` —
+    the staged engine runs the two halves in different pipeline stages, so
+    another batch's programs sit between dispatch and gather."""
+    if budgets_np is None:
+        budgets_np = np.asarray(budgets)
+    return [
+        (members, _dispatch_bucket(continue_fn, probe_state, ctxs, budgets,
+                                   hop_limits, padded))
+        for _bi, members, padded in partition_by_bucket(budgets_np, ceilings,
+                                                        quantum)
+    ]
+
+
+def gather_bucketed_continue(q: int, l_max: int, dispatched):
+    """Gather half: pull every dispatched bucket to the host and reassemble
+    original query order.  Returns (beam_ids, beam_d, hops, evals) numpy."""
+    out = _alloc_outputs(q, l_max)
+    for members, handles in dispatched:
+        _scatter_bucket(out, members, handles)
+    return out
+
+
+def _alloc_outputs(q: int, l_max: int):
+    return (np.empty((q, l_max), np.int32), np.empty((q, l_max), np.float32),
+            np.empty((q,), np.int32), np.empty((q,), np.int32))
+
+
+def _dispatch_bucket(continue_fn, probe_state, ctxs, budgets, hop_limits,
+                     padded: np.ndarray):
+    sel = jnp.asarray(padded)
+    sub_state = jax.tree_util.tree_map(lambda a: a[sel], probe_state)
+    return continue_fn(sub_state, ctxs[sel], budgets[sel], hop_limits[sel])
+
+
+def _scatter_bucket(out, members, handles):
+    """Pull one bucket's device results and place them at their original
+    batch positions, dropping the padding lanes."""
+    out_ids, out_d, out_hops, out_evals = out
+    ids_b, d_b, hops_b, evals_b = handles
+    m = members.size
+    out_ids[members] = np.asarray(ids_b)[:m]
+    out_d[members] = np.asarray(d_b)[:m]
+    out_hops[members] = np.asarray(hops_b)[:m]
+    out_evals[members] = np.asarray(evals_b)[:m]

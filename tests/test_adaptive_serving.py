@@ -120,6 +120,26 @@ def test_disk_model_queue_depth():
     assert float(m.latency_us(jnp.float32(10))) == pytest.approx(1000.0)
 
 
+def test_disk_model_overlapped_pipeline_mode():
+    """overlapped=True models the double-buffered engine: per-batch cost is
+    max(dependent chain, rerank rounds), not their sum — and degrades to the
+    serial model when either stage is absent."""
+    m = DiskTierModel(read_latency_us=100.0, queue_depth=8)
+    # Chain 10 reads (1000us) vs 48-read rerank = 6 rounds (600us): the
+    # rerank hides behind the next batch's chain entirely.
+    assert float(m.latency_us(jnp.float32(10), rerank_reads=48,
+                              overlapped=True)) == pytest.approx(1000.0)
+    # Rerank-bound regime: 2-read chain (200us) under a 600us rerank.
+    assert float(m.latency_us(jnp.float32(2), rerank_reads=48,
+                              overlapped=True)) == pytest.approx(600.0)
+    # Overlap never exceeds the serial model, and equals it with no rerank.
+    serial = float(m.latency_us(jnp.float32(10), rerank_reads=48))
+    assert float(m.latency_us(jnp.float32(10), rerank_reads=48,
+                              overlapped=True)) < serial
+    assert float(m.latency_us(jnp.float32(10), overlapped=True)) == \
+        pytest.approx(float(m.latency_us(jnp.float32(10))))
+
+
 def test_local_search_uses_given_entry():
     """_local_search starts at the supplied per-shard entry (regression: it
     hardcoded local row 0). A disconnected graph makes the entry decisive:

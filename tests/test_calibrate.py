@@ -135,6 +135,62 @@ def test_dataset_config_calibration_uses_its_own_target():
     assert len(seen) >= 2  # the bisection actually probed the curve
 
 
+def test_joint_fit_picks_smallest_feasible_floor():
+    """The joint (lam, l_min) fit scans floors ascending and returns the
+    smallest one whose lam bisection meets the target; the fitted floor is
+    substituted into budget_cfg()."""
+    base = search.AdaptiveBeamBudget(l_min=16, l_max=64, lam=0.2)
+    assert calibrate.joint_l_min_candidates(base) == (2, 4, 8, 16)
+
+    def make_eval(cfg_lm):
+        # Feasible iff l_min >= 8 (below, recall collapses regardless of
+        # lam); above the floor, recall degrades gently in lam.
+        def eval_recall(cfg):
+            if cfg.l_min < 8:
+                return 0.5
+            return 1.0 - 0.2 * cfg.lam
+        return eval_recall
+
+    result = calibrate.calibrate_budget_law_joint(make_eval, base, 0.9)
+    assert result.achieved and result.l_min == 8
+    assert result.recall >= 0.9
+    # The infeasible smaller floors were tried first and recorded.
+    assert [lm for lm, *_ in result.joint_history] == [2, 4, 8]
+    assert not result.joint_history[0][4] and result.joint_history[-1][4]
+    fitted = result.budget_cfg(base)
+    assert fitted.l_min == 8 and fitted.lam == result.lam
+
+    # Deterministic: same inputs, same fit.
+    again = calibrate.calibrate_budget_law_joint(make_eval, base, 0.9)
+    assert again == result
+
+
+def test_joint_fit_reports_infeasible_at_largest_floor():
+    base = search.AdaptiveBeamBudget(l_min=8, l_max=32, lam=0.2,
+                                     hop_factor=4)
+    result = calibrate.calibrate_budget_law_joint(
+        lambda cfg_lm: (lambda cfg: 0.5), base, 0.9, max_hop_factor=8)
+    assert not result.achieved and result.l_min == 8
+    assert result.recall == 0.5
+
+
+def test_joint_fit_on_engine_hits_target():
+    """End-to-end joint fit over the real exact-distance engine: the fitted
+    (lam, l_min) meets the target on the held-out sample, and the floor
+    never exceeds the base config's."""
+    x, q, gt_i, idx = _built(DIM_REGIMES[1])
+    base = search.AdaptiveBeamBudget(l_min=8, l_max=48, lam=0.0,
+                                     probe_hops=4, hop_factor=2)
+    result = calibrate.calibrate_budget_law_joint(
+        lambda cfg: calibrate.exact_recall_eval(
+            x, idx.adj, idx.entry, q, gt_i, sample=64, seed=0,
+            base_cfg=cfg),
+        base, 0.95, max_iters=4)
+    assert result.achieved, result
+    assert result.recall >= 0.95
+    assert result.l_min in calibrate.joint_l_min_candidates(base)
+
+
 def test_holdout_sample_deterministic_and_sorted():
     a = calibrate.holdout_sample(100, 32, seed=3)
     b = calibrate.holdout_sample(100, 32, seed=3)
