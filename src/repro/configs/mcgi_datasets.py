@@ -41,6 +41,13 @@ class McgiDatasetConfig:
     hop_factor: int = 4
     recall_target: float = 0.95
     budget_buckets: int = 4      # ceiling of the auto-picked bucket family
+    # Per-shard calibrated budget laws (repro.core.calibrate
+    # .calibrate_budget_law_per_shard on shard-local held-out queries).
+    # None broadcasts the global (lam, l_min) — the identity laws — so the
+    # distributed serve cell always lowers the per-shard variant (runtime
+    # arrays; a later calibration swaps values in without recompiling).
+    shard_lam: tuple[float, ...] | None = None
+    shard_l_min: tuple[int, ...] | None = None
 
     def beam_budget(self):
         """The serving engine's AdaptiveBeamBudget for this dataset:
@@ -69,6 +76,30 @@ class McgiDatasetConfig:
         base = self.beam_budget()
         return calibrate_budget_law(
             eval_recall, base, self.recall_target).budget_cfg(base)
+
+    def shard_budget_laws(self, n_shards: int):
+        """Per-shard (lam (S,), l_min (S,)) runtime arrays for the
+        distributed step (``per_shard_laws`` builders / ``shard_laws=`` on
+        the backend).
+
+        Stored per-shard fits must match ``n_shards``; with none stored the
+        global law broadcasts (identical results to the scalar law — the
+        arrays exist so the compiled program accepts calibrated values
+        later without recompilation).
+        """
+        import numpy as np
+
+        base = self.beam_budget()
+        if self.shard_lam is not None or self.shard_l_min is not None:
+            lam = self.shard_lam if self.shard_lam is not None \
+                else (base.lam,) * n_shards
+            l_min = self.shard_l_min if self.shard_l_min is not None \
+                else (base.l_min,) * n_shards
+            assert len(lam) == n_shards and len(l_min) == n_shards, (
+                len(lam), len(l_min), n_shards)
+            return (np.asarray(lam, np.float32), np.asarray(l_min, np.int32))
+        return (np.full((n_shards,), base.lam, np.float32),
+                np.full((n_shards,), base.l_min, np.int32))
 
     def jointly_calibrated_beam_budget(self, make_eval):
         """Joint (lam, l_min) re-fit against this dataset's recall target.

@@ -32,6 +32,14 @@ bisection works around, so the joint pass scans candidate floors ascending
 (max savings first) and runs the lam bisection at each until one meets the
 target. The serving engine exposes both passes live via
 ``repro.serving.SearchEngine.recalibrate`` (the Online-MCGI refresh hook).
+
+The distributed path goes one step further:
+:func:`calibrate_budget_law_per_shard` runs the joint fit once *per shard*
+on shard-local held-out queries (each shard's sub-graph has its own
+geometry — one global law under-budgets the hard shards and over-budgets the
+easy ones) and returns per-shard (lam, l_min) arrays that thread through
+``ShardedIndexSpecs`` into the distributed step as runtime inputs — a
+recalibration updates the arrays without recompiling anything.
 """
 from __future__ import annotations
 
@@ -245,6 +253,127 @@ def calibrate_budget_law_joint(
     assert last is not None
     return dataclasses.replace(
         last, l_min=cands[-1], joint_history=tuple(joint_hist))
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCalibration:
+    """Per-shard budget laws fitted by :func:`calibrate_budget_law_per_shard`.
+
+    Attributes:
+      lam / l_min / hop_factor: the fitted knobs, one entry per shard.
+      results: each shard's full :class:`CalibrationResult` (histories,
+        achieved flags) in shard order.
+    """
+
+    lam: tuple[float, ...]
+    l_min: tuple[int, ...]
+    hop_factor: tuple[int, ...]
+    results: tuple[CalibrationResult, ...]
+
+    @property
+    def achieved(self) -> bool:
+        return all(r.achieved for r in self.results)
+
+    def law_arrays(self) -> tuple[np.ndarray, np.ndarray]:
+        """The (lam (S,) f32, l_min (S,) i32) runtime arrays the distributed
+        step consumes (``shard_laws=`` on the backend / ``per_shard_laws``
+        steps; serialized via ``repro.index.save_index(shard_laws=)``).
+
+        Deploy together with :meth:`serving_budget` — ``hop_factor`` is not
+        a per-shard runtime array, so a fit that escalated it on any shard
+        must raise the serving config's global value to match."""
+        return (np.asarray(self.lam, np.float32),
+                np.asarray(self.l_min, np.int32))
+
+    def serving_budget(
+        self, base: search_mod.AdaptiveBeamBudget
+    ) -> search_mod.AdaptiveBeamBudget:
+        """``base`` with ``hop_factor`` escalated to the per-shard max.
+
+        The distributed step derives hop deadlines from the (global) budget
+        config's ``hop_factor``; a shard whose fit only met the target after
+        hop-factor escalation would silently serve under a tighter deadline
+        than it was calibrated to. Hop limits are *caps*, so serving the
+        largest fitted escalation everywhere never tightens any shard's fit
+        (easy shards still retire when their frontier closes)."""
+        return dataclasses.replace(base, hop_factor=max(self.hop_factor))
+
+
+def calibrate_budget_law_per_shard(
+    make_shard_eval: Callable[[int], Callable],
+    base_cfg: search_mod.AdaptiveBeamBudget,
+    recall_target: float,
+    n_shards: int,
+    *,
+    joint: bool = True,
+    **fit_kw,
+) -> ShardCalibration:
+    """Fit one budget law per shard of a distributed index.
+
+    ``make_shard_eval(s)`` returns shard ``s``'s evaluator *factory* (the
+    ``make_eval`` shape of :func:`calibrate_budget_law_joint`: config ->
+    recall evaluator on shard-local held-out queries — see
+    :func:`shard_exact_recall_evals`). Each shard runs the joint
+    (lam, l_min) fit (or the plain lam fit with ``joint=False``) against the
+    same ``recall_target``: the global merge only ever *adds* candidates
+    across shards, so per-shard recall at the target is a sound (mildly
+    conservative) surrogate for global recall at the target.
+
+    Deterministic end to end under a fixed seed, shard by shard. Returns a
+    :class:`ShardCalibration`; its :meth:`~ShardCalibration.law_arrays` feed
+    ``DistributedBackend(shard_laws=)`` directly.
+    """
+    results = []
+    for s in range(n_shards):
+        factory = make_shard_eval(s)
+        if joint:
+            r = calibrate_budget_law_joint(
+                factory, base_cfg, recall_target, **fit_kw)
+        else:
+            r = calibrate_budget_law(
+                factory(base_cfg), base_cfg, recall_target, **fit_kw)
+        results.append(r)
+    return ShardCalibration(
+        lam=tuple(float(r.lam) for r in results),
+        l_min=tuple(int(r.l_min if r.l_min is not None else base_cfg.l_min)
+                    for r in results),
+        hop_factor=tuple(int(r.hop_factor) for r in results),
+        results=tuple(results),
+    )
+
+
+def shard_exact_recall_evals(
+    vectors, adj, entries, queries, n_shards: int, *,
+    k: int = 10, sample: int = 256, seed: int = 0,
+) -> Callable[[int], Callable]:
+    """``make_shard_eval`` over a shard-major distributed layout.
+
+    ``vectors``/``adj`` are the concatenated shard-major arrays (shard s owns
+    rows [s*per, (s+1)*per) with shard-local adjacency ids — the layout
+    ``make_distributed_search`` requires, *before* device_put); ``entries``
+    the per-shard local medoids. Shard recall is measured against the
+    shard's own brute-force top-k: the budget law governs the shard-local
+    walk, and the global merge sits outside it. The held-out sample is drawn
+    once per shard from the same seed, so every shard calibrates against the
+    same queries.
+    """
+    per = adj.shape[0] // n_shards
+
+    def make_shard_eval(s: int) -> Callable:
+        x_s = vectors[s * per:(s + 1) * per]
+        adj_s = adj[s * per:(s + 1) * per]
+        entry_s = jnp.asarray(entries)[s]
+        _, gt_s = distance_mod.brute_force_topk(
+            jnp.asarray(queries), jnp.asarray(x_s), k=k)
+
+        def factory(cfg: search_mod.AdaptiveBeamBudget) -> Callable:
+            return exact_recall_eval(
+                x_s, adj_s, entry_s, queries, gt_s, k=k, sample=sample,
+                seed=seed, base_cfg=cfg)
+
+        return factory
+
+    return make_shard_eval
 
 
 def _candidate_grants(cfg: search_mod.AdaptiveBeamBudget, q_lid):

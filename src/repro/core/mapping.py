@@ -67,8 +67,8 @@ def constant_alpha(n: int, alpha: float) -> Array:
 
 def adaptive_beam_budget(
     lid: Array,
-    lam: float,
-    l_min: int,
+    lam: float | Array,
+    l_min: int | Array,
     l_max: int,
     mu: Array | None = None,
 ) -> Array:
@@ -77,11 +77,18 @@ def adaptive_beam_budget(
     Normalised so a query of average complexity gets the geometric mean of
     [l_min, l_max]; clipped to the operational range. Integer-valued.
 
+    ``lam`` and ``l_min`` may be traced scalars: the distributed serving path
+    threads *per-shard* calibrated budget laws through as runtime arrays
+    (shard geometry differs), so neither knob may be baked into the compiled
+    program as a python constant. ``l_max`` stays static — it is the physical
+    beam shape.
+
     This is the beyond-paper knob (the paper fixes L for SIMD alignment and
     compensates in the topology); on TPU a *grouped* adaptive beam is feasible
     because queries are batched — see ``repro/core/search.py`` early-exit.
     """
     center = jnp.mean(lid) if mu is None else mu
-    l_mid = jnp.sqrt(float(l_min) * float(l_max))
+    l_mid = jnp.sqrt(jnp.asarray(l_min, jnp.float32)
+                     * jnp.asarray(l_max, jnp.float32))
     budget = l_mid * jnp.exp(lam * (lid - center))
     return jnp.clip(jnp.round(budget), l_min, l_max).astype(jnp.int32)

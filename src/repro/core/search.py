@@ -256,6 +256,9 @@ def adaptive_probe_batch(
     n: int,
     budget_cfg: AdaptiveBeamBudget,
     max_hops: int | None = None,
+    *,
+    lam: Array | None = None,
+    l_min: Array | None = None,
 ):
     """Phases 1-2 of the adaptive engine: probe walk + budget grant.
 
@@ -264,6 +267,12 @@ def adaptive_probe_batch(
     beam's own candidate distances (``lid.online_lid`` — no brute-force k-NN
     pre-pass) and mapped to ``L(q)`` by ``mapping.adaptive_beam_budget``.
 
+    ``lam``/``l_min`` override the config's values with *traced scalars* —
+    the per-shard budget-law path of the distributed engine, where each
+    shard's calibrated (lam, l_min) arrives as a runtime array and must not
+    recompile the program. Shape knobs (``l_max``, ``probe_hops``,
+    ``lid_k``) always come from ``budget_cfg``.
+
     Returns (probe_state, budgets, hop_limits, q_lid); ``probe_state`` is the
     warm per-query search state the continue phase resumes from.
     """
@@ -271,13 +280,15 @@ def adaptive_probe_batch(
     from repro.core import mapping as mapping_mod
 
     l_max = budget_cfg.l_max
+    lam_ = budget_cfg.lam if lam is None else lam
+    l_min_ = budget_cfg.l_min if l_min is None else l_min
 
     def probe_one(c):
         state = _init_state(c, entry, eval_dists, n, l_max)
         return _run_search(
             state, c, adj, eval_dists, l_max,
             hop_limit=jnp.int32(budget_cfg.probe_hops),
-            budget=jnp.int32(budget_cfg.l_min),
+            budget=jnp.int32(l_min_),
         )
 
     probe_state = jax.vmap(probe_one)(ctxs)
@@ -287,7 +298,7 @@ def adaptive_probe_batch(
     center = (jnp.float32(budget_cfg.center)
               if budget_cfg.center is not None else jnp.mean(q_lid))
     budgets = mapping_mod.adaptive_beam_budget(
-        q_lid, budget_cfg.lam, budget_cfg.l_min, budget_cfg.l_max, mu=center)
+        q_lid, lam_, l_min_, budget_cfg.l_max, mu=center)
     hop_limits = _bucket_hop_limits(budget_cfg, budgets, max_hops)
     return probe_state, budgets, hop_limits, q_lid
 
@@ -327,6 +338,9 @@ def adaptive_search_batch(
     budget_cfg: AdaptiveBeamBudget,
     max_hops: int | None = None,
     bucket_ceilings: tuple[int, ...] | None = None,
+    *,
+    lam: Array | None = None,
+    l_min: Array | None = None,
 ) -> tuple[Array, Array, SearchStats, AdaptiveStats]:
     """The per-query adaptive-beam engine (Prop. 4.2 deployed in-graph).
 
@@ -351,9 +365,14 @@ def adaptive_search_batch(
     keeps results bit-identical to this unbucketed path) see
     :func:`beam_search_exact_adaptive` / :func:`beam_search_pq_adaptive` with
     ``num_buckets``.
+
+    ``lam``/``l_min``, when given, are traced per-shard budget-law overrides
+    forwarded to :func:`adaptive_probe_batch` (the distributed path's
+    per-shard calibration).
     """
     probe_state, budgets, hop_limits, q_lid = adaptive_probe_batch(
-        ctxs, adj, entry, eval_dists, n, budget_cfg, max_hops)
+        ctxs, adj, entry, eval_dists, n, budget_cfg, max_hops,
+        lam=lam, l_min=l_min)
     if bucket_ceilings is not None:
         _, budgets = quantize_budgets(budgets, bucket_ceilings)
         hop_limits = _bucket_hop_limits(budget_cfg, budgets, max_hops)

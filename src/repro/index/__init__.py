@@ -5,4 +5,9 @@ from repro.index.disk import (  # noqa: F401
     search_tiered,
     search_tiered_adaptive,
 )
-from repro.index.serializer import load_disk_model, load_index, save_index  # noqa: F401
+from repro.index.serializer import (  # noqa: F401
+    load_disk_model,
+    load_index,
+    load_shard_laws,
+    save_index,
+)

@@ -21,11 +21,20 @@ tiered index; production serving lowers through
 — the staged pipeline (admission -> probe -> host-bucket -> continue ->
 slow-tier rerank, double-buffered across batches) drives these same compiled
 programs, auto-picks the continue phase's bucket family from the
-granted-budget histogram, and hosts the recalibration hook for Online-MCGI
-index refreshes. ``DiskTierModel.latency_us(..., overlapped=True)`` is the
-matching latency model: the rerank batch of batch i is issued while batch
-i+1's walk computes, so per-batch modelled time is the max of the two
-stages, not their sum.
+granted-budget histogram, coalesces micro-batches below the admission lane
+threshold, and hosts the recalibration hook for Online-MCGI index refreshes.
+At billion scale the index shards across a mesh
+(:mod:`repro.distributed.sharded_search`, one locally built sub-graph +
+PQ codes + slow-tier rows per shard) behind the same engine API: the
+distributed step runs staged at engine parity — shard walks checkpointed at
+the probe horizon, per-shard budget laws (each shard's own calibrated
+(lam, l_min); see :func:`repro.core.calibrate.calibrate_budget_law_per_shard`)
+granting per-(query, shard) budgets in-graph, host bucket scheduling between
+mesh programs, and per-bucket continues resuming into the shard-local exact
+rerank + hedged global merge. ``DiskTierModel.latency_us(...,
+overlapped=True)`` is the matching latency model: the rerank batch of batch
+i is issued while batch i+1's walk computes, so per-batch modelled time is
+the max of the two stages, not their sum.
 """
 from __future__ import annotations
 

@@ -22,10 +22,16 @@ def save_index(
     path: str | pathlib.Path,
     index: TieredIndex,
     disk_model: DiskTierModel | None = None,
+    shard_laws=None,
 ) -> None:
     """Write one index shard; ``disk_model`` (the slow-tier latency model the
     index was benchmarked/SLO'd under) rides along in the manifest so a
-    reloaded deployment reproduces the same modelled latencies."""
+    reloaded deployment reproduces the same modelled latencies.
+
+    ``shard_laws`` — an optional (lam (S,), l_min (S,)) pair of per-shard
+    calibrated budget-law arrays (``repro.core.calibrate.ShardCalibration
+    .law_arrays()``) — also rides in the manifest, so a reloaded distributed
+    deployment serves the same per-shard budgets it was calibrated to."""
     path = pathlib.Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
     manifest = {
@@ -38,6 +44,13 @@ def save_index(
         manifest["disk_model"] = {
             "read_latency_us": float(disk_model.read_latency_us),
             "queue_depth": int(disk_model.queue_depth),
+        }
+    if shard_laws is not None:
+        lam, l_min = shard_laws
+        assert len(lam) == len(l_min), (len(lam), len(l_min))
+        manifest["shard_laws"] = {
+            "lam": [float(v) for v in np.asarray(lam)],
+            "l_min": [int(v) for v in np.asarray(l_min)],
         }
     np.savez_compressed(
         path,
@@ -66,6 +79,19 @@ def load_disk_model(path: str | pathlib.Path) -> DiskTierModel | None:
         read_latency_us=float(dm["read_latency_us"]),
         queue_depth=int(dm["queue_depth"]),
     )
+
+
+def load_shard_laws(path: str | pathlib.Path):
+    """The per-shard (lam, l_min) budget-law arrays stored alongside the
+    index, or None when the index was saved without per-shard calibration
+    (the manifest key is optional, like ``disk_model``)."""
+    with np.load(pathlib.Path(path), allow_pickle=False) as z:
+        manifest = json.loads(str(z["manifest"]))
+    laws = manifest.get("shard_laws")
+    if laws is None:
+        return None
+    return (np.asarray(laws["lam"], np.float32),
+            np.asarray(laws["l_min"], np.int32))
 
 
 def load_index(path: str | pathlib.Path) -> TieredIndex:

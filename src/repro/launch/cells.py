@@ -334,22 +334,26 @@ def _mcgi_cell(spec: cfg_base.ArchSpec, cell: cfg_base.ShapeCell, mesh,
     specs = ss.sharded_index_specs(
         mesh, n=cfg.n, d=d_pad, degree=cfg.degree, m_pq=cfg.m_pq,
         n_queries=cell.meta["queries"] if not smoke else cfg.queries,
-        data_dtype=dtype,
+        data_dtype=dtype, per_shard_laws=True,
     )
     # The serve cell lowers the *deployed* engine: the serving subsystem's
     # distributed step with per-query adaptive budgets (the dataset's jointly
-    # calibrated budget law) and in-graph budget buckets / hop deadlines —
-    # what production serves (repro.serving.SearchEngine over a
-    # DistributedBackend) is what the dry-run prices.
+    # calibrated budget law, threaded as *per-shard* runtime arrays so a
+    # shard recalibration never recompiles the serving program) and in-graph
+    # budget buckets / hop deadlines — what production serves
+    # (repro.serving.SearchEngine over a DistributedBackend) is what the
+    # dry-run prices.
     step = DistributedBackend.make_step(
         mesh, beam_width=cfg.l_search, max_hops=cfg.max_hops,
         k=cell.meta["k"], query_chunk=min(128, cfg.queries),
         use_pq=cfg.m_pq is not None,
         beam_budget=cfg.beam_budget(),
         budget_buckets=cfg.budget_buckets,
+        per_shard_laws=True,
     )
     args = (specs.adj, specs.codes, specs.vectors, specs.centroids,
-            specs.queries, specs.shard_ok, specs.entries)
+            specs.queries, specs.shard_ok, specs.entries,
+            specs.shard_lam, specs.shard_l_min)
     return Cell(spec.arch_id, cell.name, step, args)
 
 

@@ -5,8 +5,10 @@ I/O per query, modelled SSD latency).
 
     PYTHONPATH=src python -m repro.launch.serve --dataset tiny-mixture \
         --beam 48 --batch 64 --num-batches 20 [--index PATH] [--online] \
+        [--distributed N] \
         [--adaptive [--l-min 16] [--l-max 64] [--lam 0.35] [--buckets auto] \
-         [--pipeline] [--calibrate [--joint] [--recall-target 0.95]]]
+         [--pipeline] [--calibrate [--joint | --per-shard] \
+          [--recall-target 0.95]]]
 
 ``--adaptive`` serves the per-query adaptive-beam engine (Prop. 4.2
 deployed): each query's budget is set from its probe-phase LID, so easy
@@ -21,15 +23,71 @@ to ``--recall-target`` on a held-out sample before serving; with ``--joint``
 the budget floor ``l_min`` is fitted too (smallest feasible floor, then the
 largest feasible lam at it). All serving paths — fixed and adaptive — lower
 through :class:`repro.serving.SearchEngine`.
+
+``--distributed N`` shards the dataset over N virtual host devices (one
+locally built sub-graph per shard) and serves scatter-gather through a
+``DistributedBackend``. With ``--adaptive`` the distributed step runs
+*staged* at full engine parity — probe checkpointed at the horizon, host
+bucket scheduling between mesh programs, per-bucket continues into the
+hedged merge — so ``--pipeline`` overlaps batch i+1's distributed probe
+with batch i's bucketing and continues. ``--calibrate --per-shard`` fits
+one (lam, l_min) law per shard on shard-local held-out queries and serves
+the laws as runtime arrays. Sets XLA_FLAGS itself, so run it as the
+process entry point (the flag must precede the first jax import).
 """
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+
+def _distributed_engine(args, x, queries, budget_cfg, num_buckets):
+    """Shard the dataset over the virtual mesh and build the distributed
+    serving engine (staged at engine parity when adaptive; per-shard
+    calibrated budget laws with --calibrate --per-shard). Returns
+    (engine, x truncated to the sharded row count)."""
+    import numpy as np
+
+    from repro import compat, serving
+    from repro.core import build, calibrate
+    from repro.distributed import sharded_search as ss
+
+    mesh = compat.make_mesh((args.distributed,), ("data",))
+    n_shards = mesh.devices.size
+    t0 = time.time()
+    arrays, per = ss.build_sharded_arrays(
+        x, mesh, build_cfg=build.BuildConfig(), m_pq=args.m_pq)
+    print(f"[serve] sharded build in {time.time()-t0:.1f}s: "
+          f"{per * n_shards} points over {n_shards} shards ({per}/shard)")
+    shard_laws = None
+    if args.calibrate:
+        fit = calibrate.calibrate_budget_law_per_shard(
+            calibrate.shard_exact_recall_evals(
+                np.asarray(arrays["vectors"]), np.asarray(arrays["adj"]),
+                np.asarray(arrays["entries"]), np.asarray(queries),
+                n_shards, k=args.k, sample=args.calib_sample),
+            budget_cfg, recall_target=args.recall_target,
+            n_shards=n_shards)
+        shard_laws = fit.law_arrays()
+        # hop_factor is global in the step: serve the largest fitted
+        # escalation so no shard runs under a tighter deadline than it was
+        # calibrated to.
+        budget_cfg = fit.serving_budget(budget_cfg)
+        print(f"[serve] per-shard laws "
+              f"({'hit' if fit.achieved else 'partial'}): "
+              f"lam={np.round(shard_laws[0], 3).tolist()} "
+              f"l_min={shard_laws[1].tolist()} "
+              f"hop_factor={budget_cfg.hop_factor}")
+    backend = serving.DistributedBackend(
+        mesh, arrays, beam_width=args.beam, max_hops=2048, k=args.k,
+        query_chunk=args.batch, beam_budget=budget_cfg,
+        budget_buckets=(4 if budget_cfg is not None else None),
+        shard_laws=shard_laws)
+    engine = serving.SearchEngine(backend, budget_cfg, k=args.k,
+                                  num_buckets=num_buckets)
+    return engine, x[: per * n_shards]
 
 
 def buckets_arg(value: str):
@@ -74,8 +132,16 @@ def main() -> None:
                          "before serving")
     ap.add_argument("--joint", action="store_true",
                     help="with --calibrate: fit (lam, l_min) jointly")
+    ap.add_argument("--per-shard", action="store_true",
+                    help="with --calibrate --distributed: fit one "
+                         "(lam, l_min) law per shard on shard-local "
+                         "held-out queries")
     ap.add_argument("--recall-target", type=float, default=0.95)
     ap.add_argument("--calib-sample", type=int, default=256)
+    ap.add_argument("--distributed", type=int, default=0, metavar="N",
+                    help="shard over N virtual host devices and serve "
+                         "scatter-gather (staged at engine parity with "
+                         "--adaptive)")
     args = ap.parse_args()
     num_buckets = args.buckets
     if not args.adaptive and (args.calibrate or args.pipeline
@@ -84,6 +150,26 @@ def main() -> None:
                  "engine; pass --adaptive as well")
     if args.joint and not args.calibrate:
         ap.error("--joint refines --calibrate; pass both")
+    if args.per_shard and not (args.calibrate and args.distributed):
+        ap.error("--per-shard refines --calibrate for --distributed serving;"
+                 " pass all three")
+    if args.distributed and args.calibrate and not args.per_shard:
+        ap.error("distributed calibration is per-shard (shard geometry "
+                 "differs); pass --per-shard")
+    if args.distributed and (args.index or args.online or args.vamana):
+        ap.error("--distributed builds per-shard sub-graphs in process; "
+                 "--index/--online/--vamana apply to single-host serving")
+    if args.distributed:
+        if "jax" in sys.modules:
+            ap.error("--distributed must set XLA_FLAGS before jax is "
+                     "imported; run repro.launch.serve as the process "
+                     "entry point")
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.distributed} "
+            + os.environ.get("XLA_FLAGS", ""))
+
+    import jax.numpy as jnp
+    import numpy as np
 
     from repro import serving
     from repro.core import build, distance, online, search
@@ -94,51 +180,59 @@ def main() -> None:
     x, queries = make_dataset(args.dataset, seed=0)
     import pathlib
 
-    if args.index and pathlib.Path(args.index).exists():
-        index = load_index(args.index)
-        print(f"[serve] loaded index: n={index.n}")
-    else:
-        cfg = build.BuildConfig()
-        t0 = time.time()
-        if args.online:
-            graph = online.build_online_mcgi(x, cfg, progress=print)
-        elif args.vamana:
-            graph = build.build_vamana(x, 1.2, cfg, progress=print)
-        else:
-            graph = build.build_mcgi(x, cfg, progress=print)
-        index = build_tiered_index(x, graph, m_pq=args.m_pq)
-        print(f"[serve] built index in {time.time()-t0:.1f}s "
-              f"(fast tier {index.fast_tier_bytes()/1e6:.1f}MB, "
-              f"slow tier {index.slow_tier_bytes()/1e6:.1f}MB)")
-        if args.index:
-            save_index(args.index, index)
-
-    gt_d, gt_i = distance.brute_force_topk(queries, x, k=args.k)
     model = DiskTierModel()
-
-    backend = serving.TieredBackend(index)
+    budget_cfg = None
     if args.adaptive:
         l_max = args.l_max or args.beam
         budget_cfg = search.AdaptiveBeamBudget(
             l_min=min(args.l_min, l_max), l_max=l_max, lam=args.lam)
-        engine = serving.SearchEngine(backend, budget_cfg, k=args.k,
-                                      num_buckets=num_buckets)
-        if args.calibrate:
-            result = engine.recalibrate(
-                queries, gt_i, recall_target=args.recall_target,
-                joint=args.joint, sample=args.calib_sample)
-            fitted = engine.budget_cfg
-            print(f"[serve] calibrated lam={result.lam:.4f} "
-                  f"l_min={fitted.l_min} hop_factor={result.hop_factor} "
-                  f"recall={result.recall:.4f} "
-                  f"(target {result.target:.2f}, "
-                  f"{'hit' if result.achieved else 'MISSED'}, "
-                  f"{len(result.history)} evals)")
-        rerank_batch = engine.budget_cfg.l_max
+
+    if args.distributed:
+        engine, x = _distributed_engine(args, x, queries, budget_cfg,
+                                        num_buckets)
+        gt_d, gt_i = distance.brute_force_topk(queries, x, k=args.k)
+        rerank_batch = budget_cfg.l_max if budget_cfg else args.beam
     else:
-        engine = serving.SearchEngine(backend, None, k=args.k,
-                                      beam_width=args.beam)
-        rerank_batch = args.beam
+        if args.index and pathlib.Path(args.index).exists():
+            index = load_index(args.index)
+            print(f"[serve] loaded index: n={index.n}")
+        else:
+            cfg = build.BuildConfig()
+            t0 = time.time()
+            if args.online:
+                graph = online.build_online_mcgi(x, cfg, progress=print)
+            elif args.vamana:
+                graph = build.build_vamana(x, 1.2, cfg, progress=print)
+            else:
+                graph = build.build_mcgi(x, cfg, progress=print)
+            index = build_tiered_index(x, graph, m_pq=args.m_pq)
+            print(f"[serve] built index in {time.time()-t0:.1f}s "
+                  f"(fast tier {index.fast_tier_bytes()/1e6:.1f}MB, "
+                  f"slow tier {index.slow_tier_bytes()/1e6:.1f}MB)")
+            if args.index:
+                save_index(args.index, index)
+
+        gt_d, gt_i = distance.brute_force_topk(queries, x, k=args.k)
+        backend = serving.TieredBackend(index)
+        if args.adaptive:
+            engine = serving.SearchEngine(backend, budget_cfg, k=args.k,
+                                          num_buckets=num_buckets)
+            if args.calibrate:
+                result = engine.recalibrate(
+                    queries, gt_i, recall_target=args.recall_target,
+                    joint=args.joint, sample=args.calib_sample)
+                fitted = engine.budget_cfg
+                print(f"[serve] calibrated lam={result.lam:.4f} "
+                      f"l_min={fitted.l_min} hop_factor={result.hop_factor} "
+                      f"recall={result.recall:.4f} "
+                      f"(target {result.target:.2f}, "
+                      f"{'hit' if result.achieved else 'MISSED'}, "
+                      f"{len(result.history)} evals)")
+            rerank_batch = engine.budget_cfg.l_max
+        else:
+            engine = serving.SearchEngine(backend, None, k=args.k,
+                                          beam_width=args.beam)
+            rerank_batch = args.beam
 
     # Warmup compile.
     _ = engine.search(queries[: args.batch])
@@ -153,7 +247,8 @@ def main() -> None:
         lat_ms.append((time.perf_counter() - t0) * 1e3)
         recalls.append(float(distance.recall_at_k(
             jnp.asarray(res.ids), gt_i[sel])))
-        ios.append(float(np.mean(np.asarray(res.stats.hops))))
+        if res.stats is not None:
+            ios.append(float(np.mean(np.asarray(res.stats.hops))))
         if res.astats is not None:
             budgets.append(float(np.mean(np.asarray(res.astats.budget))))
 
@@ -176,16 +271,21 @@ def main() -> None:
         # the throughput figure but not in the steady-state percentiles.
         lat_ms = lat_ms[1:]
     qps = args.batch * args.num_batches / total
-    ssd_ms = float(model.latency_us(
-        jnp.float32(np.mean(ios)), rerank_reads=rerank_batch,
-        overlapped=args.pipeline)) / 1e3
+    # The monolithic distributed step reports no hop counters (the staged
+    # adaptive path does); skip the I/O-derived figures when absent.
+    io_part = ssd_part = ""
+    if ios:
+        ssd_ms = float(model.latency_us(
+            jnp.float32(np.mean(ios)), rerank_reads=rerank_batch,
+            overlapped=args.pipeline)) / 1e3
+        io_part = f"io/query={np.mean(ios):.1f} "
+        ssd_part = f" ssd_model={ssd_ms:.2f}ms/query"
     extra = f"meanL={np.mean(budgets):.1f} " if budgets else ""
     mode = "pipelined" if args.pipeline else "per-batch"
     print(f"[serve] recall@{args.k}={np.mean(recalls):.4f} qps={qps:.1f} "
-          f"io/query={np.mean(ios):.1f} {extra}({mode}) "
+          f"{io_part}{extra}({mode}) "
           f"batch_lat p50={np.percentile(lat_ms,50):.1f}ms "
-          f"p99={np.percentile(lat_ms,99):.1f}ms "
-          f"ssd_model={ssd_ms:.2f}ms/query")
+          f"p99={np.percentile(lat_ms,99):.1f}ms" + ssd_part)
 
 
 if __name__ == "__main__":

@@ -27,6 +27,20 @@ is auto-picked per batch from the granted-budget histogram
 (:func:`~repro.serving.pipeline.auto_bucket_ceilings`), replacing the fixed
 ``num_buckets=4``.
 
+The distributed backend runs the same stage graph with whole-mesh programs
+(:mod:`repro.distributed.sharded_search`): its probe checkpoints every
+shard's walk at the probe horizon (PR 1's init/run split lifted to the
+mesh), budgets are granted *per shard* (the host schedules on a per-query
+reduction of them), and the continue program resumes any query subset into
+the local rerank + hedged global merge — there is no separate host rerank
+stage.  Fixed-beam serving and engines without a budget law keep the
+monolithic one-program step.
+
+Cross-batch admission coalescing (``SearchEngine(coalesce_lanes=)``) merges
+micro-batches below the lane threshold into one dispatch and splits the
+results back per input batch — order preserved, results per query unchanged
+under a pinned LID center.
+
 Buffering contract (double buffering)
 -------------------------------------
 

@@ -7,14 +7,29 @@ buffering contract.  The short version:
 * :class:`SearchEngine` wraps a *backend* (how distances are evaluated and
   where the slow tier lives) behind ``search`` (one batch) and
   ``search_batches`` (a stream, double-buffered).
-* *Staged* backends (:class:`ExactBackend`, :class:`TieredBackend`) expose
-  the adaptive engine's probe / continue / rerank programs separately, so the
+* *Staged* backends (:class:`ExactBackend`, :class:`TieredBackend`, and
+  :class:`DistributedBackend` when built with a budget law) expose the
+  adaptive engine's probe / continue / rerank programs separately, so the
   pipeline can put the host's bucket scheduling *between* device programs of
   different batches.  Results are bit-identical to the unpipelined path —
   the same jitted programs run on the same inputs; only dispatch order moves.
-* *Monolithic* backends (:class:`DistributedBackend`, and every fixed-beam
-  path) run one compiled program per batch; the pipeline still overlaps
-  batch i's host-side collection with batch i+1's dispatched program.
+  The distributed backend's stages are whole-mesh programs (shard walks
+  checkpoint their frontiers at the probe horizon; see
+  :func:`repro.distributed.sharded_search.make_distributed_probe`), its
+  granted budgets are *per shard* (host scheduling reduces them to a
+  per-query effective budget — the mean over shards, a lane's expected
+  per-shard work), and its continue program ends in the hedged merge
+  instead of a host rerank.
+* *Monolithic* dispatch (fixed-beam serving on any backend, and the
+  distributed backend without an engine-level budget law) runs one compiled
+  program per batch; the pipeline still overlaps batch i's host-side
+  collection with batch i+1's dispatched program.
+
+Admission coalescing: ``coalesce_lanes=`` merges micro-batches below the
+threshold into one dispatch batch (per-query result order preserved — each
+input batch still yields its own :class:`BatchResult`), so a hot batcher
+emitting tiny batches doesn't pay a full pipeline round per handful of
+lanes.
 
 Recalibration is a first-class hook: :meth:`SearchEngine.recalibrate` refits
 the budget law (lam — and jointly l_min, see
@@ -51,7 +66,50 @@ class BatchResult:
     extras: dict[str, Any] = dataclasses.field(default_factory=dict)
 
 
-class ExactBackend:
+def _split_result(res: BatchResult, sizes: list[int]) -> list[BatchResult]:
+    """Split a coalesced dispatch's result back into per-input-batch results
+    (every field is per-query on axis 0; ``ceilings`` describes the merged
+    dispatch and is shared by the splits)."""
+    outs, off = [], 0
+    for s in sizes:
+        sl = slice(off, off + s)
+        off += s
+        stats = None if res.stats is None else search_mod.SearchStats(
+            hops=res.stats.hops[sl], dist_evals=res.stats.dist_evals[sl])
+        astats = None if res.astats is None else search_mod.AdaptiveStats(
+            q_lid=res.astats.q_lid[sl], budget=res.astats.budget[sl])
+        outs.append(BatchResult(
+            ids=res.ids[sl], d2=res.d2[sl], stats=stats, astats=astats,
+            ceilings=res.ceilings,
+            extras={k: v[sl] for k, v in res.extras.items()}))
+    return outs
+
+
+class _StagedRerankMixin:
+    """Shared staged-protocol tail of the single-host backends.
+
+    ``schedule_budgets`` — granted budgets are already per-query scalars, so
+    the host scheduler uses them as is.  ``finish`` — the gathered continue
+    parts are (beam_ids, beam_d, hops, evals); rerank them into the final
+    top-k and assemble the :class:`BatchResult`.
+    """
+
+    def schedule_budgets(self, budgets_np: np.ndarray) -> np.ndarray:
+        return budgets_np
+
+    def finish(self, queries, parts, k: int, *, q_lid,
+               budgets_np) -> BatchResult:
+        beam_ids, beam_d, hops, evals = parts
+        ids, d2 = self.rerank(beam_ids, beam_d, queries, k)
+        return BatchResult(
+            ids=np.asarray(ids), d2=np.asarray(d2),
+            stats=search_mod.SearchStats(hops=np.asarray(hops),
+                                         dist_evals=np.asarray(evals)),
+            astats=search_mod.AdaptiveStats(q_lid=np.asarray(q_lid),
+                                            budget=budgets_np))
+
+
+class ExactBackend(_StagedRerankMixin):
     """Full-precision in-memory backend (benchmark mode): exact distances
     steer the walk; the final "rerank" is just the beam's top-k slice."""
 
@@ -94,7 +152,7 @@ class ExactBackend:
             sample=sample, seed=seed, base_cfg=base_cfg)
 
 
-class TieredBackend:
+class TieredBackend(_StagedRerankMixin):
     """The deployed two-tier path: PQ codes route the walk (fast tier), the
     final beam is reranked from full-precision vectors (slow tier).
     ``rerank=False`` serves raw ADC results (the pure-PQ variant)."""
@@ -151,17 +209,34 @@ class TieredBackend:
 
 class DistributedBackend:
     """Sharded scatter-gather serving over a mesh: each shard walks its own
-    sub-graph (adaptive budgets and bucket deadlines are *in-graph* here —
-    see :func:`repro.distributed.sharded_search.make_distributed_search`),
-    so the whole step is one compiled program and the pipeline overlaps at
-    step granularity."""
+    sub-graph (adaptive budgets and bucket deadlines are *in-graph* —
+    see :mod:`repro.distributed.sharded_search`).
 
-    staged = False
+    Two execution shapes:
+
+    * built with ``beam_budget`` and driven by an engine holding the *same*
+      budget config, the backend is **staged**: the probe program
+      checkpoints every shard's walk at the probe horizon and the continue
+      program resumes any query subset (warm state) and ends in the hedged
+      merge — so ``search_batches`` overlaps batch i+1's mesh-wide probe
+      with batch i's host bucketing and per-bucket continues.  Granted
+      budgets are per (query, shard); the host schedules on their per-query
+      mean (see :meth:`schedule_budgets`).
+    * without an engine-level budget config the whole step stays one
+      compiled program (:func:`~repro.distributed.sharded_search.make_distributed_search`)
+      and the pipeline overlaps at step granularity — the dry-run-priced
+      shape, and the only one that runs fixed-beam.
+
+    ``shard_laws=(lam (S,), l_min (S,))`` threads per-shard calibrated
+    budget laws through both shapes as runtime arrays (see
+    :func:`repro.core.calibrate.calibrate_budget_law_per_shard`) — updating
+    them never recompiles.
+    """
 
     def __init__(self, mesh, arrays: dict, *, beam_width: int, max_hops: int,
                  k: int, query_chunk: int = 128, use_pq: bool = True,
                  beam_budget=None, budget_buckets: int | None = None,
-                 shard_ok=None):
+                 shard_ok=None, shard_laws=None, merge: str = "hierarchical"):
         from repro.distributed import sharded_search as ss
 
         self.mesh = mesh
@@ -173,15 +248,45 @@ class DistributedBackend:
                 arrays["vectors"], n_shards)
         self.shard_ok = (shard_ok if shard_ok is not None
                          else jnp.ones((n_shards,), jnp.bool_))
-        self.step = ss.make_distributed_search(
+        self.beam_budget = beam_budget
+        self.shard_laws = None
+        if shard_laws is not None:
+            self.shard_laws = (jnp.asarray(shard_laws[0], jnp.float32),
+                               jnp.asarray(shard_laws[1], jnp.int32))
+        # jit the monolithic step: the builder returns a raw traceable (what
+        # cells.py lowers); serving it eagerly would retrace per call.
+        self.step = jax.jit(ss.make_distributed_search(
             mesh, beam_width=beam_width, max_hops=max_hops, k=k,
             query_chunk=query_chunk, use_pq=use_pq, beam_budget=beam_budget,
-            budget_buckets=budget_buckets)
+            budget_buckets=budget_buckets, merge=merge,
+            per_shard_laws=self.shard_laws is not None))
+        # One more bucket costs one more *whole-mesh* program (n_shards
+        # shard walks + merge collectives + the checkpoint-state gather),
+        # not one more single-host kernel launch: scale the scheduler's
+        # modelled launch cost accordingly so the bucket DP only splits a
+        # batch when the lane-hop savings clear the real dispatch price.
+        self.launch_cost_hops = pipe.BUCKET_LAUNCH_COST_HOPS * n_shards
+        self._probe_step = self._continue_step = None
+        if beam_budget is not None:
+            self._probe_step = jax.jit(ss.make_distributed_probe(
+                mesh, budget_cfg=beam_budget, max_hops=max_hops,
+                query_chunk=query_chunk, use_pq=use_pq,
+                budget_buckets=budget_buckets,
+                per_shard_laws=self.shard_laws is not None))
+            self._continue_step = jax.jit(ss.make_distributed_continue(
+                mesh, budget_cfg=beam_budget, k=k, use_pq=use_pq,
+                merge=merge))
+
+    @property
+    def staged(self) -> bool:
+        """Stageable iff the walk is adaptive (the probe horizon exists)."""
+        return self.beam_budget is not None
 
     @staticmethod
     def make_step(mesh, *, beam_width: int, max_hops: int, k: int,
                   query_chunk: int = 128, use_pq: bool = True,
-                  beam_budget=None, budget_buckets: int | None = None):
+                  beam_budget=None, budget_buckets: int | None = None,
+                  per_shard_laws: bool = False):
         """The raw jit-able sharded step — what launch/cells.py lowers for
         the dry-run (same builder the live backend runs)."""
         from repro.distributed import sharded_search as ss
@@ -189,16 +294,24 @@ class DistributedBackend:
         return ss.make_distributed_search(
             mesh, beam_width=beam_width, max_hops=max_hops, k=k,
             query_chunk=query_chunk, use_pq=use_pq, beam_budget=beam_budget,
-            budget_buckets=budget_buckets)
+            budget_buckets=budget_buckets, per_shard_laws=per_shard_laws)
 
     def set_shard_ok(self, shard_ok) -> None:
-        """Runtime straggler/fault mask — no recompilation."""
+        """Runtime straggler/fault mask — no recompilation.  Consumed at
+        merge time, so in a pipelined stream the new mask applies to every
+        continue program dispatched after the call."""
         self.shard_ok = shard_ok
+
+    def _laws(self) -> tuple:
+        return self.shard_laws if self.shard_laws is not None else ()
+
+    # ------------------------------------------------- monolithic protocol
 
     def dispatch(self, queries):
         a = self.arrays
         return self.step(a["adj"], a["codes"], a["vectors"], a["centroids"],
-                         jnp.asarray(queries), self.shard_ok, a["entries"])
+                         jnp.asarray(queries), self.shard_ok, a["entries"],
+                         *self._laws())
 
     def collect(self, handles) -> BatchResult:
         d2, shard_ids, local_ids = handles
@@ -207,6 +320,56 @@ class DistributedBackend:
         gids = sid * self.rows_per_shard + lid
         return BatchResult(ids=gids, d2=np.asarray(d2),
                            extras={"shard_ids": sid, "local_ids": lid})
+
+    # ----------------------------------------------------- staged protocol
+
+    def admit(self, queries) -> Array:
+        return jnp.asarray(queries)
+
+    def probe(self, ctxs, budget_cfg):
+        if budget_cfg != self.beam_budget:
+            raise ValueError(
+                "staged distributed serving needs the engine's budget_cfg "
+                f"to equal the backend's beam_budget; got {budget_cfg} vs "
+                f"{self.beam_budget}")
+        a = self.arrays
+        return self._probe_step(a["adj"], a["codes"], a["vectors"],
+                                a["centroids"], ctxs, a["entries"],
+                                *self._laws())
+
+    def continue_fn(self, budget_cfg):
+        a = self.arrays
+
+        def cont(sub_state, sub_queries, sub_budgets, sub_hop_limits):
+            return self._continue_step(
+                a["adj"], a["codes"], a["vectors"], a["centroids"],
+                sub_state, sub_queries, sub_budgets, sub_hop_limits,
+                self.shard_ok)
+
+        return cont
+
+    def schedule_budgets(self, budgets_np: np.ndarray) -> np.ndarray:
+        """Per-query effective budget for host scheduling: the *mean* over
+        shards — the expected per-shard work a lane adds to a continue
+        program.  The max over shards is useless as a key: with many
+        independently-centered shard laws, nearly every query draws ~l_max
+        on *some* shard (an extreme statistic of S noisy probe estimates),
+        so the histogram collapses to one bucket.  Scheduling never changes
+        math either way; the continue programs always receive the raw
+        per-shard grants."""
+        return np.rint(budgets_np.mean(axis=1)).astype(np.int32)
+
+    def finish(self, queries, parts, k: int, *, q_lid,
+               budgets_np) -> BatchResult:
+        d2, shard_ids, local_ids, hops, evals = parts
+        sid = shard_ids.astype(np.int64)
+        lid = local_ids.astype(np.int64)
+        return BatchResult(
+            ids=sid * self.rows_per_shard + lid, d2=d2,
+            stats=search_mod.SearchStats(hops=hops, dist_evals=evals),
+            astats=search_mod.AdaptiveStats(q_lid=np.asarray(q_lid),
+                                            budget=budgets_np),
+            extras={"shard_ids": sid, "local_ids": lid})
 
 
 @dataclasses.dataclass
@@ -250,16 +413,27 @@ class SearchEngine:
     moves.
 
     Batches may be ragged (each shape jit-caches separately; pad upstream to
-    a shape quantum if compile count matters).  The engine is mutable where
-    serving needs it to be: :meth:`recalibrate` refits the budget law in
-    place; :meth:`update_backend` swaps refreshed index arrays (Online-MCGI
-    inserts) without losing the engine or its jit caches.
+    a shape quantum if compile count matters).  ``coalesce_lanes`` instead
+    merges *small* batches inside the engine: consecutive batches are
+    concatenated until the merged lane count reaches the threshold, the
+    merged batch flows through the pipeline once, and the results are split
+    back so every input batch still yields its own :class:`BatchResult`
+    (per-query order preserved) — the cross-batch admission coalescing a hot
+    upstream batcher needs.  Coalescing is result-transparent per query
+    under a pinned LID center; with batch-mean centering, budgets depend on
+    which queries share a dispatch (the reducer's property, as with any
+    batching choice).
+
+    The engine is mutable where serving needs it to be: :meth:`recalibrate`
+    refits the budget law in place; :meth:`update_backend` swaps refreshed
+    index arrays (Online-MCGI inserts) without losing the engine or its jit
+    caches.
     """
 
     def __init__(self, backend, budget_cfg=None, *, k: int = 10,
                  beam_width: int = 48, max_hops: int = 2048,
                  num_buckets: int | str | None = "auto",
-                 pad_quantum: int = 4):
+                 pad_quantum: int = 4, coalesce_lanes: int | None = None):
         self.backend = backend
         self.budget_cfg = budget_cfg
         self.k = k
@@ -273,6 +447,14 @@ class SearchEngine:
         # measured (CPU) to cut padded-lane inflation enough to beat the
         # extra compile shapes.
         self.pad_quantum = pad_quantum
+        self.coalesce_lanes = coalesce_lanes
+        backend_budget = getattr(backend, "beam_budget", None)
+        if (budget_cfg is not None and backend_budget is not None
+                and budget_cfg != backend_budget):
+            raise ValueError(
+                "engine budget_cfg and the distributed backend's beam_budget "
+                "must be the same config (the staged programs are compiled "
+                f"against the latter): {budget_cfg} vs {backend_budget}")
 
     # ------------------------------------------------------------- serving
 
@@ -291,7 +473,43 @@ class SearchEngine:
         :class:`BatchResult` per input batch, in order. A single-batch
         stream degrades to exactly :meth:`search` (no prefetch partner).
         The generator is lazy — iterate it to drive the pipeline.
+
+        With ``coalesce_lanes`` set, micro-batches below the threshold are
+        merged before dispatch and their results split back on gather — one
+        result per *input* batch either way.
         """
+        if not self.coalesce_lanes or self.coalesce_lanes <= 1:
+            yield from self._stream(batches)
+            return
+        groups: list[list[int]] = []   # lane counts of each merged dispatch
+        for res in self._stream(self._coalesced(batches, groups)):
+            sizes = groups.pop(0)
+            if len(sizes) == 1:
+                yield res
+            else:
+                yield from _split_result(res, sizes)
+
+    def _coalesced(self, batches: Iterable, groups: list) -> Iterator:
+        """Merge consecutive batches until ``coalesce_lanes`` lanes are
+        admitted; append each flushed group's per-batch sizes to ``groups``
+        (recorded at dispatch, so the split plan is always ahead of the
+        results)."""
+        pend: list[np.ndarray] = []
+        lanes = 0
+        for qb in batches:
+            qb = np.asarray(qb)
+            pend.append(qb)
+            lanes += qb.shape[0]
+            if lanes >= self.coalesce_lanes:
+                groups.append([b.shape[0] for b in pend])
+                yield pend[0] if len(pend) == 1 else np.concatenate(pend)
+                pend, lanes = [], 0
+        if pend:
+            groups.append([b.shape[0] for b in pend])
+            yield pend[0] if len(pend) == 1 else np.concatenate(pend)
+
+    def _stream(self, batches: Iterable) -> Iterator[BatchResult]:
+        """The double-buffered pipeline core (one result per input batch)."""
         front: _InFlight | None = None   # probe dispatched
         mid: _InFlight | None = None     # continues dispatched
         for qb in batches:
@@ -316,13 +534,13 @@ class SearchEngine:
         """Admission + probe (staged) or the whole program (monolithic);
         returns device handles without blocking."""
         if not self._staged():
-            if self.backend.staged:
+            if hasattr(self.backend, "dispatch"):
+                handles = self.backend.dispatch(queries)
+            else:
                 q = jnp.asarray(queries)
                 handles = self.backend.fixed(
                     q, beam_width=self.beam_width, max_hops=self.max_hops,
                     k=self.k)
-            else:
-                handles = self.backend.dispatch(queries)
             return _InFlight(queries=queries, handles=handles)
         ctxs = self.backend.admit(queries)
         probe_state, budgets, hop_limits, q_lid = self.backend.probe(
@@ -333,12 +551,20 @@ class SearchEngine:
     def _schedule(self, f: _InFlight) -> _InFlight:
         """Host-bucket stage: sync the granted budgets (the transfer the
         lookahead hides), pick the bucket family, dispatch every continue
-        program.  Monolithic batches pass through untouched."""
+        program.  Monolithic batches pass through untouched.
+
+        Bucket membership keys on the backend's *scheduling* view of the
+        budgets (``schedule_budgets`` — per-query scalars for the single-host
+        backends, the mean over shards for the distributed one); the continue
+        programs always receive the raw granted budgets, so scheduling never
+        changes math.
+        """
         if not self._staged():
             return f
         cfg = self.budget_cfg
         f.budgets_np = np.asarray(f.budgets)
-        f.ceilings = self._resolve_ceilings(f.budgets_np, cfg)
+        sched = self.backend.schedule_budgets(f.budgets_np)
+        f.ceilings = self._resolve_ceilings(sched, cfg)
         cont = self.backend.continue_fn(cfg)
         if f.ceilings is None or len(f.ceilings) <= 1:
             f.dispatched = cont(f.probe_state, f.ctxs, f.budgets,
@@ -346,41 +572,38 @@ class SearchEngine:
         else:
             f.dispatched = pipe.dispatch_bucketed_continue(
                 cont, f.probe_state, f.ctxs, f.budgets, f.hop_limits,
-                f.ceilings, budgets_np=f.budgets_np,
+                f.ceilings, budgets_np=sched,
                 quantum=self.pad_quantum)
         return f
 
     def _gather(self, f: _InFlight) -> BatchResult:
-        """Collection stage: pull continue results, rerank, reassemble."""
+        """Collection stage: pull continue results, finish (rerank or the
+        distributed id reassembly), restore original query order."""
         if not self._staged():
-            if self.backend.staged:
-                ids, d2, stats, astats = f.handles
-                return BatchResult(ids=np.asarray(ids), d2=np.asarray(d2),
-                                   stats=stats, astats=astats)
-            return self.backend.collect(f.handles)
+            if hasattr(self.backend, "collect"):
+                return self.backend.collect(f.handles)
+            ids, d2, stats, astats = f.handles
+            return BatchResult(ids=np.asarray(ids), d2=np.asarray(d2),
+                               stats=stats, astats=astats)
         if f.ceilings is None or len(f.ceilings) <= 1:
-            beam_ids, beam_d, hops, evals = (np.asarray(a)
-                                             for a in f.dispatched)
+            parts = tuple(np.asarray(a) for a in f.dispatched)
         else:
-            beam_ids, beam_d, hops, evals = pipe.gather_bucketed_continue(
-                f.budgets_np.shape[0], f.probe_state[0].shape[1],
-                f.dispatched)
-        ids, d2 = self.backend.rerank(beam_ids, beam_d, f.queries, self.k)
-        return BatchResult(
-            ids=np.asarray(ids), d2=np.asarray(d2),
-            stats=search_mod.SearchStats(hops=np.asarray(hops),
-                                         dist_evals=np.asarray(evals)),
-            astats=search_mod.AdaptiveStats(
-                q_lid=np.asarray(f.q_lid), budget=f.budgets_np),
-            ceilings=f.ceilings)
+            parts = pipe.gather_bucketed_continue(
+                f.budgets_np.shape[0], f.dispatched)
+        res = self.backend.finish(f.queries, parts, self.k, q_lid=f.q_lid,
+                                  budgets_np=f.budgets_np)
+        res.ceilings = f.ceilings
+        return res
 
     def _staged(self) -> bool:
         return self.budget_cfg is not None and self.backend.staged
 
     def _resolve_ceilings(self, budgets_np, cfg) -> tuple[int, ...] | None:
         if self.num_buckets == "auto":
-            return pipe.auto_bucket_ceilings(budgets_np, cfg,
-                                             quantum=self.pad_quantum)
+            return pipe.auto_bucket_ceilings(
+                budgets_np, cfg, quantum=self.pad_quantum,
+                launch_cost_hops=getattr(self.backend, "launch_cost_hops",
+                                         pipe.BUCKET_LAUNCH_COST_HOPS))
         if self.num_buckets is None or self.num_buckets <= 1:
             return None
         return search_mod.budget_bucket_ceilings(
@@ -415,6 +638,16 @@ class SearchEngine:
         if self.budget_cfg is None:
             raise ValueError("recalibrate() needs an adaptive engine "
                              "(budget_cfg is None)")
+        if getattr(self.backend, "beam_budget", None) is not None:
+            # Swapping budget_cfg here would desync it from the staged
+            # programs compiled against the backend's beam_budget and brick
+            # every later search() on the consistency check in probe().
+            raise NotImplementedError(
+                "distributed engines recalibrate per shard: fit "
+                "repro.core.calibrate.calibrate_budget_law_per_shard and "
+                "rebuild the DistributedBackend with shard_laws= (runtime "
+                "arrays — the rebuild recompiles nothing) and the fit's "
+                "serving_budget()")
         base = self.budget_cfg
         if joint:
             if make_eval is None:

@@ -182,13 +182,17 @@ def bucketed_continue(
     Returns (beam_ids, beam_d, hops, evals) as numpy, original query order.
     """
     q = ctxs.shape[0]
-    l_max = probe_state[0].shape[1]
-    out = _alloc_outputs(q, l_max)
+    out = None
     for _bi, members, padded in partition_by_bucket(
             np.asarray(budgets), ceilings):
         handles = _dispatch_bucket(continue_fn, probe_state, ctxs, budgets,
                                    hop_limits, padded)
-        _scatter_bucket(out, members, handles)
+        out = _scatter_bucket(out, q, members, handles)
+    if out is None:  # zero-query batch: no buckets, empty typed outputs
+        l_max = probe_state[0].shape[1]
+        out = (np.empty((q, l_max), np.int32),
+               np.empty((q, l_max), np.float32),
+               np.empty((q,), np.int32), np.empty((q,), np.int32))
     return out
 
 
@@ -217,18 +221,21 @@ def dispatch_bucketed_continue(
     ]
 
 
-def gather_bucketed_continue(q: int, l_max: int, dispatched):
+def gather_bucketed_continue(q: int, dispatched):
     """Gather half: pull every dispatched bucket to the host and reassemble
-    original query order.  Returns (beam_ids, beam_d, hops, evals) numpy."""
-    out = _alloc_outputs(q, l_max)
+    original query order.
+
+    Generic over the continue program's output signature: any tuple of
+    per-lane arrays (axis 0 = query lanes) reassembles — the single-host
+    backends return (beam_ids, beam_d, hops, evals), the distributed staged
+    backend returns its merged (d2, shard_id, local_id, hops, evals).
+    Returns the same-length tuple of (q, ...) numpy arrays.
+    """
+    out = None
     for members, handles in dispatched:
-        _scatter_bucket(out, members, handles)
+        out = _scatter_bucket(out, q, members, handles)
+    assert out is not None, "no buckets dispatched"
     return out
-
-
-def _alloc_outputs(q: int, l_max: int):
-    return (np.empty((q, l_max), np.int32), np.empty((q, l_max), np.float32),
-            np.empty((q,), np.int32), np.empty((q,), np.int32))
 
 
 def _dispatch_bucket(continue_fn, probe_state, ctxs, budgets, hop_limits,
@@ -238,13 +245,16 @@ def _dispatch_bucket(continue_fn, probe_state, ctxs, budgets, hop_limits,
     return continue_fn(sub_state, ctxs[sel], budgets[sel], hop_limits[sel])
 
 
-def _scatter_bucket(out, members, handles):
+def _scatter_bucket(out, q: int, members, handles):
     """Pull one bucket's device results and place them at their original
-    batch positions, dropping the padding lanes."""
-    out_ids, out_d, out_hops, out_evals = out
-    ids_b, d_b, hops_b, evals_b = handles
+    batch positions, dropping the padding lanes. Output buffers are
+    allocated lazily from the first bucket's shapes/dtypes (shape metadata
+    only — no device sync)."""
+    if out is None:
+        out = tuple(
+            np.empty((q,) + tuple(h.shape[1:]), dtype=np.dtype(h.dtype))
+            for h in handles)
     m = members.size
-    out_ids[members] = np.asarray(ids_b)[:m]
-    out_d[members] = np.asarray(d_b)[:m]
-    out_hops[members] = np.asarray(hops_b)[:m]
-    out_evals[members] = np.asarray(evals_b)[:m]
+    for buf, h in zip(out, handles):
+        buf[members] = np.asarray(h)[:m]
+    return out

@@ -1,0 +1,177 @@
+"""Shared fixtures + assertions for the cross-backend engine-parity tests.
+
+One module owns the build caches, the per-backend engine constructors and
+the two result-comparison disciplines (bitwise / up-to-distance-ties) that
+used to be duplicated across ``test_bucketed_search.py``,
+``test_serving_pipeline.py`` and ``test_adaptive_serving.py``.  The
+consolidated property matrix itself lives in ``test_engine_parity.py``;
+the distributed backend joins it whenever the process has >= 8 devices
+(the CI multi-device matrix job; single-device tier-1 runs cover the same
+properties via the ``staged_engine`` scenario of ``_distributed_worker``).
+
+``@given``-wrapped tests can't take pytest fixtures (the hypothesis shim
+erases the signature), so everything here is module-level ``lru_cache``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import numpy as np
+
+from repro import serving
+from repro.core import build, distance, search
+from repro.index import build_tiered_index
+from repro.index.disk import search_tiered_adaptive
+
+CFG = build.BuildConfig(degree=24, beam_width=48, iters=2, batch=256,
+                        max_hops=96)
+# Pinned LID center: batch-mean centering makes budgets depend on which
+# queries share a batch/chunk, which is the *reducer's* property; pinning
+# isolates the scheduling properties under test.
+BUDGET = search.AdaptiveBeamBudget(l_min=8, l_max=48, lam=0.3, center=8.0)
+# Distributed variant: in-graph bucket deadlines need a (l_min, l_max)
+# range matching the example-scale shard graphs.
+BUDGET_DIST = search.AdaptiveBeamBudget(l_min=8, l_max=32, lam=0.35,
+                                        center=8.0)
+DIST_CHUNK = 8          # query_chunk of the distributed fixtures
+SINGLE_HOST = ("exact", "pq", "tiered")
+
+
+def has_mesh() -> bool:
+    """Whether this process can host the distributed backend (the CI
+    multi-device matrix sets --xla_force_host_platform_device_count=8)."""
+    return jax.device_count() >= 8
+
+
+def backends() -> tuple[str, ...]:
+    return SINGLE_HOST + (("dist",) if has_mesh() else ())
+
+
+@functools.lru_cache(maxsize=1)
+def built():
+    from repro.data import make_dataset
+
+    x, q = make_dataset("tiny-mixture", seed=0)
+    x, q = x[:1500], q[:40]
+    idx = build.build_mcgi(x, CFG)
+    tiered = build_tiered_index(x, idx, m_pq=8)
+    gt_d, gt_i = distance.brute_force_topk(q, x, k=10)
+    return x, np.asarray(q), gt_i, idx, tiered
+
+
+@functools.lru_cache(maxsize=1)
+def built_dist():
+    """Sharded fixture over a (2, 4) mesh: shard-major sub-graphs, PQ
+    codes, per-shard medoids — plus ground truth over the truncated rows."""
+    import jax.numpy as jnp
+
+    from repro import compat
+    from repro.distributed import sharded_search as ss
+
+    assert has_mesh(), "distributed fixtures need >= 8 devices"
+    mesh = compat.make_mesh((2, 4), ("data", "model"))
+    from repro.data import make_dataset
+
+    x, q = make_dataset("tiny-mixture", seed=0)
+    q = np.asarray(q[:40])
+    cfg = build.BuildConfig(degree=16, beam_width=32, iters=1, batch=256,
+                            max_hops=64)
+    arrays, per = ss.build_sharded_arrays(x, mesh, build_cfg=cfg, m_pq=8)
+    n = per * mesh.devices.size
+    gt_d, gt_i = distance.brute_force_topk(
+        jnp.asarray(q), jnp.asarray(np.asarray(x)[:n]), k=10)
+    return mesh, arrays, per, q, np.asarray(gt_i)
+
+
+def _make_backend(variant: str, budget, shard_laws=None):
+    if variant == "dist":
+        mesh, arrays, _per, _q, _gt = built_dist()
+        return serving.DistributedBackend(
+            mesh, arrays, beam_width=budget.l_max, max_hops=96, k=10,
+            query_chunk=DIST_CHUNK, beam_budget=budget, budget_buckets=4,
+            shard_laws=shard_laws)
+    x, _, _, idx, tiered = built()
+    if variant == "exact":
+        return serving.ExactBackend(x, idx.adj, idx.entry)
+    if variant == "pq":
+        return serving.TieredBackend(tiered, rerank=False)
+    assert variant == "tiered", variant
+    return serving.TieredBackend(tiered)
+
+
+@functools.lru_cache(maxsize=64)
+def engine(variant: str, num_buckets="auto", budget=BUDGET,
+           coalesce_lanes=None, staged: bool = True):
+    """A cached engine per configuration (jit caches live on the backend's
+    compiled programs, so reuse matters for test wall-clock).  ``staged``
+    only matters for the distributed backend: False serves the monolithic
+    one-program step through the same engine API."""
+    if variant == "dist" and budget is BUDGET:
+        budget = BUDGET_DIST
+    backend = _make_backend(variant, budget)
+    return serving.SearchEngine(backend, budget if staged else None, k=10,
+                                num_buckets=num_buckets,
+                                coalesce_lanes=coalesce_lanes)
+
+
+def monolithic(variant: str, q, budget=BUDGET):
+    """The single-program adaptive reference for each backend: one compiled
+    call, no staging, no host scheduling."""
+    if variant == "dist":
+        res = engine("dist", staged=False).search(q)
+        return res.ids, res.d2, None, None
+    x, _, _, idx, tiered = built()
+    if variant == "exact":
+        return search.beam_search_exact_adaptive(
+            x, idx.adj, q, idx.entry, budget, k=10)
+    if variant == "pq":
+        return search_tiered_adaptive(tiered, q, budget, k=10, rerank=False)
+    assert variant == "tiered", variant
+    return search_tiered_adaptive(tiered, q, budget, k=10)
+
+
+def core_bucketed(variant: str, q, num_buckets, budget=BUDGET):
+    """The historical ``num_buckets=`` entry points of the core kernels
+    (eager per-bucket gathers) — kept under test next to the engine so the
+    convenience path stays pinned to the same properties."""
+    x, _, _, idx, tiered = built()
+    if variant == "exact":
+        return search.beam_search_exact_adaptive(
+            x, idx.adj, q, idx.entry, budget, k=10, num_buckets=num_buckets)
+    if variant == "pq":
+        return search_tiered_adaptive(
+            tiered, q, budget, k=10, rerank=False, num_buckets=num_buckets)
+    assert variant == "tiered", variant
+    return search_tiered_adaptive(
+        tiered, q, budget, k=10, num_buckets=num_buckets)
+
+
+def split(q, batch: int):
+    return [q[i:i + batch] for i in range(0, q.shape[0], batch)]
+
+
+def assert_bit_identical(a: serving.BatchResult, b: serving.BatchResult):
+    np.testing.assert_array_equal(a.ids, b.ids)
+    np.testing.assert_array_equal(a.d2, b.d2)
+    if a.stats is not None or b.stats is not None:
+        np.testing.assert_array_equal(np.asarray(a.stats.hops),
+                                      np.asarray(b.stats.hops))
+    if a.astats is not None or b.astats is not None:
+        np.testing.assert_array_equal(np.asarray(a.astats.budget),
+                                      np.asarray(b.astats.budget))
+    assert a.ceilings == b.ceilings
+
+
+def assert_same_up_to_ties(ids_a, d_a, ids_b, d_b, tol=1e-5):
+    """Result equality modulo distance ties: distances must match, and any
+    id mismatch must sit on a tie (equal distances at that rank)."""
+    ids_a, d_a = np.asarray(ids_a), np.asarray(d_a)
+    ids_b, d_b = np.asarray(ids_b), np.asarray(d_b)
+    both_inf = np.isinf(d_a) & np.isinf(d_b)
+    np.testing.assert_allclose(
+        np.where(both_inf, 0.0, d_a), np.where(both_inf, 0.0, d_b),
+        rtol=tol, atol=tol)
+    mism = ids_a != ids_b
+    assert np.allclose(d_a[mism], d_b[mism], rtol=tol, atol=tol), (
+        "id mismatch without a distance tie")

@@ -1,119 +1,16 @@
-"""Property tests pinning budget-bucketed execution (via the hypothesis
-shim): bucket scheduling must be a pure wall-clock optimisation —
-permutation-invariant and identical to the unbucketed adaptive path, up to
-distance ties, for the exact, PQ, and tiered variants."""
-import dataclasses
-import functools
-
+"""In-graph budget-bucket properties: the static ceiling family itself and
+the distributed step's hedged per-shard hop deadlines.  The host-side
+bucketed==unbucketed / permutation-invariance identity properties formerly
+here are consolidated in ``tests/test_engine_parity.py`` (shared fixtures:
+``tests/_backend_fixtures.py``), parametrized over every backend including
+the staged distributed path."""
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import build, distance, search
+from repro.core import search
 from repro.distributed import sharded_search as ss
-from repro.index import build_tiered_index
-from repro.index.disk import search_tiered_adaptive
+from tests._backend_fixtures import BUDGET, built
 from tests._hypothesis_compat import given, settings, st
-
-CFG = build.BuildConfig(degree=24, beam_width=48, iters=2, batch=256,
-                        max_hops=96)
-BUDGET = search.AdaptiveBeamBudget(l_min=8, l_max=48, lam=0.3)
-
-
-@functools.lru_cache(maxsize=1)
-def _built():
-    """Module-level build cache: @given-wrapped tests can't take fixtures
-    (the shim erases the signature), so the shared index lives here."""
-    from repro.data import make_dataset
-
-    x, q = make_dataset("tiny-mixture", seed=0)
-    x, q = x[:1500], q[:40]
-    idx = build.build_mcgi(x, CFG)
-    tiered = build_tiered_index(x, idx, m_pq=8)
-    gt_d, gt_i = distance.brute_force_topk(q, x, k=10)
-    return x, q, gt_i, idx, tiered
-
-
-def _run_variant(variant, q, num_buckets, budget=BUDGET):
-    x, _, _, idx, tiered = _built()
-    if variant == "exact":
-        return search.beam_search_exact_adaptive(
-            x, idx.adj, q, idx.entry, budget, k=10, num_buckets=num_buckets)
-    if variant == "pq":
-        return search_tiered_adaptive(
-            tiered, q, budget, k=10, rerank=False, num_buckets=num_buckets)
-    assert variant == "tiered"
-    return search_tiered_adaptive(
-        tiered, q, budget, k=10, num_buckets=num_buckets)
-
-
-def _assert_same_up_to_ties(ids_a, d_a, ids_b, d_b, tol=1e-5):
-    """Result equality modulo distance ties: distances must match, and any
-    id mismatch must sit on a tie (equal distances at that rank)."""
-    ids_a, d_a = np.asarray(ids_a), np.asarray(d_a)
-    ids_b, d_b = np.asarray(ids_b), np.asarray(d_b)
-    both_inf = np.isinf(d_a) & np.isinf(d_b)
-    np.testing.assert_allclose(
-        np.where(both_inf, 0.0, d_a), np.where(both_inf, 0.0, d_b),
-        rtol=tol, atol=tol)
-    mism = ids_a != ids_b
-    assert np.allclose(d_a[mism], d_b[mism], rtol=tol, atol=tol), (
-        "id mismatch without a distance tie")
-
-
-VARIANTS = ("exact", "pq", "tiered")
-
-
-@functools.lru_cache(maxsize=8)
-def _unbucketed(variant):
-    _, q, _, _, _ = _built()
-    return _run_variant(variant, q, None)
-
-
-@settings(max_examples=5, deadline=None)
-@given(num_buckets=st.integers(2, 6))
-def test_bucketed_matches_unbucketed(num_buckets):
-    """Bucketed execution returns the unbucketed adaptive path's results
-    (scheduling changes, math doesn't) for every bucket count, on the exact,
-    PQ, and tiered variants."""
-    _, q, _, _, _ = _built()
-    for variant in VARIANTS:
-        ids_u, d_u, stats_u, astats_u = _unbucketed(variant)
-        ids_b, d_b, stats_b, astats_b = _run_variant(variant, q, num_buckets)
-        _assert_same_up_to_ties(ids_u, d_u, ids_b, d_b)
-        # Work accounting is preserved exactly: same hops, same budgets.
-        np.testing.assert_array_equal(np.asarray(stats_u.hops),
-                                      np.asarray(stats_b.hops))
-        np.testing.assert_array_equal(np.asarray(astats_u.budget),
-                                      np.asarray(astats_b.budget))
-
-
-# Pinned LID center: the default (batch-mean) centering is itself
-# order-sensitive at the float-ulp level (a permuted sum rounds differently),
-# which is the *reducer's* property, not the bucket scheduler's. Pinning the
-# center isolates the property under test: scheduling must not depend on
-# batch order.
-BUDGET_PINNED = dataclasses.replace(BUDGET, center=8.0)
-
-
-@settings(max_examples=5, deadline=None)
-@given(seed=st.integers(0, 2**31 - 1), num_buckets=st.integers(2, 5))
-def test_bucketed_permutation_invariant(seed, num_buckets):
-    """Shuffling the query batch must not change any query's result: bucket
-    membership is a per-query property, not a batch-order artifact."""
-    _, q, _, _, _ = _built()
-    perm = np.random.default_rng(seed).permutation(q.shape[0])
-    inv = np.argsort(perm)
-    q_perm = jnp.asarray(np.asarray(q)[perm])
-    for variant in VARIANTS:
-        ids_o, d_o, stats_o, _ = _run_variant(
-            variant, q, num_buckets, budget=BUDGET_PINNED)
-        ids_p, d_p, stats_p, _ = _run_variant(
-            variant, q_perm, num_buckets, budget=BUDGET_PINNED)
-        _assert_same_up_to_ties(ids_o, d_o,
-                                np.asarray(ids_p)[inv],
-                                np.asarray(d_p)[inv])
-        np.testing.assert_array_equal(np.asarray(stats_o.hops),
-                                      np.asarray(stats_p.hops)[inv])
 
 
 @settings(max_examples=8, deadline=None)
@@ -143,7 +40,7 @@ def test_distributed_bucket_deadline_caps_hops():
     """The in-graph quantized path (hedged per-shard deadlines): budgets are
     rounded up to bucket ceilings and the walk still returns its best-so-far
     candidates under the ceiling-derived hop deadline."""
-    x, q, _, idx, _ = _built()
+    x, q, _, idx, _ = built()
     ceilings = search.budget_bucket_ceilings(BUDGET.l_min, BUDGET.l_max, 4)
     d2, ids = ss._local_search(
         idx.adj, None, x, None, q, idx.entry,
@@ -158,3 +55,32 @@ def test_distributed_bucket_deadline_caps_hops():
         beam_width=BUDGET.l_max, max_hops=96, k=5, query_chunk=q.shape[0],
         use_pq=False, beam_budget=BUDGET, bucket_ceilings=None)
     assert float(jnp.mean(d2)) <= float(jnp.mean(d2_raw)) + 1e-5
+
+
+def test_local_search_per_shard_law_overrides():
+    """Traced (lam, l_min) overrides reproduce the config's own law exactly
+    (identity broadcast) and actually move the granted budgets when they
+    differ — the per-shard calibration contract."""
+    x, q, _, idx, _ = built()
+    base = dict(beam_width=BUDGET.l_max, max_hops=96, k=5,
+                query_chunk=q.shape[0], use_pq=False, beam_budget=BUDGET)
+    d2_cfg, ids_cfg = ss._local_search(
+        idx.adj, None, x, None, q, idx.entry, **base)
+    d2_ovr, ids_ovr = ss._local_search(
+        idx.adj, None, x, None, q, idx.entry, **base,
+        lam=jnp.float32(BUDGET.lam), l_min=jnp.int32(BUDGET.l_min))
+    np.testing.assert_array_equal(np.asarray(ids_cfg), np.asarray(ids_ovr))
+    np.testing.assert_array_equal(np.asarray(d2_cfg), np.asarray(d2_ovr))
+    # A different law changes the grant: lam=0 collapses every budget to the
+    # geometric mid, which must differ from the spread law's grants on a
+    # heterogeneous batch (the walk's top-k may coincide on a tiny graph —
+    # the budgets are the contract).
+    eval_dists = ss._shard_eval(None, x, use_pq=False)
+    _, b_cfg, _, _ = search.adaptive_probe_batch(
+        q, idx.adj, idx.entry, eval_dists, x.shape[0], BUDGET)
+    _, b_flat, _, _ = search.adaptive_probe_batch(
+        q, idx.adj, idx.entry, eval_dists, x.shape[0], BUDGET,
+        lam=jnp.float32(0.0))
+    assert np.asarray(b_cfg).min() < np.asarray(b_cfg).max()
+    assert np.asarray(b_flat).min() == np.asarray(b_flat).max()
+    assert not np.array_equal(np.asarray(b_flat), np.asarray(b_cfg))

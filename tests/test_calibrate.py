@@ -3,6 +3,7 @@ must hit its recall target (within tolerance) on synthetic data across two
 intrinsic-dimensionality regimes, the fit must find a non-trivial (interior)
 lam when the target bites, and the whole pass must be deterministic under a
 fixed seed."""
+import dataclasses
 import functools
 
 import jax
@@ -189,6 +190,141 @@ def test_joint_fit_on_engine_hits_target():
     assert result.achieved, result
     assert result.recall >= 0.95
     assert result.l_min in calibrate.joint_l_min_candidates(base)
+
+
+@functools.lru_cache(maxsize=1)
+def _two_regime_mesh():
+    """A 2-shard distributed layout whose shards have *different* intrinsic
+    dimensionality (shard 0 mostly-flat, shard 1 mostly-complex) — the
+    geometry per-shard calibration exists for. Shard-major concatenated
+    arrays + per-shard entries, plus a shared query pool drawn from both
+    regimes."""
+    import jax.numpy as jnp
+
+    from repro.core import search as search_mod
+
+    key = jax.random.PRNGKey(11)
+    per = 600
+    shards, queries = [], []
+    for s, dims in enumerate(DIM_REGIMES):
+        pool = synthetic.mixture_of_manifolds(
+            jax.random.fold_in(key, s), per + 24, 48, intrinsic_dims=dims)
+        shards.append(pool[:per])
+        queries.append(pool[per:])
+    adj = jnp.concatenate([build.build_mcgi(xs, CFG).adj for xs in shards])
+    x = jnp.concatenate(shards)
+    entries = jnp.stack([search_mod.medoid(xs) for xs in shards])
+    q = jnp.concatenate(queries)
+    return np.asarray(x), np.asarray(adj), np.asarray(entries), np.asarray(q)
+
+
+# Per-shard fits need floor candidates to scan (joint_l_min_candidates
+# halves down from the base floor) and a target the hard shard can only
+# meet above the smallest floor — that separation is what per-shard
+# calibration exists to exploit.
+BASE_SHARD = dataclasses.replace(BASE, l_min=8)
+TARGET_SHARD = 0.97
+
+
+def _per_shard_fit():
+    x, adj, entries, q = _two_regime_mesh()
+    return calibrate.calibrate_budget_law_per_shard(
+        calibrate.shard_exact_recall_evals(x, adj, entries, q, 2, k=10,
+                                           sample=48, seed=0),
+        BASE_SHARD, TARGET_SHARD, n_shards=2, max_iters=4)
+
+
+def test_per_shard_calibration_deterministic():
+    """Same data + seed -> identical per-shard fits, shard by shard (laws,
+    hop factors, full bisection histories)."""
+    a, b = _per_shard_fit(), _per_shard_fit()
+    assert a == b
+    lam, l_min = a.law_arrays()
+    assert lam.shape == (2,) and lam.dtype == np.float32
+    assert l_min.shape == (2,) and l_min.dtype == np.int32
+
+
+def test_per_shard_fits_at_least_as_tight_as_global():
+    """On the two-regime mesh, every shard's own (lam, l_min) fit meets the
+    target on that shard, and the per-shard laws are at least as tight as
+    one global law that must hold the target on *every* shard (min-pooled
+    recall — a global SLO is only met when its worst shard meets it):
+    shard floors never exceed the global floor, and the flat shard runs
+    strictly below it — the easy shard stops subsidising the hard one."""
+    import dataclasses as dc
+
+    import jax.numpy as jnp
+
+    x, adj, entries, q = _two_regime_mesh()
+    make_shard_eval = calibrate.shard_exact_recall_evals(
+        x, adj, entries, q, 2, k=10, sample=48, seed=0)
+    fit = _per_shard_fit()
+    assert fit.achieved, fit
+
+    def make_pooled(cfg):
+        evals = [make_shard_eval(s)(cfg) for s in range(2)]
+
+        def pooled(c):
+            return float(min(e(c) for e in evals))
+
+        return pooled
+
+    global_fit = calibrate.calibrate_budget_law_joint(
+        make_pooled, BASE_SHARD, TARGET_SHARD, max_iters=4)
+    assert global_fit.achieved, global_fit
+    cfg_g = global_fit.budget_cfg(BASE_SHARD)
+
+    # The hard shard's floor requirement binds the global law; per-shard
+    # floors are never above it, and the regimes actually separate (the
+    # flat shard sustains a strictly lower floor than the complex one).
+    assert all(lm <= cfg_g.l_min for lm in fit.l_min), (fit, cfg_g)
+    assert fit.l_min[0] < fit.l_min[1], fit
+
+    def mean_budget(shard, cfg):
+        per = adj.shape[0] // 2
+        _, _, _, astats = search.beam_search_exact_adaptive(
+            jnp.asarray(x[shard * per:(shard + 1) * per]),
+            jnp.asarray(adj[shard * per:(shard + 1) * per]),
+            jnp.asarray(q), jnp.asarray(entries)[shard], cfg, k=10)
+        return float(np.mean(np.asarray(astats.budget)))
+
+    # On the flat shard, serving its own law is strictly cheaper than
+    # serving the global law the hard shard forced.
+    own = mean_budget(0, dc.replace(BASE_SHARD, lam=fit.lam[0],
+                                    l_min=fit.l_min[0],
+                                    hop_factor=fit.hop_factor[0]))
+    forced = mean_budget(0, cfg_g)
+    assert own < forced, (own, forced, fit, global_fit)
+
+
+def test_per_shard_serving_budget_escalates_hop_factor():
+    """hop_factor is global in the distributed step: a fit that escalated
+    it on any shard must raise the serving config's value to the per-shard
+    max, or that shard serves under a tighter deadline than it was
+    calibrated to (hop limits are caps — the max is safe everywhere)."""
+    base = search.AdaptiveBeamBudget(l_min=4, l_max=32, lam=0.2,
+                                     hop_factor=4)
+
+    def make_shard_eval(s):
+        def factory(cfg):
+            def eval_recall(c):
+                # Shard 1's hop budget binds until hop_factor doubles.
+                if s == 1 and c.hop_factor < 8:
+                    return 0.8
+                return 0.95
+
+            return eval_recall
+
+        return factory
+
+    fit = calibrate.calibrate_budget_law_per_shard(
+        make_shard_eval, base, 0.9, n_shards=2)
+    assert fit.achieved
+    assert fit.hop_factor[0] == 4 and fit.hop_factor[1] == 8, fit
+    srv = fit.serving_budget(base)
+    assert srv.hop_factor == 8
+    assert (srv.l_min, srv.l_max, srv.lam) == (base.l_min, base.l_max,
+                                               base.lam)
 
 
 def test_holdout_sample_deterministic_and_sorted():

@@ -153,6 +153,31 @@ def test_recsys_smoke_full_cycle(arch):
     assert np.isfinite(float(loss)), arch
 
 
+def test_mcgi_shard_budget_laws():
+    """McgiDatasetConfig.shard_budget_laws broadcasts the dataset's budget
+    law per shard (the serve cells' runtime-array plumbing): stored
+    per-shard fits pass through verbatim and must match the shard count;
+    with none stored the global (lam, l_min) broadcasts."""
+    import dataclasses
+
+    from repro.configs.mcgi_datasets import McgiDatasetConfig
+
+    cfg = McgiDatasetConfig("t", 1000, 32, 16, 32, None, "float32",
+                            l_search=64, lam=0.3, l_min=8)
+    lam, l_min = cfg.shard_budget_laws(4)
+    assert lam.shape == (4,) and lam.dtype == np.float32
+    assert l_min.shape == (4,) and l_min.dtype == np.int32
+    assert (lam == np.float32(0.3)).all() and (l_min == 8).all()
+
+    fitted = dataclasses.replace(cfg, shard_lam=(0.1, 0.5),
+                                 shard_l_min=(2, 16))
+    lam2, l_min2 = fitted.shard_budget_laws(2)
+    np.testing.assert_allclose(lam2, np.asarray([0.1, 0.5], np.float32))
+    np.testing.assert_array_equal(l_min2, [2, 16])
+    with pytest.raises(AssertionError):
+        fitted.shard_budget_laws(4)  # stored fits must match the mesh
+
+
 def test_registry_complete():
     """All 10 assigned archs + 5 paper-dataset archs registered; 40 assigned
     cells present."""

@@ -1,5 +1,6 @@
 """Multi-device integration tests (8 virtual host devices, subprocess-
 isolated so unit tests keep the default single-device backend)."""
+import functools
 import json
 import pathlib
 import subprocess
@@ -65,3 +66,37 @@ def test_moe_expert_parallel_matches_reference():
 def test_merge_modes_agree():
     r = _run("merge_modes")
     assert r["ids_match"] and r["d2_match"], r
+
+
+@functools.lru_cache(maxsize=1)
+def _staged():
+    """One worker run shared by the staged-engine assertions below (the
+    scenario builds 8 sub-graphs and compiles the mesh programs once)."""
+    return _run("staged_engine")
+
+
+@pytest.mark.slow
+def test_staged_engine_parity():
+    """Staged distributed serving at engine parity: the probe/continue
+    split is bit-identical to the monolithic step, pipelining and
+    coalescing are result-transparent (ragged tails included), scheduling
+    is permutation-invariant, and identity per-shard laws are pure
+    plumbing."""
+    r = _staged()
+    for key in ("staged_eq_mono_ids", "staged_eq_mono_d2",
+                "pipelined_eq_eager", "permutation_invariant",
+                "coalesce_count", "coalesce_identical",
+                "identity_laws_bitwise"):
+        assert r[key], (key, r)
+
+
+@pytest.mark.slow
+def test_staged_fault_injection_mid_stream():
+    """set_shard_ok flipped between batches of a pipelined stream: later
+    batches exclude the dead shard, recall loss is bounded by its data
+    fraction, results stay best-so-far finite under the bucket hop
+    deadlines, and the jit caches are pinned (no recompilation)."""
+    r = _staged()
+    for key in ("fault_no_dead_results", "fault_best_so_far_finite",
+                "fault_recall_bounded", "fault_no_recompile"):
+        assert r[key], (key, r)

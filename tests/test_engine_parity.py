@@ -1,0 +1,280 @@
+"""Consolidated cross-backend property harness for the serving engine.
+
+Every backend (exact / PQ / tiered — and distributed whenever the process
+has a mesh, i.e. the CI multi-device matrix job) is pinned to the same
+scheduling-transparency properties from shared fixtures
+(``tests/_backend_fixtures.py``):
+
+* **staged vs monolithic** — the engine's staged probe/bucket/continue
+  path returns the single-program adaptive path's results (bitwise for the
+  distributed step, whose staged split runs the same mesh kernels; up to
+  distance ties for the single-host backends, whose monolithic jit is a
+  differently-fused program);
+* **bucketed vs unbucketed** — host bucket scheduling (engine and the
+  historical core ``num_buckets=`` entry points) never changes math;
+* **pipelined vs eager** — ``search_batches`` is bit-identical to
+  per-batch ``search``, including ragged final batches and the
+  single-batch stream;
+* **permutation invariance** — bucket membership is a per-query property,
+  never a batch-order artifact (pinned LID center);
+* **coalescing** — merged micro-batches split back into per-input-batch
+  results bit-identical to serving each batch alone (pinned center).
+
+Consolidates the duplicated identity properties that previously lived in
+``test_bucketed_search.py`` and ``test_serving_pipeline.py``; the new
+distributed staged path is covered by the same matrix for free.
+"""
+import numpy as np
+import pytest
+
+from tests import _backend_fixtures as fx
+from tests._hypothesis_compat import given, settings, st
+
+
+def _queries(variant):
+    if variant == "dist":
+        _, _, _, q, _ = fx.built_dist()
+        return q
+    _, q, _, _, _ = fx.built()
+    return q
+
+
+# ------------------------------------------------------- pipelined vs eager
+
+@settings(max_examples=3, deadline=None)
+@given(batch=st.integers(7, 40))
+def test_pipelined_bit_identical_to_eager(batch):
+    """search_batches == per-batch search, bitwise, on every backend — for
+    every batching, including ragged final batches (40 % batch != 0 for most
+    draws) and the single-batch stream (batch >= 40: no prefetch partner)."""
+    for variant in fx.backends():
+        q = _queries(variant)
+        batches = fx.split(q, batch)
+        eng = fx.engine(variant)
+        piped = list(eng.search_batches(batches))
+        assert len(piped) == len(batches)
+        for res_p, qb in zip(piped, batches):
+            fx.assert_bit_identical(res_p, eng.search(qb))
+
+
+def test_single_batch_stream_degrades_to_search():
+    """No prefetch partner: a one-batch stream is exactly search()."""
+    for variant in fx.backends():
+        q = _queries(variant)
+        eng = fx.engine(variant)
+        (res,) = list(eng.search_batches([q]))
+        fx.assert_bit_identical(res, eng.search(q))
+
+
+def test_ragged_final_batch_shapes():
+    """A ragged tail yields its own full result (one per input batch)."""
+    for variant in fx.backends():
+        q = _queries(variant)
+        batches = [q[:16], q[16:32], q[32:39]]  # 7-lane tail
+        for res, qb in zip(fx.engine(variant).search_batches(batches),
+                           batches):
+            assert res.ids.shape == (qb.shape[0], 10)
+            assert res.d2.shape == (qb.shape[0], 10)
+
+
+# ---------------------------------------------------- staged vs monolithic
+
+@settings(max_examples=3, deadline=None)
+@given(batch=st.integers(10, 40))
+def test_staged_matches_monolithic(batch):
+    """The engine's staged path returns the monolithic single-program
+    adaptive path's results — bitwise for the distributed backend (same
+    mesh kernels, split at the probe horizon; batch sizes on the chunk
+    grid, which is all the monolithic step accepts), up to distance ties
+    for the single-host backends."""
+    for variant in fx.backends():
+        q = _queries(variant)
+        # The monolithic distributed step accepts only chunk-divisible
+        # batches; pin its size (16 + the 8-lane tail) so the mesh compiles
+        # a bounded shape family across examples.
+        batch_v = 16 if variant == "dist" else batch
+        eng = fx.engine(variant)
+        for qb in fx.split(q, batch_v):
+            if variant == "dist" and qb.shape[0] % fx.DIST_CHUNK:
+                continue
+            res = eng.search(qb)
+            ids_m, d_m, stats_m, astats_m = fx.monolithic(variant, qb)
+            if variant == "dist":
+                np.testing.assert_array_equal(res.ids, np.asarray(ids_m))
+                np.testing.assert_array_equal(res.d2, np.asarray(d_m))
+            else:
+                fx.assert_same_up_to_ties(res.ids, res.d2, ids_m, d_m)
+                np.testing.assert_array_equal(np.asarray(res.stats.hops),
+                                              np.asarray(stats_m.hops))
+                np.testing.assert_array_equal(
+                    np.asarray(res.astats.budget),
+                    np.asarray(astats_m.budget))
+
+
+# --------------------------------------------------- bucketed vs unbucketed
+
+@settings(max_examples=3, deadline=None)
+@given(num_buckets=st.integers(2, 6))
+def test_engine_bucketed_matches_unbucketed(num_buckets):
+    """Any fixed bucket family, the auto family, and no bucketing at all
+    serve the same results on every backend (scheduling changes, math
+    doesn't); work accounting (hops, granted budgets) is preserved
+    exactly."""
+    for variant in fx.backends():
+        q = _queries(variant)
+        res_u = fx.engine(variant, num_buckets=None).search(q)
+        for nb in (num_buckets, "auto"):
+            res_b = fx.engine(variant, num_buckets=nb).search(q)
+            fx.assert_same_up_to_ties(res_u.ids, res_u.d2,
+                                      res_b.ids, res_b.d2)
+            np.testing.assert_array_equal(np.asarray(res_u.stats.hops),
+                                          np.asarray(res_b.stats.hops))
+            np.testing.assert_array_equal(np.asarray(res_u.astats.budget),
+                                          np.asarray(res_b.astats.budget))
+
+
+@settings(max_examples=3, deadline=None)
+@given(num_buckets=st.integers(2, 6))
+def test_core_bucketed_matches_unbucketed(num_buckets):
+    """The historical core ``num_buckets=`` entry points (eager per-bucket
+    gathers) stay pinned to the single-program path too."""
+    for variant in fx.SINGLE_HOST:
+        q = _queries(variant)
+        ids_u, d_u, stats_u, astats_u = fx.monolithic(variant, q)
+        ids_b, d_b, stats_b, astats_b = fx.core_bucketed(
+            variant, q, num_buckets)
+        fx.assert_same_up_to_ties(ids_u, d_u, ids_b, d_b)
+        np.testing.assert_array_equal(np.asarray(stats_u.hops),
+                                      np.asarray(stats_b.hops))
+        np.testing.assert_array_equal(np.asarray(astats_u.budget),
+                                      np.asarray(astats_b.budget))
+
+
+# ------------------------------------------------------------- permutation
+
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_permutation_invariant(seed):
+    """Shuffling the query batch must not change any query's result: bucket
+    membership (and, distributed, the per-shard budget grant) is a
+    per-query property, not a batch-order artifact. Pinned LID center —
+    batch-mean centering is the reducer's order sensitivity, not the
+    scheduler's."""
+    for variant in fx.backends():
+        q = _queries(variant)
+        perm = np.random.default_rng(seed).permutation(q.shape[0])
+        inv = np.argsort(perm)
+        eng = fx.engine(variant)
+        res_o = eng.search(q)
+        res_p = eng.search(np.asarray(q)[perm])
+        fx.assert_same_up_to_ties(res_o.ids, res_o.d2,
+                                  np.asarray(res_p.ids)[inv],
+                                  np.asarray(res_p.d2)[inv])
+        np.testing.assert_array_equal(np.asarray(res_o.stats.hops),
+                                      np.asarray(res_p.stats.hops)[inv])
+
+
+# -------------------------------------------------------------- coalescing
+
+@pytest.mark.parametrize("lanes,threshold", [(4, 16), (7, 24)])
+def test_coalescing_preserves_per_batch_results(lanes, threshold):
+    """Admission coalescing merges micro-batches before dispatch and splits
+    the results back: one result per *input* batch, bit-identical per query
+    to serving that batch alone (pinned center), order preserved."""
+    for variant in fx.backends():
+        q = _queries(variant)
+        micro = fx.split(q, lanes)
+        eng = fx.engine(variant)
+        engc = fx.engine(variant, coalesce_lanes=threshold)
+        res_c = list(engc.search_batches(micro))
+        assert len(res_c) == len(micro)
+        for res, qb in zip(res_c, micro):
+            ref = eng.search(qb)
+            np.testing.assert_array_equal(res.ids, ref.ids)
+            np.testing.assert_array_equal(res.d2, ref.d2)
+            np.testing.assert_array_equal(np.asarray(res.stats.hops),
+                                          np.asarray(ref.stats.hops))
+            np.testing.assert_array_equal(np.asarray(res.astats.budget),
+                                          np.asarray(ref.astats.budget))
+
+
+def test_coalescing_monolithic_backend():
+    """Coalescing also composes with monolithic dispatch (fixed-beam): the
+    merged program's results split back per input batch."""
+    x, q, _, idx, _ = fx.built()
+    from repro import serving
+
+    eng = serving.SearchEngine(
+        serving.ExactBackend(x, idx.adj, idx.entry), None, k=10,
+        beam_width=32, coalesce_lanes=32)
+    ref = serving.SearchEngine(
+        serving.ExactBackend(x, idx.adj, idx.entry), None, k=10,
+        beam_width=32)
+    micro = fx.split(q, 10)
+    res_c = list(eng.search_batches(micro))
+    assert len(res_c) == len(micro)
+    merged = ref.search(q)
+    np.testing.assert_array_equal(
+        np.concatenate([r.ids for r in res_c]), merged.ids)
+    np.testing.assert_array_equal(
+        np.concatenate([np.asarray(r.stats.hops) for r in res_c]),
+        np.asarray(merged.stats.hops))
+
+
+# ------------------------------------------- distributed-only extra checks
+
+def test_distributed_per_shard_laws_identity_broadcast():
+    """Broadcasting the global (lam, l_min) as per-shard arrays serves
+    bit-identical results to the scalar law — the arrays are pure plumbing
+    until a per-shard calibration writes real values into them."""
+    if not fx.has_mesh():
+        pytest.skip("needs >= 8 devices (CI multi-device matrix)")
+    from repro import serving
+
+    mesh, arrays, _per, q, _gt = fx.built_dist()
+    budget = fx.BUDGET_DIST
+    laws = (np.full(8, budget.lam, np.float32),
+            np.full(8, budget.l_min, np.int32))
+    eng = fx.engine("dist")
+    eng_laws = serving.SearchEngine(
+        fx._make_backend("dist", budget, shard_laws=laws), budget, k=10)
+    res, res_l = eng.search(q), eng_laws.search(q)
+    np.testing.assert_array_equal(res.ids, res_l.ids)
+    np.testing.assert_array_equal(res.d2, res_l.d2)
+
+
+def test_distributed_fault_injection_between_batches():
+    """set_shard_ok flipped between batches of a pipelined stream: later
+    batches exclude the dead shard (graceful, recall loss bounded by its
+    data fraction) and nothing recompiles (the mask is a runtime input)."""
+    if not fx.has_mesh():
+        pytest.skip("needs >= 8 devices (CI multi-device matrix)")
+    import jax.numpy as jnp
+
+    from repro import serving
+    from repro.core import distance
+
+    mesh, arrays, _per, q, gt_i = fx.built_dist()
+    budget = fx.BUDGET_DIST
+    backend = fx._make_backend("dist", budget)
+    eng = serving.SearchEngine(backend, budget, k=10, num_buckets=None)
+    batches = [q[:20]] * 6
+    list(eng.search_batches(batches))  # warm every program
+    caches = (backend._probe_step._cache_size(),
+              backend._continue_step._cache_size())
+    dead = jnp.ones((8,), jnp.bool_).at[3].set(False)
+    results = []
+    for i, res in enumerate(eng.search_batches(batches)):
+        results.append(res)
+        if i == 1:
+            backend.set_shard_ok(dead)
+    backend.set_shard_ok(jnp.ones((8,), jnp.bool_))
+    r_full = float(distance.recall_at_k(jnp.asarray(results[0].ids),
+                                        jnp.asarray(gt_i[:20])))
+    r_dead = float(distance.recall_at_k(jnp.asarray(results[-1].ids),
+                                        jnp.asarray(gt_i[:20])))
+    assert (results[-1].extras["shard_ids"] != 3).all()
+    assert np.isfinite(results[-1].d2).all()   # best-so-far under deadlines
+    assert r_dead >= r_full - 0.2, (r_full, r_dead)
+    assert (backend._probe_step._cache_size(),
+            backend._continue_step._cache_size()) == caches

@@ -6,7 +6,7 @@ import pytest
 
 from repro.core import build, search
 from repro.index import (build_tiered_index, load_disk_model, load_index,
-                         save_index)
+                         load_shard_laws, save_index)
 from repro.index.disk import (DiskTierModel, search_tiered,
                               search_tiered_adaptive)
 
@@ -86,3 +86,30 @@ def test_round_trip_disk_model(built, tmp_path):
     save_index(p2, index)
     assert load_disk_model(p2) is None
     assert load_index(p2).n == index.n
+
+
+def test_round_trip_shard_laws(built, tmp_path):
+    """Per-shard calibrated (lam, l_min) budget-law arrays survive the
+    round trip bit-exactly (float32 -> json double -> float32 is lossless)
+    and stay optional — indexes without them report None."""
+    index, _ = built
+    lam = np.asarray([0.188, 0.0, 0.5, 1.0], np.float32)
+    l_min = np.asarray([2, 8, 4, 16], np.int32)
+    p = tmp_path / "with_laws.npz"
+    save_index(p, index, shard_laws=(lam, l_min))
+    out = load_shard_laws(p)
+    assert out is not None
+    np.testing.assert_array_equal(out[0], lam)
+    np.testing.assert_array_equal(out[1], l_min)
+    assert out[0].dtype == np.float32 and out[1].dtype == np.int32
+    # Composes with the disk model in the same manifest.
+    p2 = tmp_path / "laws_and_model.npz"
+    save_index(p2, index, disk_model=DiskTierModel(),
+               shard_laws=(lam, l_min))
+    assert load_disk_model(p2) is not None
+    np.testing.assert_array_equal(load_shard_laws(p2)[0], lam)
+    # Absent by default; the index itself still loads.
+    p3 = tmp_path / "without_laws.npz"
+    save_index(p3, index)
+    assert load_shard_laws(p3) is None
+    assert load_index(p3).n == index.n

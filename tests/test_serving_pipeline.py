@@ -1,140 +1,20 @@
-"""Property tests for the staged double-buffered serving engine
-(``repro.serving``): pipelining must be a pure wall-clock optimisation.
-
-The engine's contract (see the package docstring) is *result transparency*:
-``search_batches`` runs the same compiled programs on the same inputs as
-per-batch ``search``, only the dispatch order moves — so pipelined results
-are required to be bit-identical, across the exact / PQ / tiered backends,
-including ragged final batches and a single-batch stream (no prefetch
-partner). The monolithic single-program adaptive path is the ties-tolerant
-cross-check (same style as ``tests/test_bucketed_search.py``). The
-auto-picked bucket family is a pure function of the granted-budget histogram
-(deterministic, permutation-invariant) and never changes results.
-"""
+"""Engine-specific tests that are not cross-backend parity properties: the
+auto-picked bucket family (a pure function of the granted-budget histogram)
+and the live recalibration hook.  The pipelining / bucketing / permutation
+identity properties formerly here are consolidated in
+``tests/test_engine_parity.py`` (shared fixtures:
+``tests/_backend_fixtures.py``), where every backend — including the staged
+distributed path — is pinned to them together."""
 import dataclasses
-import functools
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro import serving
-from repro.core import build, distance, search
-from repro.index import build_tiered_index
-from repro.index.disk import search_tiered_adaptive
+from repro.core import distance
 from repro.serving import pipeline as pipe
+from tests._backend_fixtures import BUDGET, built
 from tests._hypothesis_compat import given, settings, st
-
-CFG = build.BuildConfig(degree=24, beam_width=48, iters=2, batch=256,
-                       max_hops=96)
-# Pinned LID center, as in test_bucketed_search: batch-mean centering makes
-# budgets depend on which queries share a batch, which is the *reducer's*
-# property; pinning isolates the scheduling property under test.
-BUDGET = search.AdaptiveBeamBudget(l_min=8, l_max=48, lam=0.3, center=8.0)
-VARIANTS = ("exact", "pq", "tiered")
-
-
-@functools.lru_cache(maxsize=1)
-def _built():
-    from repro.data import make_dataset
-
-    x, q = make_dataset("tiny-mixture", seed=0)
-    x, q = x[:1500], q[:40]
-    idx = build.build_mcgi(x, CFG)
-    tiered = build_tiered_index(x, idx, m_pq=8)
-    gt_d, gt_i = distance.brute_force_topk(q, x, k=10)
-    return x, np.asarray(q), gt_i, idx, tiered
-
-
-@functools.lru_cache(maxsize=8)
-def _engine(variant, num_buckets="auto"):
-    x, _, _, idx, tiered = _built()
-    if variant == "exact":
-        backend = serving.ExactBackend(x, idx.adj, idx.entry)
-    elif variant == "pq":
-        backend = serving.TieredBackend(tiered, rerank=False)
-    else:
-        backend = serving.TieredBackend(tiered)
-    return serving.SearchEngine(backend, BUDGET, k=10,
-                                num_buckets=num_buckets)
-
-
-def _split(q, batch):
-    return [q[i:i + batch] for i in range(0, q.shape[0], batch)]
-
-
-def _assert_bit_identical(a: serving.BatchResult, b: serving.BatchResult):
-    np.testing.assert_array_equal(a.ids, b.ids)
-    np.testing.assert_array_equal(a.d2, b.d2)
-    np.testing.assert_array_equal(np.asarray(a.stats.hops),
-                                  np.asarray(b.stats.hops))
-    np.testing.assert_array_equal(np.asarray(a.astats.budget),
-                                  np.asarray(b.astats.budget))
-    assert a.ceilings == b.ceilings
-
-
-def _assert_same_up_to_ties(ids_a, d_a, ids_b, d_b, tol=1e-5):
-    """Result equality modulo distance ties: distances must match, and any
-    id mismatch must sit on a tie (equal distances at that rank)."""
-    ids_a, d_a = np.asarray(ids_a), np.asarray(d_a)
-    ids_b, d_b = np.asarray(ids_b), np.asarray(d_b)
-    both_inf = np.isinf(d_a) & np.isinf(d_b)
-    np.testing.assert_allclose(
-        np.where(both_inf, 0.0, d_a), np.where(both_inf, 0.0, d_b),
-        rtol=tol, atol=tol)
-    mism = ids_a != ids_b
-    assert np.allclose(d_a[mism], d_b[mism], rtol=tol, atol=tol), (
-        "id mismatch without a distance tie")
-
-
-@settings(max_examples=4, deadline=None)
-@given(batch=st.integers(7, 40))
-def test_pipelined_bit_identical_to_unpipelined(batch):
-    """search_batches == per-batch search, bitwise, on every backend — for
-    every batching, including ragged final batches (40 % batch != 0 for most
-    draws) and the single-batch stream (batch >= 40: no prefetch partner)."""
-    _, q, _, _, _ = _built()
-    batches = _split(q, batch)
-    for variant in VARIANTS:
-        eng = _engine(variant)
-        piped = list(eng.search_batches(batches))
-        assert len(piped) == len(batches)
-        for res_p, qb in zip(piped, batches):
-            _assert_bit_identical(res_p, eng.search(qb))
-
-
-def test_single_batch_stream_degrades_to_search():
-    """No prefetch partner: a one-batch stream is exactly search()."""
-    _, q, _, _, _ = _built()
-    for variant in VARIANTS:
-        eng = _engine(variant)
-        (res,) = list(eng.search_batches([q]))
-        _assert_bit_identical(res, eng.search(q))
-
-
-@settings(max_examples=3, deadline=None)
-@given(batch=st.integers(10, 40), num_buckets=st.integers(2, 5))
-def test_engine_matches_monolithic_adaptive_path(batch, num_buckets):
-    """The engine (fixed or auto bucket family, pipelined) returns the
-    monolithic single-program adaptive path's results up to distance ties —
-    the bucketed==unbucketed property lifted to the engine."""
-    x, q, _, idx, tiered = _built()
-    batches = _split(q, batch)
-    for variant, eng in (("exact", _engine("exact", num_buckets)),
-                         ("tiered", _engine("tiered", num_buckets)),
-                         ("exact", _engine("exact", "auto"))):
-        for res, qb in zip(eng.search_batches(batches), batches):
-            if variant == "exact":
-                ids_m, d_m, stats_m, astats_m = \
-                    search.beam_search_exact_adaptive(
-                        x, idx.adj, qb, idx.entry, BUDGET, k=10)
-            else:
-                ids_m, d_m, stats_m, astats_m = search_tiered_adaptive(
-                    tiered, qb, BUDGET, k=10)
-            _assert_same_up_to_ties(res.ids, res.d2, ids_m, d_m)
-            np.testing.assert_array_equal(np.asarray(res.stats.hops),
-                                          np.asarray(stats_m.hops))
-            np.testing.assert_array_equal(np.asarray(res.astats.budget),
-                                          np.asarray(astats_m.budget))
 
 
 @settings(max_examples=10, deadline=None)
@@ -172,7 +52,7 @@ def test_recalibrate_updates_live_engine():
     """The recalibration hook refits the budget law in place (lam moves, the
     engine object and backend survive), and the joint variant fits l_min
     too — the Online-MCGI refresh path."""
-    x, q, gt_i, idx, _ = _built()
+    x, q, gt_i, idx, _ = built()
     eng = serving.SearchEngine(
         serving.ExactBackend(x, idx.adj, idx.entry),
         dataclasses.replace(BUDGET, center=None), k=10)
@@ -188,3 +68,19 @@ def test_recalibrate_updates_live_engine():
     assert joint.l_min is not None
     assert eng.budget_cfg.l_min == joint.l_min
     assert eng.budget_cfg.lam == joint.lam
+
+
+def test_recalibrate_rejected_for_distributed_engines():
+    """A staged distributed engine must not recalibrate in place: swapping
+    budget_cfg would desync it from the backend's compiled beam_budget and
+    brick every later search on the probe consistency check. The hook
+    rejects cleanly and points at the per-shard pass."""
+    import pytest
+
+    class FakeDistributed:
+        staged = True
+        beam_budget = BUDGET
+
+    eng = serving.SearchEngine(FakeDistributed(), BUDGET, k=10)
+    with pytest.raises(NotImplementedError, match="per shard"):
+        eng.recalibrate(eval_recall=lambda cfg: 1.0)
