@@ -24,6 +24,7 @@ def main() -> None:
         adaptive_beam,
         build_time,
         common,
+        disk_io,
         kernel_bench,
         latency,
         lid_accuracy,
@@ -42,6 +43,7 @@ def main() -> None:
         "build_time": build_time.run,           # §3.3
         "adaptive_beam": adaptive_beam.run,     # beyond-paper (Prop. 4.2)
         "pipeline": pipeline_throughput.run,    # serving-engine pipeline
+        "disk_io": disk_io.run,                 # measured vs modelled slow tier
         "kernels": kernel_bench.run,            # hot-op microbench
     }
     if args.only:

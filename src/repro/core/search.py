@@ -486,6 +486,18 @@ def _rerank_slow_tier(beam_ids, x_slow, queries, k):
     """Full-precision re-rank of the final beam (one batched slow-tier read)."""
     safe = jnp.maximum(beam_ids, 0)
     vecs = x_slow[safe]  # (Q, L, D) — the batched slow-tier read
+    return _rerank_from_vecs(beam_ids, vecs, queries, k)
+
+
+def _rerank_from_vecs(beam_ids, vecs, queries, k):
+    """Re-rank from pre-gathered beam vectors (Q, L, D).
+
+    The arithmetic tail of :func:`_rerank_slow_tier`, shared with the
+    disk-backed slow tier (:class:`repro.index.disk.BlockSlowTier`), whose
+    gather happens on the host out of block reads instead of an in-graph
+    index — the two paths run identical ops on identical values, so results
+    are bit-identical.
+    """
     diff = vecs - queries[:, None, :]
     d2 = jnp.sum(diff * diff, axis=-1)
     d2 = jnp.where(beam_ids == INVALID, jnp.inf, d2)
@@ -609,6 +621,7 @@ def _beam_search_pq_adaptive_jit(
 
 
 _rerank_slow_tier_jit = jax.jit(_rerank_slow_tier, static_argnames=("k",))
+_rerank_from_vecs_jit = jax.jit(_rerank_from_vecs, static_argnames=("k",))
 
 
 def beam_search_pq_adaptive(

@@ -1,7 +1,21 @@
+from repro.index.blockstore import (  # noqa: F401
+    BlockChecksumError,
+    BlockStore,
+    BlockStoreError,
+    BlockStoreFormatError,
+    BlockStoreTruncatedError,
+    ensure_block_store,
+    write_block_store,
+)
 from repro.index.disk import (  # noqa: F401
+    BlockSlowTier,
     DiskTierModel,
+    InMemorySlowTier,
+    SlowTier,
     TieredIndex,
     build_tiered_index,
+    entry_proximal_ids,
+    open_or_build_slow_tier,
     search_tiered,
     search_tiered_adaptive,
 )
@@ -9,5 +23,7 @@ from repro.index.serializer import (  # noqa: F401
     load_disk_model,
     load_index,
     load_shard_laws,
+    load_slow_tier,
+    open_block_store,
     save_index,
 )

@@ -1,0 +1,273 @@
+"""Block-aligned on-disk node store — the *real* slow tier.
+
+DiskANN/BAMG layout: one node's full-precision vector and its adjacency list
+live in the same aligned disk block, so a beam expansion (or a rerank fetch)
+is exactly one block read.  The repo's :class:`repro.index.disk.DiskTierModel`
+prices that read analytically; this module makes it physical:
+
+    block 0      : header — magic + JSON manifest, zero padded
+    block 1 + i  : node i — [vector f32 (D,)] [adj i32 (R,)] [crc32 u32],
+                   zero padded to ``block_size``
+
+``block_size`` is the record payload rounded up to a multiple of
+:data:`SECTOR` (512B — SSD sector alignment, so a record never straddles an
+unaligned boundary).  All fields are little-endian; the file is
+byte-identical across hosts.  Reads go through one shared ``np.memmap``
+(pages fault in on first touch — the OS page cache is the "SSD controller"
+on this testbed; on a real deployment the same layout reads with
+O_DIRECT/io_uring at sector granularity).
+
+Every record carries a CRC32 over its payload: a torn write, bit rot, or a
+wrong-length file surfaces as a typed error (:class:`BlockChecksumError`,
+:class:`BlockStoreTruncatedError`, :class:`BlockStoreFormatError`) instead
+of silently serving garbage neighbours.
+
+The serving-side cache/prefetch policy lives in
+:class:`repro.index.disk.BlockSlowTier`; this module is only the storage
+format and its (counted, timed) reader.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import time
+import zlib
+
+import numpy as np
+
+MAGIC = b"MCGIBLK2"
+FORMAT = "repro.blockstore.v2"
+SECTOR = 512
+
+
+class BlockStoreError(Exception):
+    """Base class for slow-tier storage faults."""
+
+
+class BlockStoreFormatError(BlockStoreError):
+    """Bad magic / unknown format / manifest inconsistent with the file."""
+
+
+class BlockStoreTruncatedError(BlockStoreError):
+    """File shorter than the manifest's node count implies."""
+
+
+class BlockChecksumError(BlockStoreError):
+    """A node record's payload fails its CRC32 (torn write / bit rot)."""
+
+
+def block_size_for(d: int, r: int) -> int:
+    """Record bytes (vector + adjacency + crc) rounded up to a sector."""
+    payload = d * 4 + r * 4 + 4
+    return ((payload + SECTOR - 1) // SECTOR) * SECTOR
+
+
+def vectors_crc32(vectors: np.ndarray) -> int:
+    """Content fingerprint of a slow tier (little-endian f32 bytes).
+
+    Written into the store manifest and cross-checked by consumers that
+    already hold the vectors (or, for v2 indexes, recorded in the npz
+    manifest): geometry alone — (n, d, r) — cannot tell two builds of the
+    same shape apart, and a stale store with matching shape would otherwise
+    serve wrong reranks silently.
+    """
+    arr = np.ascontiguousarray(np.asarray(vectors), dtype="<f4")
+    return zlib.crc32(arr)   # buffer protocol: no store-sized copy
+
+
+@dataclasses.dataclass
+class BlockReadStats:
+    """Cumulative reader counters (reset with :meth:`BlockStore.reset_stats`).
+
+    ``read_time_s`` is host wall time spent inside block reads — the
+    *measured* counterpart of ``DiskTierModel.read_latency_us * blocks_read``.
+    """
+
+    blocks_read: int = 0
+    read_time_s: float = 0.0
+
+    def measured_read_us(self) -> float:
+        """Mean measured latency per block read, in microseconds."""
+        if self.blocks_read == 0:
+            return 0.0
+        return self.read_time_s * 1e6 / self.blocks_read
+
+
+class BlockStore:
+    """Reader over one block file (see the module docstring for the layout).
+
+    Open is cheap (header block only); node reads are memmap slices, each
+    CRC-verified.  ``read_many`` is the serving entry point: it returns the
+    (n, D) vectors and (n, R) adjacency for a batch of node ids and counts
+    every record touched in :attr:`stats`.
+    """
+
+    def __init__(self, path: str | pathlib.Path):
+        self.path = pathlib.Path(path)
+        try:
+            raw = np.memmap(self.path, dtype=np.uint8, mode="r")
+        except (FileNotFoundError, ValueError) as e:
+            raise BlockStoreFormatError(
+                f"cannot open block store {self.path}: {e}") from e
+        if raw.size < SECTOR or bytes(raw[: len(MAGIC)]) != MAGIC:
+            raise BlockStoreFormatError(
+                f"{self.path}: not a block store (bad magic)")
+        hlen = int(raw[len(MAGIC): len(MAGIC) + 4].view("<u4")[0])
+        if hlen <= 0 or len(MAGIC) + 4 + hlen > raw.size:
+            raise BlockStoreFormatError(
+                f"{self.path}: header length {hlen} exceeds the file")
+        try:
+            manifest = json.loads(
+                bytes(raw[len(MAGIC) + 4: len(MAGIC) + 4 + hlen]))
+        except json.JSONDecodeError as e:
+            raise BlockStoreFormatError(
+                f"{self.path}: unreadable manifest: {e}") from e
+        if manifest.get("format") != FORMAT:
+            raise BlockStoreFormatError(
+                f"{self.path}: format {manifest.get('format')!r}, "
+                f"expected {FORMAT!r}")
+        self.n = int(manifest["n"])
+        self.d = int(manifest["d"])
+        self.r = int(manifest["r"])
+        self.block_size = int(manifest["block_size"])
+        # Content fingerprint (absent only in stores from before it existed).
+        v = manifest.get("vectors_crc32")
+        self.vectors_crc32 = None if v is None else int(v)
+        if self.block_size < block_size_for(self.d, self.r):
+            raise BlockStoreFormatError(
+                f"{self.path}: block_size {self.block_size} cannot hold a "
+                f"(d={self.d}, r={self.r}) record")
+        if self.block_size > raw.size:  # header block itself must fit
+            raise BlockStoreTruncatedError(
+                f"{self.path}: file smaller than one block")
+        expect = (1 + self.n) * self.block_size
+        if raw.size < expect:
+            raise BlockStoreTruncatedError(
+                f"{self.path}: {raw.size} bytes on disk, manifest needs "
+                f"{expect} ({self.n} nodes x {self.block_size}B + header)")
+        self._mm = raw
+        self.stats = BlockReadStats()
+
+    def reset_stats(self) -> None:
+        self.stats = BlockReadStats()
+
+    # ------------------------------------------------------------- reading
+
+    def read_many(self, ids: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Read the records of ``ids`` (1-D int array, each in [0, n)).
+
+        Returns (vectors (len, D) f32, adj (len, R) i32); raises
+        :class:`BlockChecksumError` naming the first corrupt node.  Each id
+        in the argument counts as one block read (callers dedupe — the
+        cache layer above does).
+        """
+        ids = np.asarray(ids, dtype=np.int64)
+        if ids.size and (ids.min() < 0 or ids.max() >= self.n):
+            raise IndexError(
+                f"node id out of range [0, {self.n}): "
+                f"{ids[(ids < 0) | (ids >= self.n)][0]}")
+        t0 = time.perf_counter()
+        bs, d, r = self.block_size, self.d, self.r
+        payload = d * 4 + r * 4
+        # One fancy-indexed gather over the block-matrix view: rows fault in
+        # via the page cache exactly like queue_depth concurrent block reads.
+        blocks = self._mm[: (1 + self.n) * bs].reshape(1 + self.n, bs)
+        recs = np.ascontiguousarray(blocks[1 + ids, : payload + 4])
+        stored = recs[:, payload: payload + 4].view("<u4").ravel()
+        for row, i in enumerate(ids):
+            # crc32 over the contiguous row view: no per-record copy on the
+            # hot read path (this time is part of the measured read latency).
+            if zlib.crc32(recs[row, :payload]) != int(stored[row]):
+                raise BlockChecksumError(
+                    f"{self.path}: node {int(i)} payload fails CRC32 "
+                    "(torn write or bit rot)")
+        vecs = recs[:, : d * 4].view("<f4").reshape(-1, d)
+        adj = recs[:, d * 4: payload].view("<i4").reshape(-1, r)
+        self.stats.blocks_read += int(ids.size)
+        self.stats.read_time_s += time.perf_counter() - t0
+        return vecs, adj
+
+def write_block_store(
+    path: str | pathlib.Path,
+    vectors: np.ndarray,
+    adj: np.ndarray,
+    block_size: int | None = None,
+) -> pathlib.Path:
+    """Write a block store for (vectors (N, D) f32, adj (N, R) i32).
+
+    ``block_size`` defaults to the tight sector-aligned record size; a larger
+    multiple of :data:`SECTOR` is accepted (e.g. to pin 4K pages).
+    """
+    path = pathlib.Path(path)
+    vectors = np.ascontiguousarray(np.asarray(vectors), dtype="<f4")
+    adj = np.ascontiguousarray(np.asarray(adj), dtype="<i4")
+    assert vectors.ndim == 2 and adj.ndim == 2, (vectors.shape, adj.shape)
+    assert vectors.shape[0] == adj.shape[0], (vectors.shape, adj.shape)
+    n, d = vectors.shape
+    r = adj.shape[1]
+    tight = block_size_for(d, r)
+    if block_size is None:
+        block_size = tight
+    if block_size < tight or block_size % SECTOR:
+        raise ValueError(
+            f"block_size {block_size} must be a sector multiple >= {tight}")
+    manifest = json.dumps({
+        "format": FORMAT, "n": n, "d": d, "r": r, "block_size": block_size,
+        "checksum": "crc32", "vectors_crc32": zlib.crc32(vectors),
+    }).encode()
+    if len(MAGIC) + 4 + len(manifest) > block_size:
+        raise ValueError("manifest does not fit the header block")
+    payload = d * 4 + r * 4
+    blocks = np.zeros((1 + n, block_size), dtype=np.uint8)
+    blocks[0, : len(MAGIC)] = np.frombuffer(MAGIC, np.uint8)
+    blocks[0, len(MAGIC): len(MAGIC) + 4] = np.frombuffer(
+        np.uint32(len(manifest)).astype("<u4").tobytes(), np.uint8)
+    blocks[0, len(MAGIC) + 4: len(MAGIC) + 4 + len(manifest)] = (
+        np.frombuffer(manifest, np.uint8))
+    blocks[1:, : d * 4] = vectors.view(np.uint8).reshape(n, d * 4)
+    blocks[1:, d * 4: payload] = adj.view(np.uint8).reshape(n, r * 4)
+    crcs = np.empty((n,), dtype="<u4")
+    rows = blocks[1:, :payload]
+    for i in range(n):
+        crcs[i] = zlib.crc32(rows[i])   # contiguous row view, no copy
+    blocks[1:, payload: payload + 4] = crcs.view(np.uint8).reshape(n, 4)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    tmp = path.with_name(path.name + ".tmp")
+    with open(tmp, "wb") as f:
+        blocks.tofile(f)   # no tobytes() double-copy of a store-sized buffer
+    tmp.replace(path)  # atomic publish: no half-written store under readers
+    return path
+
+
+def ensure_block_store(
+    path: str | pathlib.Path,
+    vectors: np.ndarray,
+    adj: np.ndarray,
+    log=None,
+) -> BlockStore:
+    """Open the store at ``path`` if its content fingerprint matches
+    ``vectors``; otherwise — absent, unreadable (any
+    :class:`BlockStoreError`), or stale — write it fresh and open that.
+
+    The one bootstrap every consumer shares (serve launcher, e2e example,
+    benchmarks): geometry can collide between two builds, a torn file must
+    not crash the "rewrite if needed" promise, and the fingerprint is the
+    only content identity.  ``log`` (e.g. ``print``) narrates what happened.
+    """
+    path = pathlib.Path(path)
+    vectors = np.ascontiguousarray(np.asarray(vectors), dtype="<f4")
+    if path.exists():
+        try:
+            store = BlockStore(path)
+            if store.vectors_crc32 == zlib.crc32(vectors):
+                return store
+            reason = "stale (content fingerprint mismatch)"
+        except BlockStoreError as e:
+            reason = f"unreadable ({type(e).__name__})"
+        if log:
+            log(f"block store {path} is {reason}; rewriting")
+    write_block_store(path, vectors, adj)
+    if log:
+        log(f"wrote block store {path} ({path.stat().st_size/1e6:.1f}MB)")
+    return BlockStore(path)

@@ -5,14 +5,34 @@ the search holds PQ codes in RAM, routes on them, and pays one SSD read per
 expanded node. On the TPU adaptation:
 
   fast tier  (HBM)   : PQ codes (N, M) uint8 + adjacency (N, R) int32
-  slow tier  (host)  : full-precision vectors (N, D)
+  slow tier          : full-precision vectors (N, D) — either host-memory
+                       rows (:class:`InMemorySlowTier`, the benchmark mode)
+                       or a block-aligned on-disk store
+                       (:class:`BlockSlowTier` over
+                       :class:`repro.index.blockstore.BlockStore`, the
+                       out-of-core deployment: one aligned block per node,
+                       vector + adjacency + checksum, read via memmap)
 
 The *cost model* is preserved exactly: every node expansion is one slow-tier
 "read" and the per-query hop counter of :class:`repro.core.search.SearchStats`
 is the I/O metric the paper's Figures 2a/2c report. :class:`DiskTierModel`
 converts counted reads into modelled latency so benchmarks can report the
-paper's latency numbers under an explicit, documented hardware model rather
-than a hidden one.
+paper's latency numbers under an explicit, documented hardware model — and
+with a :class:`BlockSlowTier` the same read counts come back *measured*
+(``BlockStore.stats``), so ``benchmarks/disk_io.py`` prints modelled and
+measured block-read latency side by side for one query stream.
+
+The slow tier is pluggable behind the small :class:`SlowTier` protocol
+(``fetch_beams`` — the rerank's batched node fetch): ``TieredIndex`` keeps
+its in-memory rows, and serving swaps in the block store via
+``TieredBackend(index, slow_tier=BlockSlowTier(...))`` without touching the
+walk kernels (the fast tier routes identically either way, and the rerank
+arithmetic is shared — results are bit-identical between tiers).
+:class:`BlockSlowTier` adds what a real disk tier needs: a hot-node cache
+(bounded LRU + statically pinned entry-proximal nodes, exact hit/miss
+counters surfaced in engine stats) and an async host-thread prefetch the
+staged pipeline uses to overlap batch i's block reads with batch i+1's
+continue programs.
 
 Serving architecture: the functions below (:func:`search_tiered`,
 :func:`search_tiered_adaptive`) are the kernel-level entry points over one
@@ -38,13 +58,19 @@ the max of the two stages, not their sum.
 """
 from __future__ import annotations
 
+import collections
+import concurrent.futures
 import dataclasses
+import threading
+from typing import Protocol
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import search as search_mod
 from repro.core.types import GraphIndex
+from repro.index.blockstore import BlockStore
 from repro.pq import PqCodebook, build_lut, pq_encode, train_pq
 
 Array = jax.Array
@@ -98,7 +124,8 @@ class TieredIndex:
     graph: GraphIndex
     codebook: PqCodebook
     codes: Array       # (N, M) uint8 — fast tier
-    vectors: Array     # (N, D) f32   — slow tier (host memory in deployment)
+    vectors: Array     # (N, D) f32   — slow tier rows (in-memory mode; disk
+                       # deployments serve these from a BlockSlowTier instead)
 
     @property
     def n(self) -> int:
@@ -180,3 +207,222 @@ def _query_luts(index: TieredIndex, queries: Array) -> Array:
     q_pq = (jnp.pad(queries, ((0, 0), (0, d_book - queries.shape[1])))
             if queries.shape[1] < d_book else queries)
     return build_lut(q_pq, index.codebook.centroids)
+
+
+# --------------------------------------------------------------------------
+# Pluggable slow tier: the rerank's batched node fetch, served from memory
+# rows or from the block-aligned disk store.
+# --------------------------------------------------------------------------
+
+
+class SlowTier(Protocol):
+    """What the serving rerank needs from a slow tier.
+
+    ``fetch_beams(beam_ids (Q, L) int) -> (Q, L, D) float32`` — the batched
+    node fetch of the final beam (negative/INVALID lanes are clamped to node
+    0, exactly like the in-memory ``x_slow[max(ids, 0)]`` gather; the rerank
+    masks them to inf afterwards).  ``is_disk`` tells the engine whether the
+    fetch is worth hiding behind the next batch's device programs.
+    """
+
+    is_disk: bool
+
+    def fetch_beams(self, beam_ids: np.ndarray) -> np.ndarray: ...
+
+
+class InMemorySlowTier:
+    """The historical slow tier: full-precision rows in (host/device) memory.
+
+    Exists so callers can treat both tiers uniformly; the serving backends
+    keep their fused in-graph gather for this case (same math, no host hop).
+    """
+
+    is_disk = False
+
+    def __init__(self, vectors: Array):
+        # Held as a device array: the serving rerank passes it straight into
+        # the jitted gather, so construction pays the upload once, not every
+        # batch.
+        self.vectors = jnp.asarray(vectors)
+
+    def fetch_beams(self, beam_ids: np.ndarray) -> np.ndarray:
+        safe = np.maximum(np.asarray(beam_ids, np.int64), 0)
+        return np.asarray(self.vectors)[safe]
+
+
+class BlockSlowTier:
+    """Disk-resident slow tier over a :class:`~repro.index.blockstore.BlockStore`.
+
+    Adds the serving policy the raw store doesn't have:
+
+    * **hot-node cache** — a bounded LRU of recently fetched vectors plus a
+      statically *pinned* set (entry-proximal nodes: every walk funnels
+      through the medoid's neighbourhood, so those blocks are the hottest in
+      any trace and should never be evicted).  Hit/miss counters are exact —
+      each distinct node id per fetch counts once, hit or miss — and are
+      surfaced per batch in the engine's ``BatchResult.extras``.
+    * **async prefetch** — :meth:`prefetch` runs the fetch on a host worker
+      thread and returns a future; the staged pipeline submits batch i's
+      rerank fetch right after batch i+1's continue programs are dispatched,
+      so the block reads and the device compute overlap.
+
+    Thread safety: the cache and counters are guarded by a lock that is
+    *never* held across block I/O (a separate lock serialises store reads),
+    so :meth:`stats` — called at every pipeline gather — returns immediately
+    even while a prefetch read is in flight; blocking there would stall the
+    host loop on exactly the I/O the prefetch stage exists to hide.  The
+    engine has at most one prefetch in flight per tier; concurrent external
+    fetches stay correct (worst case a doubly-read block, counters exact per
+    call).  Counters start at zero: the pinned-set load is construction,
+    not serving traffic.
+    """
+
+    is_disk = True
+
+    def __init__(self, store: BlockStore, cache_nodes: int = 4096,
+                 pinned_ids=None):
+        self.store = store
+        self.cache_nodes = int(cache_nodes)
+        self._lru: "collections.OrderedDict[int, np.ndarray]" = (
+            collections.OrderedDict())
+        self._pinned: dict[int, np.ndarray] = {}
+        self._lock = threading.Lock()       # cache + counters; no I/O under it
+        self._io_lock = threading.Lock()    # block-store reads
+        self._pool = concurrent.futures.ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="slow-tier-prefetch")
+        self.hits = 0
+        self.misses = 0
+        if pinned_ids is not None:
+            ids = np.unique(np.asarray(pinned_ids, np.int64))
+            if ids.size:
+                vecs, _ = store.read_many(ids)
+                self._pinned = {int(i): vecs[j].copy()
+                                for j, i in enumerate(ids)}
+        store.reset_stats()   # serving counters exclude the pinned load
+
+    # ------------------------------------------------------------- fetching
+
+    def fetch(self, ids: np.ndarray) -> np.ndarray:
+        """(len(ids), D) float32 for a flat id array (duplicates fine —
+        each *distinct* id counts once toward hits/misses and block reads)."""
+        ids = np.asarray(ids, np.int64).ravel()
+        uniq, inverse = np.unique(ids, return_inverse=True)
+        out = np.empty((uniq.size, self.store.d), np.float32)
+        with self._lock:                      # probe the cache, count
+            missing: list[tuple[int, int]] = []
+            for j, i in enumerate(uniq.tolist()):
+                v = self._pinned.get(i)
+                if v is None and (v := self._lru.get(i)) is not None:
+                    self._lru.move_to_end(i)
+                if v is None:
+                    missing.append((j, i))
+                else:
+                    out[j] = v
+            self.hits += uniq.size - len(missing)
+            self.misses += len(missing)
+        if missing:
+            with self._io_lock:               # the block reads — cache lock free
+                vecs, _ = self.store.read_many(
+                    np.asarray([i for _, i in missing], np.int64))
+            with self._lock:                  # insert what was read
+                for (j, i), v in zip(missing, vecs):
+                    out[j] = v
+                    if self.cache_nodes > 0:
+                        self._lru[i] = v.copy()
+                        while len(self._lru) > self.cache_nodes:
+                            self._lru.popitem(last=False)
+        return out[inverse]
+
+    def fetch_beams(self, beam_ids: np.ndarray) -> np.ndarray:
+        beam_ids = np.asarray(beam_ids)
+        safe = np.maximum(beam_ids, 0)
+        flat = self.fetch(safe.ravel())
+        return flat.reshape(*safe.shape, self.store.d)
+
+    def prefetch(self, beam_ids: np.ndarray) -> "concurrent.futures.Future":
+        """Submit :meth:`fetch_beams` to the host worker; the caller joins
+        the future at rerank time (the staged pipeline joins it one stage
+        later, after the next batch's continues are on the device queue)."""
+        return self._pool.submit(self.fetch_beams, np.asarray(beam_ids))
+
+    # ---------------------------------------------------------- observability
+
+    def stats(self) -> dict:
+        """Cumulative cache + I/O counters (exact on a replayed stream)."""
+        with self._lock:
+            total = self.hits + self.misses
+            return {
+                "cache_hits": self.hits,
+                "cache_misses": self.misses,
+                "hit_rate": self.hits / total if total else 0.0,
+                "pinned_nodes": len(self._pinned),
+                "cached_nodes": len(self._lru),
+                "blocks_read": self.store.stats.blocks_read,
+                "read_time_s": self.store.stats.read_time_s,
+                "measured_read_us": self.store.stats.measured_read_us(),
+            }
+
+    def reset_stats(self) -> None:
+        with self._lock:
+            self.hits = self.misses = 0
+            self.store.reset_stats()
+
+    def clear_cache(self) -> None:
+        """Empty the LRU (cold-cache experiments); the pinned set stays —
+        it is static by design."""
+        with self._lock:
+            self._lru.clear()
+
+
+def entry_proximal_ids(adj, entry, limit: int = 256) -> np.ndarray:
+    """BFS order from the entry medoid, truncated to ``limit`` nodes — the
+    static pin set for the hot-node cache (every query's walk starts here)."""
+    adj = np.asarray(adj)
+    entry = int(np.asarray(entry))
+    seen = {entry}
+    order = [entry]
+    frontier = [entry]
+    while frontier and len(order) < limit:
+        nxt = []
+        for u in frontier:
+            for v in adj[u].tolist():
+                if v >= 0 and v not in seen:
+                    seen.add(v)
+                    order.append(v)
+                    nxt.append(v)
+                    if len(order) >= limit:
+                        return np.asarray(order, np.int64)
+        frontier = nxt
+    return np.asarray(order, np.int64)
+
+
+def open_or_build_slow_tier(path, index: TieredIndex,
+                            cache_nodes: int = 4096, pin_nodes: int = 256,
+                            log=None) -> BlockSlowTier:
+    """The serving bootstrap every ``--disk PATH`` consumer shares: open (or
+    write — absent/unreadable/stale, see
+    :func:`repro.index.blockstore.ensure_block_store`) the block store for
+    ``index`` and wrap it in a :class:`BlockSlowTier` with the
+    entry-proximal neighbourhood pinned."""
+    from repro.index.blockstore import ensure_block_store
+
+    store = ensure_block_store(path, np.asarray(index.vectors),
+                               np.asarray(index.graph.adj), log=log)
+    pinned = (entry_proximal_ids(index.graph.adj, index.graph.entry,
+                                 limit=pin_nodes) if pin_nodes > 0 else None)
+    return BlockSlowTier(store, cache_nodes=cache_nodes, pinned_ids=pinned)
+
+
+def rerank_with_slow_tier(slow_tier, beam_ids, queries, k: int,
+                          prefetched: np.ndarray | None = None):
+    """Slow-tier rerank of a full beam through the pluggable tier.
+
+    Host-gathers the beam's vectors (``prefetched`` skips the gather — the
+    joined result of :meth:`BlockSlowTier.prefetch`) and runs the same
+    jitted arithmetic as the fused in-memory rerank
+    (:func:`repro.core.search._rerank_from_vecs`) — bit-identical results.
+    """
+    vecs = (prefetched if prefetched is not None
+            else slow_tier.fetch_beams(np.asarray(beam_ids)))
+    return search_mod._rerank_from_vecs_jit(
+        jnp.asarray(beam_ids), jnp.asarray(vecs), jnp.asarray(queries), k=k)

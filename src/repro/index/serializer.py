@@ -4,6 +4,24 @@ Numpy-npz container with a JSON manifest — deliberately dependency-free and
 stable across hosts, the same container the training checkpointer uses
 (:mod:`repro.training.checkpoint`). Billion-scale deployments shard the file
 per index shard; :func:`save_index`/`load_index` handle one shard.
+
+Two on-disk formats:
+
+* ``v1`` (``repro.tiered_index.v1``) — everything, slow-tier vectors
+  included, in one npz.  The historical format; stays both writable
+  (``version=1``, the default) and loadable forever.
+* ``v2`` (``repro.tiered_index.v2``) — the out-of-core layout: the npz holds
+  only the *fast tier* (graph, PQ codebook/codes, geometric profile) and the
+  manifest points at a sidecar block store (``<path>.blocks``,
+  :mod:`repro.index.blockstore`) holding each node's full-precision vector +
+  adjacency in one checksummed aligned block.  ``load_index`` reads the
+  blocks back into memory (bit-identical to v1 loading);
+  :func:`load_slow_tier` instead opens the sidecar as a live
+  :class:`~repro.index.disk.BlockSlowTier` so serving never materialises the
+  slow tier in host memory.
+
+The optional manifest riders (``disk_model``, ``shard_laws``) ride in both
+formats unchanged.
 """
 from __future__ import annotations
 
@@ -14,8 +32,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.types import GraphIndex
-from repro.index.disk import DiskTierModel, TieredIndex
+from repro.index import blockstore
+from repro.index.disk import BlockSlowTier, DiskTierModel, TieredIndex
 from repro.pq import PqCodebook
+
+FORMAT_V1 = "repro.tiered_index.v1"
+FORMAT_V2 = "repro.tiered_index.v2"
+
+
+def blocks_path(path: str | pathlib.Path) -> pathlib.Path:
+    """The v2 sidecar block-store path for an index file."""
+    path = pathlib.Path(path)
+    return path.with_name(path.name + ".blocks")
 
 
 def save_index(
@@ -23,6 +51,7 @@ def save_index(
     index: TieredIndex,
     disk_model: DiskTierModel | None = None,
     shard_laws=None,
+    version: int = 1,
 ) -> None:
     """Write one index shard; ``disk_model`` (the slow-tier latency model the
     index was benchmarked/SLO'd under) rides along in the manifest so a
@@ -31,11 +60,19 @@ def save_index(
     ``shard_laws`` — an optional (lam (S,), l_min (S,)) pair of per-shard
     calibrated budget-law arrays (``repro.core.calibrate.ShardCalibration
     .law_arrays()``) — also rides in the manifest, so a reloaded distributed
-    deployment serves the same per-shard budgets it was calibrated to."""
+    deployment serves the same per-shard budgets it was calibrated to.
+
+    ``version=2`` writes the out-of-core layout: fast tier in the npz, slow
+    tier (vector + adjacency per node, block-aligned + checksummed) in the
+    ``<path>.blocks`` sidecar — what :func:`load_slow_tier` serves from
+    disk.  ``version=1`` keeps the historical single-npz format.
+    """
+    if version not in (1, 2):
+        raise ValueError(f"unknown index format version {version}")
     path = pathlib.Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
     manifest = {
-        "format": "repro.tiered_index.v1",
+        "format": FORMAT_V1 if version == 1 else FORMAT_V2,
         "n": int(index.n),
         "degree": int(index.graph.degree_cap),
         "m_pq": int(index.codebook.m),
@@ -52,8 +89,7 @@ def save_index(
             "lam": [float(v) for v in np.asarray(lam)],
             "l_min": [int(v) for v in np.asarray(l_min)],
         }
-    np.savez_compressed(
-        path,
+    arrays = dict(
         adj=np.asarray(index.graph.adj),
         entry=np.asarray(index.graph.entry),
         alpha=np.asarray(index.graph.alpha),
@@ -62,17 +98,34 @@ def save_index(
         sigma=np.asarray(index.graph.sigma),
         centroids=np.asarray(index.codebook.centroids),
         codes=np.asarray(index.codes),
-        vectors=np.asarray(index.vectors),
-        manifest=json.dumps(manifest),
     )
+    if version == 1:
+        arrays["vectors"] = np.asarray(index.vectors)
+    else:
+        bp = blockstore.write_block_store(
+            blocks_path(path), np.asarray(index.vectors),
+            np.asarray(index.graph.adj))
+        store = blockstore.BlockStore(bp)
+        manifest["blocks"] = {
+            "file": bp.name,           # sibling of the npz, relocatable
+            "block_size": store.block_size,
+            "n": store.n, "d": store.d, "r": store.r,
+            # Content fingerprint: geometry alone cannot tell two builds of
+            # the same shape apart — a swapped sidecar must fail to open.
+            "vectors_crc32": store.vectors_crc32,
+        }
+    np.savez_compressed(path, manifest=json.dumps(manifest), **arrays)
+
+
+def _read_manifest(path: pathlib.Path) -> dict:
+    with np.load(path, allow_pickle=False) as z:
+        return json.loads(str(z["manifest"]))
 
 
 def load_disk_model(path: str | pathlib.Path) -> DiskTierModel | None:
     """The DiskTierModel stored alongside the index, or None for indexes
     saved without one (pre-v1.1 files parse fine — the key is optional)."""
-    with np.load(pathlib.Path(path), allow_pickle=False) as z:
-        manifest = json.loads(str(z["manifest"]))
-    dm = manifest.get("disk_model")
+    dm = _read_manifest(pathlib.Path(path)).get("disk_model")
     if dm is None:
         return None
     return DiskTierModel(
@@ -85,9 +138,7 @@ def load_shard_laws(path: str | pathlib.Path):
     """The per-shard (lam, l_min) budget-law arrays stored alongside the
     index, or None when the index was saved without per-shard calibration
     (the manifest key is optional, like ``disk_model``)."""
-    with np.load(pathlib.Path(path), allow_pickle=False) as z:
-        manifest = json.loads(str(z["manifest"]))
-    laws = manifest.get("shard_laws")
+    laws = _read_manifest(pathlib.Path(path)).get("shard_laws")
     if laws is None:
         return None
     return (np.asarray(laws["lam"], np.float32),
@@ -95,9 +146,20 @@ def load_shard_laws(path: str | pathlib.Path):
 
 
 def load_index(path: str | pathlib.Path) -> TieredIndex:
-    with np.load(pathlib.Path(path), allow_pickle=False) as z:
+    """Load either format into a fully in-memory :class:`TieredIndex`.
+
+    v1 reads the vectors from the npz; v2 reads them back out of the sidecar
+    block store (every record CRC-verified) — bit-identical arrays either
+    way, so everything downstream is format-agnostic.
+    """
+    path = pathlib.Path(path)
+    with np.load(path, allow_pickle=False) as z:
         manifest = json.loads(str(z["manifest"]))
-        assert manifest["format"] == "repro.tiered_index.v1", manifest
+        fmt = manifest.get("format")
+        if fmt not in (FORMAT_V1, FORMAT_V2):
+            raise ValueError(
+                f"{path}: unknown index format {fmt!r} "
+                f"(expected {FORMAT_V1} or {FORMAT_V2})")
         graph = GraphIndex(
             adj=jnp.asarray(z["adj"]),
             entry=jnp.asarray(z["entry"]),
@@ -106,9 +168,61 @@ def load_index(path: str | pathlib.Path) -> TieredIndex:
             mu=jnp.asarray(z["mu"]),
             sigma=jnp.asarray(z["sigma"]),
         )
+        if fmt == FORMAT_V1:
+            vectors = jnp.asarray(z["vectors"])
+        else:
+            store = open_block_store(path, manifest=manifest)
+            vecs, _adj = store.read_many(np.arange(store.n))
+            vectors = jnp.asarray(vecs)
         return TieredIndex(
             graph=graph,
             codebook=PqCodebook(centroids=jnp.asarray(z["centroids"])),
             codes=jnp.asarray(z["codes"]),
-            vectors=jnp.asarray(z["vectors"]),
+            vectors=vectors,
         )
+
+
+def open_block_store(path: str | pathlib.Path,
+                     manifest: dict | None = None) -> blockstore.BlockStore:
+    """Open a v2 index's sidecar block store, cross-checking the manifest's
+    recorded geometry against the store header (a swapped/stale sidecar is a
+    format error, not garbage results)."""
+    path = pathlib.Path(path)
+    if manifest is None:
+        manifest = _read_manifest(path)
+    blk = manifest.get("blocks")
+    if blk is None:
+        raise blockstore.BlockStoreFormatError(
+            f"{path}: index format {manifest.get('format')!r} has no block "
+            "sidecar (saved with version=1?); re-save with "
+            "save_index(..., version=2) to serve the slow tier from disk")
+    store = blockstore.BlockStore(path.with_name(blk["file"]))
+    keys = ("n", "d", "r", "block_size")
+    if blk.get("vectors_crc32") is not None:
+        keys += ("vectors_crc32",)   # content identity, not just geometry
+    for key in keys:
+        sval = getattr(store, key)
+        if sval is None or int(blk[key]) != int(sval):
+            raise blockstore.BlockStoreFormatError(
+                f"{store.path}: sidecar {key}={sval} does not match the "
+                f"index manifest's {key}={blk[key]} (stale or swapped "
+                "block file)")
+    return store
+
+
+def load_slow_tier(path: str | pathlib.Path, cache_nodes: int = 4096,
+                   pin_nodes: int = 256) -> BlockSlowTier:
+    """Open a v2 index's slow tier for *serving*: a live
+    :class:`~repro.index.disk.BlockSlowTier` over the sidecar store, with the
+    entry-proximal nodes (BFS from the medoid over the npz adjacency) pinned
+    in the hot cache.  Nothing slow-tier-sized is read into host memory."""
+    from repro.index.disk import entry_proximal_ids
+
+    path = pathlib.Path(path)
+    store = open_block_store(path)
+    pinned = None
+    if pin_nodes > 0:
+        with np.load(path, allow_pickle=False) as z:
+            adj, entry = np.asarray(z["adj"]), np.asarray(z["entry"])
+        pinned = entry_proximal_ids(adj, entry, limit=pin_nodes)
+    return BlockSlowTier(store, cache_nodes=cache_nodes, pinned_ids=pinned)

@@ -5,7 +5,7 @@ I/O per query, modelled SSD latency).
 
     PYTHONPATH=src python -m repro.launch.serve --dataset tiny-mixture \
         --beam 48 --batch 64 --num-batches 20 [--index PATH] [--online] \
-        [--distributed N] \
+        [--disk PATH] [--distributed N] \
         [--adaptive [--l-min 16] [--l-max 64] [--lam 0.35] [--buckets auto] \
          [--pipeline] [--calibrate [--joint | --per-shard] \
           [--recall-target 0.95]]]
@@ -23,6 +23,15 @@ to ``--recall-target`` on a held-out sample before serving; with ``--joint``
 the budget floor ``l_min`` is fitted too (smallest feasible floor, then the
 largest feasible lam at it). All serving paths — fixed and adaptive — lower
 through :class:`repro.serving.SearchEngine`.
+
+``--disk PATH`` serves the slow tier out of core: a block-aligned store
+(one checksummed block per node: vector + adjacency) is written to PATH if
+absent and the rerank fetches candidate blocks from it — through the
+hot-node cache (entry-proximal nodes pinned) and, with ``--pipeline``, the
+async-prefetch stage that overlaps batch i's block reads with batch i+1's
+continue programs. Results are bit-identical to the in-memory slow tier;
+the final report adds measured block-read latency next to the
+``DiskTierModel``'s modelled figure plus the cache hit rate.
 
 ``--distributed N`` shards the dataset over N virtual host devices (one
 locally built sub-graph per shard) and serves scatter-gather through a
@@ -110,6 +119,13 @@ def main() -> None:
     ap.add_argument("--num-batches", type=int, default=10)
     ap.add_argument("--m-pq", type=int, default=8)
     ap.add_argument("--index", default=None, help="load/save index path")
+    ap.add_argument("--disk", default=None, metavar="PATH",
+                    help="serve the slow tier from a block-aligned on-disk "
+                         "store at PATH (written there first if absent); "
+                         "bit-identical results, real block I/O")
+    ap.add_argument("--cache-nodes", type=int, default=4096,
+                    help="with --disk: hot-node LRU capacity "
+                         "(plus 256 pinned entry-proximal nodes)")
     ap.add_argument("--online", action="store_true",
                     help="build with Online-MCGI (Algorithm 2)")
     ap.add_argument("--vamana", action="store_true",
@@ -159,6 +175,9 @@ def main() -> None:
     if args.distributed and (args.index or args.online or args.vamana):
         ap.error("--distributed builds per-shard sub-graphs in process; "
                  "--index/--online/--vamana apply to single-host serving")
+    if args.distributed and args.disk:
+        ap.error("--disk is the single-host out-of-core slow tier; the "
+                 "distributed path keeps per-shard slow tiers in memory")
     if args.distributed:
         if "jax" in sys.modules:
             ap.error("--distributed must set XLA_FLAGS before jax is "
@@ -213,7 +232,17 @@ def main() -> None:
                 save_index(args.index, index)
 
         gt_d, gt_i = distance.brute_force_topk(queries, x, k=args.k)
-        backend = serving.TieredBackend(index)
+        slow_tier = None
+        if args.disk:
+            from repro.index import open_or_build_slow_tier
+
+            slow_tier = open_or_build_slow_tier(
+                args.disk, index, cache_nodes=args.cache_nodes,
+                log=lambda m: print(f"[serve] {m}"))
+            print(f"[serve] disk slow tier: n={slow_tier.store.n} "
+                  f"block={slow_tier.store.block_size}B "
+                  f"pinned={slow_tier.stats()['pinned_nodes']}")
+        backend = serving.TieredBackend(index, slow_tier=slow_tier)
         if args.adaptive:
             engine = serving.SearchEngine(backend, budget_cfg, k=args.k,
                                           num_buckets=num_buckets)
@@ -286,6 +315,13 @@ def main() -> None:
           f"{io_part}{extra}({mode}) "
           f"batch_lat p50={np.percentile(lat_ms,50):.1f}ms "
           f"p99={np.percentile(lat_ms,99):.1f}ms" + ssd_part)
+    if not args.distributed and args.disk:
+        st = backend.slow_tier.stats()
+        print(f"[serve] disk tier: hit_rate={st['hit_rate']:.3f} "
+              f"(hits={st['cache_hits']} misses={st['cache_misses']}) "
+              f"blocks_read={st['blocks_read']} "
+              f"measured_read={st['measured_read_us']:.1f}us vs "
+              f"modelled={model.read_latency_us:.1f}us")
 
 
 if __name__ == "__main__":

@@ -31,6 +31,15 @@ input batch still yields its own :class:`BatchResult`), so a hot batcher
 emitting tiny batches doesn't pay a full pipeline round per handful of
 lanes.
 
+Disk slow tier: a :class:`TieredBackend` built with a
+:class:`repro.index.disk.BlockSlowTier` serves the rerank fetch from the
+block-aligned on-disk store.  The pipeline then grows a third stage —
+*prefetch* — between continue-dispatch and gather: batch i's candidate
+blocks are read on the tier's host worker thread while batch i+1's continue
+programs occupy the device, and the gather stage joins the future.  Cache
+hit/miss and measured block-read-latency counters ride in each
+``BatchResult.extras["slow_tier"]``.
+
 Recalibration is a first-class hook: :meth:`SearchEngine.recalibrate` refits
 the budget law (lam — and jointly l_min, see
 :func:`repro.core.calibrate.calibrate_budget_law_joint`) against a recall
@@ -68,8 +77,9 @@ class BatchResult:
 
 def _split_result(res: BatchResult, sizes: list[int]) -> list[BatchResult]:
     """Split a coalesced dispatch's result back into per-input-batch results
-    (every field is per-query on axis 0; ``ceilings`` describes the merged
-    dispatch and is shared by the splits)."""
+    (per-query extras are sliced on axis 0; non-array extras — e.g. the
+    slow-tier cache counters — describe the merged dispatch and are shared;
+    ``ceilings`` likewise)."""
     outs, off = [], 0
     for s in sizes:
         sl = slice(off, off + s)
@@ -81,7 +91,8 @@ def _split_result(res: BatchResult, sizes: list[int]) -> list[BatchResult]:
         outs.append(BatchResult(
             ids=res.ids[sl], d2=res.d2[sl], stats=stats, astats=astats,
             ceilings=res.ceilings,
-            extras={k: v[sl] for k, v in res.extras.items()}))
+            extras={k: v[sl] if isinstance(v, np.ndarray) else v
+                    for k, v in res.extras.items()}))
     return outs
 
 
@@ -91,22 +102,29 @@ class _StagedRerankMixin:
     ``schedule_budgets`` — granted budgets are already per-query scalars, so
     the host scheduler uses them as is.  ``finish`` — the gathered continue
     parts are (beam_ids, beam_d, hops, evals); rerank them into the final
-    top-k and assemble the :class:`BatchResult`.
+    top-k and assemble the :class:`BatchResult` (``prefetch`` is the joined
+    disk-tier fetch future when the pipeline's prefetch stage ran).
     """
 
     def schedule_budgets(self, budgets_np: np.ndarray) -> np.ndarray:
         return budgets_np
 
+    def finish_extras(self) -> dict[str, Any]:
+        """Per-batch observability payload (backends override)."""
+        return {}
+
     def finish(self, queries, parts, k: int, *, q_lid,
-               budgets_np) -> BatchResult:
+               budgets_np, prefetch=None) -> BatchResult:
         beam_ids, beam_d, hops, evals = parts
-        ids, d2 = self.rerank(beam_ids, beam_d, queries, k)
+        ids, d2 = self.rerank(beam_ids, beam_d, queries, k,
+                              prefetch=prefetch)
         return BatchResult(
             ids=np.asarray(ids), d2=np.asarray(d2),
             stats=search_mod.SearchStats(hops=np.asarray(hops),
                                          dist_evals=np.asarray(evals)),
             astats=search_mod.AdaptiveStats(q_lid=np.asarray(q_lid),
-                                            budget=budgets_np))
+                                            budget=budgets_np),
+            extras=self.finish_extras())
 
 
 class ExactBackend(_StagedRerankMixin):
@@ -135,7 +153,7 @@ class ExactBackend(_StagedRerankMixin):
         return functools.partial(search_mod._continue_exact_jit, self.x,
                                  self.adj, budget_cfg=budget_cfg)
 
-    def rerank(self, beam_ids, beam_d, queries, k: int):
+    def rerank(self, beam_ids, beam_d, queries, k: int, prefetch=None):
         return beam_ids[:, :k], beam_d[:, :k]
 
     def fixed(self, queries, *, beam_width: int, max_hops: int, k: int):
@@ -155,17 +173,51 @@ class ExactBackend(_StagedRerankMixin):
 class TieredBackend(_StagedRerankMixin):
     """The deployed two-tier path: PQ codes route the walk (fast tier), the
     final beam is reranked from full-precision vectors (slow tier).
-    ``rerank=False`` serves raw ADC results (the pure-PQ variant)."""
+    ``rerank=False`` serves raw ADC results (the pure-PQ variant).
+
+    ``slow_tier`` plugs the rerank's node fetch: ``None`` keeps the
+    in-memory rows of ``index.vectors`` (fused in-graph gather); a
+    :class:`repro.index.disk.BlockSlowTier` serves it from the block-aligned
+    on-disk store instead — the fetch moves to the host (cache + checksummed
+    block reads), the rerank arithmetic stays the same jitted program, and
+    results are bit-identical.  A disk tier sets :attr:`prefetches`, which
+    makes the engine's pipeline insert an async-prefetch stage: batch i's
+    block reads run on the tier's worker thread while batch i+1's continue
+    programs occupy the device."""
 
     staged = True
 
-    def __init__(self, index, rerank: bool = True):
-        self.do_rerank = rerank
-        self.update(index)
+    _UNSET = object()
 
-    def update(self, index) -> None:
-        """Swap the tiered index in place (Online-MCGI refresh path)."""
+    def __init__(self, index, rerank: bool = True, slow_tier=None):
+        self.do_rerank = rerank
+        self.slow_tier = None
+        self.update(index, slow_tier=slow_tier)
+
+    def update(self, index, slow_tier=_UNSET) -> None:
+        """Swap the tiered index (and the slow tier) in place (Online-MCGI
+        refresh path).  A disk-backed backend refuses an index refresh that
+        doesn't also name its slow tier: the old block store holds the old
+        vectors, so silently keeping it would serve stale reranks and
+        silently dropping it would quietly fall back to host memory — pass
+        ``slow_tier=`` (a store written from the new vectors, or ``None``
+        for in-memory rows) explicitly."""
+        if slow_tier is TieredBackend._UNSET:
+            if self.slow_tier is not None and self.slow_tier.is_disk:
+                raise ValueError(
+                    "this backend serves its slow tier from a block store; "
+                    "refresh with update(index, slow_tier=...) — a "
+                    "BlockSlowTier over a store written from the new "
+                    "vectors, or None to return to in-memory rows")
+            slow_tier = None
         self.index = index
+        self.slow_tier = slow_tier
+
+    @property
+    def prefetches(self) -> bool:
+        """Whether the rerank fetch is worth hiding behind device work."""
+        return (self.do_rerank and self.slow_tier is not None
+                and self.slow_tier.is_disk)
 
     def admit(self, queries: Array) -> Array:
         from repro.index.disk import _query_luts
@@ -184,16 +236,45 @@ class TieredBackend(_StagedRerankMixin):
             search_mod._continue_pq_jit, self.index.codes,
             self.index.graph.adj, budget_cfg=budget_cfg)
 
-    def rerank(self, beam_ids, beam_d, queries, k: int):
+    def prefetch_rerank(self, parts):
+        """Submit the slow-tier block fetch for gathered continue ``parts``
+        (beam_ids first) to the tier's host worker; returns a future the
+        engine hands back to :meth:`finish` one pipeline stage later."""
+        return self.slow_tier.prefetch(np.asarray(parts[0]))
+
+    def rerank(self, beam_ids, beam_d, queries, k: int, prefetch=None):
         if not self.do_rerank:
             return beam_ids[:, :k], beam_d[:, :k]
+        if self.prefetches:
+            from repro.index.disk import rerank_with_slow_tier
+
+            return rerank_with_slow_tier(
+                self.slow_tier, np.asarray(beam_ids), queries, k,
+                prefetched=prefetch.result() if prefetch is not None
+                else None)
+        x_slow = (jnp.asarray(self.slow_tier.vectors)
+                  if self.slow_tier is not None else self.index.vectors)
         return search_mod._rerank_slow_tier_jit(
-            jnp.asarray(beam_ids), self.index.vectors, jnp.asarray(queries),
-            k=k)
+            jnp.asarray(beam_ids), x_slow, jnp.asarray(queries), k=k)
+
+    def finish_extras(self) -> dict[str, Any]:
+        if self.slow_tier is None or not self.slow_tier.is_disk:
+            return {}
+        return {"slow_tier": self.slow_tier.stats()}
 
     def fixed(self, queries, *, beam_width: int, max_hops: int, k: int):
-        from repro.index.disk import search_tiered
+        from repro.index.disk import rerank_with_slow_tier, search_tiered
 
+        if self.prefetches:
+            # Disk mode: run the walk un-reranked at full beam width, then
+            # rerank through the block store (blocking here — fixed-beam
+            # dispatch has no later stage to hide the fetch behind).
+            beam_ids, _beam_d, stats = search_tiered(
+                self.index, queries, beam_width=beam_width,
+                max_hops=max_hops, k=beam_width, rerank=False)
+            ids, d2 = rerank_with_slow_tier(
+                self.slow_tier, np.asarray(beam_ids), queries, k)
+            return ids, d2, stats, None
         ids, d2, stats = search_tiered(
             self.index, queries, beam_width=beam_width, max_hops=max_hops,
             k=k, rerank=self.do_rerank)
@@ -360,7 +441,7 @@ class DistributedBackend:
         return np.rint(budgets_np.mean(axis=1)).astype(np.int32)
 
     def finish(self, queries, parts, k: int, *, q_lid,
-               budgets_np) -> BatchResult:
+               budgets_np, prefetch=None) -> BatchResult:
         d2, shard_ids, local_ids, hops, evals = parts
         sid = shard_ids.astype(np.int64)
         lid = local_ids.astype(np.int64)
@@ -387,6 +468,9 @@ class _InFlight:
     budgets_np: Any = None
     ceilings: tuple[int, ...] | None = None
     dispatched: Any = None     # [(members, continue handles)] or full-batch handles
+    # Filled by the prefetch stage (disk slow tier only):
+    parts: Any = None          # continue outputs, synced to host numpy
+    prefetch: Any = None       # future of the slow tier's block fetch
 
 
 class SearchEngine:
@@ -460,19 +544,24 @@ class SearchEngine:
 
     def search(self, queries) -> BatchResult:
         """Serve one batch (unpipelined): all stages back to back."""
-        return self._gather(self._schedule(self._dispatch(queries)))
+        f = self._schedule(self._dispatch(queries))
+        if self._prefetching():
+            f = self._prefetch(f)
+        return self._gather(f)
 
     def search_batches(self, batches: Iterable) -> Iterator[BatchResult]:
         """Serve a stream of query batches, double-buffered.
 
-        Two batches are in flight: batch i+1's admission + probe are
-        dispatched before batch i's budgets are synced and its continue
-        programs dispatched, and batch i-1's continues are gathered only
-        after that — the device queue always holds the next batch's work
-        while the host buckets and reassembles. Yields one
-        :class:`BatchResult` per input batch, in order. A single-batch
-        stream degrades to exactly :meth:`search` (no prefetch partner).
-        The generator is lazy — iterate it to drive the pipeline.
+        Two batches are in flight (three with a disk slow tier, whose extra
+        prefetch stage deepens the window by one): batch i+1's admission +
+        probe are dispatched before batch i's budgets are synced and its
+        continue programs dispatched, and the oldest batch's continues are
+        gathered only after that — the device queue always holds the next
+        batch's work while the host buckets and reassembles (and, disk, the
+        tier's worker reads blocks). Yields one :class:`BatchResult` per
+        input batch, in order. A single-batch stream degrades to exactly
+        :meth:`search` (no prefetch partner). The generator is lazy —
+        iterate it to drive the pipeline.
 
         With ``coalesce_lanes`` set, micro-batches below the threshold are
         merged before dispatch and their results split back on gather — one
@@ -509,24 +598,46 @@ class SearchEngine:
             yield pend[0] if len(pend) == 1 else np.concatenate(pend)
 
     def _stream(self, batches: Iterable) -> Iterator[BatchResult]:
-        """The double-buffered pipeline core (one result per input batch)."""
-        front: _InFlight | None = None   # probe dispatched
-        mid: _InFlight | None = None     # continues dispatched
+        """The double-buffered pipeline core (one result per input batch).
+
+        ``flight`` holds the batches between dispatch and gather as
+        ``[stage index, state]``, oldest first; every new dispatch advances
+        each in-flight batch by exactly one stage, newest first — so within
+        a tick the order is: dispatch batch i's probe, schedule batch i-1
+        (continues enter the device queue), prefetch batch i-2's block reads
+        (disk slow tier only), gather the oldest.  With the default stage
+        list that is exactly the historical two-in-flight pipeline; a disk
+        slow tier adds the prefetch stage, making it three deep so the block
+        reads of one batch overlap the continue programs of the next.
+        """
+        stages: list = [self._schedule]
+        if self._prefetching():
+            stages.append(self._prefetch)
+        flight: list[list] = []
+
+        def advance() -> BatchResult | None:
+            done = None
+            for ent in reversed(flight):
+                si, f = ent
+                if si < len(stages):
+                    ent[1] = stages[si](f)
+                    ent[0] = si + 1
+                else:
+                    done = self._gather(f)
+            if done is not None:
+                flight.pop(0)
+            return done
+
         for qb in batches:
-            cur = self._dispatch(qb)       # batch i+1 enters the device queue
-            if front is not None:
-                nxt = self._schedule(front)  # bucket batch i, queue continues
-                if mid is not None:
-                    yield self._gather(mid)  # ... then collect batch i-1
-                mid = nxt
-            front = cur
-        if front is not None:
-            nxt = self._schedule(front)
-            if mid is not None:
-                yield self._gather(mid)
-            mid = nxt
-        if mid is not None:
-            yield self._gather(mid)
+            new = self._dispatch(qb)   # batch i enters the device queue first
+            res = advance()
+            flight.append([0, new])
+            if res is not None:
+                yield res
+        while flight:
+            res = advance()
+            if res is not None:
+                yield res
 
     # ------------------------------------------------- pipeline stage thirds
 
@@ -576,6 +687,27 @@ class SearchEngine:
                 quantum=self.pad_quantum)
         return f
 
+    def _prefetch(self, f: _InFlight) -> _InFlight:
+        """Disk-slow-tier stage: sync the continue outputs to host numpy and
+        submit the rerank's block reads to the tier's worker thread.  Runs
+        right after the *next* batch's continue programs were dispatched, so
+        the block reads overlap that device work; :meth:`_gather` joins the
+        future one stage later.  Absent from the stage list unless the
+        backend's slow tier is disk-backed."""
+        if self._staged():
+            f.parts = self._continue_parts(f)
+            f.prefetch = self.backend.prefetch_rerank(f.parts)
+        return f
+
+    def _continue_parts(self, f: _InFlight) -> tuple:
+        """Continue outputs as host numpy, original query order."""
+        if f.parts is not None:
+            return f.parts
+        if f.ceilings is None or len(f.ceilings) <= 1:
+            return tuple(np.asarray(a) for a in f.dispatched)
+        return pipe.gather_bucketed_continue(
+            f.budgets_np.shape[0], f.dispatched)
+
     def _gather(self, f: _InFlight) -> BatchResult:
         """Collection stage: pull continue results, finish (rerank or the
         distributed id reassembly), restore original query order."""
@@ -583,20 +715,23 @@ class SearchEngine:
             if hasattr(self.backend, "collect"):
                 return self.backend.collect(f.handles)
             ids, d2, stats, astats = f.handles
-            return BatchResult(ids=np.asarray(ids), d2=np.asarray(d2),
-                               stats=stats, astats=astats)
-        if f.ceilings is None or len(f.ceilings) <= 1:
-            parts = tuple(np.asarray(a) for a in f.dispatched)
-        else:
-            parts = pipe.gather_bucketed_continue(
-                f.budgets_np.shape[0], f.dispatched)
+            return BatchResult(
+                ids=np.asarray(ids), d2=np.asarray(d2), stats=stats,
+                astats=astats,
+                extras=getattr(self.backend, "finish_extras", dict)())
+        parts = self._continue_parts(f)
         res = self.backend.finish(f.queries, parts, self.k, q_lid=f.q_lid,
-                                  budgets_np=f.budgets_np)
+                                  budgets_np=f.budgets_np,
+                                  prefetch=f.prefetch)
         res.ceilings = f.ceilings
         return res
 
     def _staged(self) -> bool:
         return self.budget_cfg is not None and self.backend.staged
+
+    def _prefetching(self) -> bool:
+        """Whether the pipeline should run the disk-prefetch stage."""
+        return self._staged() and getattr(self.backend, "prefetches", False)
 
     def _resolve_ceilings(self, budgets_np, cfg) -> tuple[int, ...] | None:
         if self.num_buckets == "auto":

@@ -14,7 +14,11 @@ erases the signature), so everything here is module-level ``lru_cache``.
 """
 from __future__ import annotations
 
+import atexit
 import functools
+import pathlib
+import shutil
+import tempfile
 
 import jax
 import numpy as np
@@ -35,7 +39,11 @@ BUDGET = search.AdaptiveBeamBudget(l_min=8, l_max=48, lam=0.3, center=8.0)
 BUDGET_DIST = search.AdaptiveBeamBudget(l_min=8, l_max=32, lam=0.35,
                                         center=8.0)
 DIST_CHUNK = 8          # query_chunk of the distributed fixtures
-SINGLE_HOST = ("exact", "pq", "tiered")
+# "disk" = the tiered backend with its slow tier served from the
+# block-aligned on-disk store — same walk, host-side rerank fetch; its
+# reference paths (monolithic / core-bucketed) are the *in-memory* tiered
+# ones, which is exactly the bit-identity under test.
+SINGLE_HOST = ("exact", "pq", "tiered", "disk")
 
 
 def has_mesh() -> bool:
@@ -84,6 +92,23 @@ def built_dist():
     return mesh, arrays, per, q, np.asarray(gt_i)
 
 
+@functools.lru_cache(maxsize=1)
+def built_disk_tier():
+    """One shared BlockSlowTier over a block store written from the tiered
+    fixture (cache state never affects results, so sharing is safe)."""
+    from repro.index import BlockSlowTier, BlockStore, write_block_store
+    from repro.index.disk import entry_proximal_ids
+
+    _x, _q, _gt, idx, tiered = built()
+    tmp = tempfile.mkdtemp(prefix="mcgi-blockstore-")
+    atexit.register(shutil.rmtree, tmp, ignore_errors=True)
+    p = pathlib.Path(tmp) / "fixture.blocks"
+    write_block_store(p, np.asarray(tiered.vectors), np.asarray(idx.adj))
+    return BlockSlowTier(
+        BlockStore(p), cache_nodes=1024,
+        pinned_ids=entry_proximal_ids(idx.adj, idx.entry, limit=64))
+
+
 def _make_backend(variant: str, budget, shard_laws=None):
     if variant == "dist":
         mesh, arrays, _per, _q, _gt = built_dist()
@@ -96,6 +121,8 @@ def _make_backend(variant: str, budget, shard_laws=None):
         return serving.ExactBackend(x, idx.adj, idx.entry)
     if variant == "pq":
         return serving.TieredBackend(tiered, rerank=False)
+    if variant == "disk":
+        return serving.TieredBackend(tiered, slow_tier=built_disk_tier())
     assert variant == "tiered", variant
     return serving.TieredBackend(tiered)
 
@@ -127,7 +154,9 @@ def monolithic(variant: str, q, budget=BUDGET):
             x, idx.adj, q, idx.entry, budget, k=10)
     if variant == "pq":
         return search_tiered_adaptive(tiered, q, budget, k=10, rerank=False)
-    assert variant == "tiered", variant
+    # "disk" shares the in-memory tiered reference: the disk engine must
+    # reproduce the in-memory slow tier's results.
+    assert variant in ("tiered", "disk"), variant
     return search_tiered_adaptive(tiered, q, budget, k=10)
 
 
@@ -142,7 +171,7 @@ def core_bucketed(variant: str, q, num_buckets, budget=BUDGET):
     if variant == "pq":
         return search_tiered_adaptive(
             tiered, q, budget, k=10, rerank=False, num_buckets=num_buckets)
-    assert variant == "tiered", variant
+    assert variant in ("tiered", "disk"), variant
     return search_tiered_adaptive(
         tiered, q, budget, k=10, num_buckets=num_buckets)
 

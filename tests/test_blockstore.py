@@ -1,0 +1,221 @@
+"""Block store fault injection + cache accounting.
+
+A disk tier that can return garbage is worse than no disk tier: every
+corruption mode here (truncation, bit rot, wrong/stale format) must surface
+as a *typed* error naming the problem, never as silently wrong neighbours.
+The cache counters are pinned exactly — they are the serving observability
+signal, so "roughly right" is not a property.
+"""
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core import build
+from repro.index import (BlockChecksumError, BlockSlowTier, BlockStore,
+                         BlockStoreFormatError, BlockStoreTruncatedError,
+                         build_tiered_index, entry_proximal_ids,
+                         open_block_store, save_index, write_block_store)
+from repro.index import blockstore as bs
+
+N, D, R = 64, 12, 6
+
+
+@pytest.fixture()
+def store_path(tmp_path):
+    rng = np.random.default_rng(0)
+    vectors = rng.normal(size=(N, D)).astype(np.float32)
+    adj = rng.integers(-1, N, size=(N, R)).astype(np.int32)
+    p = write_block_store(tmp_path / "t.blocks", vectors, adj)
+    return p, vectors, adj
+
+
+def test_round_trip_and_alignment(store_path):
+    p, vectors, adj = store_path
+    store = BlockStore(p)
+    assert store.n == N and store.d == D and store.r == R
+    assert store.block_size % bs.SECTOR == 0
+    assert p.stat().st_size == (N + 1) * store.block_size
+    ids = np.asarray([0, 3, 63, 3])          # duplicates allowed
+    vecs, adjs = store.read_many(ids)
+    np.testing.assert_array_equal(vecs, vectors[ids])
+    np.testing.assert_array_equal(adjs, adj[ids])
+    assert store.stats.blocks_read == 4
+    with pytest.raises(IndexError):
+        store.read_many(np.asarray([N]))
+
+
+def test_truncated_file_raises_typed_error(store_path):
+    p, _, _ = store_path
+    data = p.read_bytes()
+    p.write_bytes(data[: len(data) - bs.SECTOR])     # lose the last node
+    with pytest.raises(BlockStoreTruncatedError, match="bytes on disk"):
+        BlockStore(p)
+
+
+def test_corrupted_block_raises_checksum_error(store_path):
+    p, _, _ = store_path
+    store = BlockStore(p)
+    raw = bytearray(p.read_bytes())
+    node = 7
+    raw[(1 + node) * store.block_size + 2] ^= 0xFF   # flip one payload byte
+    p.write_bytes(bytes(raw))
+    corrupt = BlockStore(p)
+    with pytest.raises(BlockChecksumError, match="node 7"):
+        corrupt.read_many(np.asarray([3, 7, 11]))
+    # Untouched nodes still read fine.
+    corrupt.read_many(np.asarray([3, 11]))
+
+
+def test_wrong_format_raises_format_error(store_path, tmp_path):
+    p, _, _ = store_path
+    # Bad magic.
+    raw = bytearray(p.read_bytes())
+    raw[0] ^= 0xFF
+    bad = tmp_path / "bad_magic.blocks"
+    bad.write_bytes(bytes(raw))
+    with pytest.raises(BlockStoreFormatError, match="bad magic"):
+        BlockStore(bad)
+    # Right magic, wrong format string in the manifest.
+    raw = bytearray(p.read_bytes())
+    store = BlockStore(p)
+    manifest = json.dumps({"format": "repro.blockstore.v999", "n": N,
+                           "d": D, "r": R,
+                           "block_size": store.block_size}).encode()
+    raw[len(bs.MAGIC): len(bs.MAGIC) + 4] = (
+        np.uint32(len(manifest)).astype("<u4").tobytes())
+    end = len(bs.MAGIC) + 4 + len(manifest)
+    raw[len(bs.MAGIC) + 4: end] = manifest
+    raw[end: store.block_size] = b"\0" * (store.block_size - end)
+    wrong = tmp_path / "wrong_format.blocks"
+    wrong.write_bytes(bytes(raw))
+    with pytest.raises(BlockStoreFormatError, match="v999"):
+        BlockStore(wrong)
+    # Not a block store at all.
+    not_store = tmp_path / "noise.blocks"
+    not_store.write_bytes(b"\x01" * 2048)
+    with pytest.raises(BlockStoreFormatError):
+        BlockStore(not_store)
+    with pytest.raises(BlockStoreFormatError):
+        BlockStore(tmp_path / "missing.blocks")
+
+
+def test_stale_sidecar_is_a_format_error(tmp_path):
+    """A v2 index whose sidecar geometry disagrees with its manifest (stale
+    or swapped .blocks file) must refuse to open, not serve wrong vectors."""
+    from repro.data import make_dataset
+
+    x, _ = make_dataset("tiny-mixture", seed=0)
+    x = x[:300]
+    cfg = build.BuildConfig(degree=8, beam_width=16, iters=1, batch=128,
+                            max_hops=32)
+    index = build_tiered_index(x, build.build_mcgi(x, cfg), m_pq=8)
+    p = tmp_path / "idx.npz"
+    save_index(p, index, version=2)
+    sidecar = pathlib.Path(str(p) + ".blocks")
+    rng = np.random.default_rng(1)
+    write_block_store(sidecar,                       # overwrite: wrong shape
+                      rng.normal(size=(10, 4)).astype(np.float32),
+                      np.zeros((10, 2), np.int32))
+    with pytest.raises(BlockStoreFormatError, match="stale or swapped"):
+        open_block_store(p)
+    # Same geometry, different content: only the fingerprint can tell.
+    vec2 = np.asarray(index.vectors).copy()
+    vec2[0, 0] += 1.0
+    write_block_store(sidecar, vec2, np.asarray(index.graph.adj))
+    with pytest.raises(BlockStoreFormatError, match="vectors_crc32"):
+        open_block_store(p)
+
+
+def test_ensure_block_store_reuses_recovers_and_rewrites(tmp_path):
+    """The shared bootstrap: reuse on fingerprint match, rewrite on
+    anything else — absent, unreadable junk (must not crash), or a
+    same-shaped store for different content."""
+    from repro.index import ensure_block_store
+    from repro.index.blockstore import vectors_crc32
+
+    rng = np.random.default_rng(2)
+    vectors = rng.normal(size=(16, 8)).astype(np.float32)
+    adj = rng.integers(-1, 16, size=(16, 4)).astype(np.int32)
+    p = tmp_path / "e.blocks"
+    msgs = []
+    s1 = ensure_block_store(p, vectors, adj, log=msgs.append)
+    assert any("wrote" in m for m in msgs)
+    mtime = p.stat().st_mtime_ns
+    s2 = ensure_block_store(p, vectors, adj)          # match: reused as-is
+    assert p.stat().st_mtime_ns == mtime
+    assert s2.vectors_crc32 == s1.vectors_crc32
+    p.write_bytes(b"not a store")                     # junk: recovered
+    msgs.clear()
+    s3 = ensure_block_store(p, vectors, adj, log=msgs.append)
+    assert any("unreadable" in m for m in msgs)
+    np.testing.assert_array_equal(s3.read_many(np.asarray([5]))[0],
+                                  vectors[[5]])
+    v2 = vectors.copy()                               # same shape, new content
+    v2[0, 0] += 1.0
+    msgs.clear()
+    s4 = ensure_block_store(p, v2, adj, log=msgs.append)
+    assert any("stale" in m for m in msgs)
+    assert s4.vectors_crc32 == vectors_crc32(v2)
+
+
+def test_cache_counters_exact_on_replayed_stream(store_path):
+    p, vectors, adj = store_path
+    pinned = np.asarray([0, 1, 2, 3])
+    tier = BlockSlowTier(BlockStore(p), cache_nodes=N, pinned_ids=pinned)
+    # Counters start clean: the pinned-set load is construction, not traffic.
+    assert tier.stats()["blocks_read"] == 0
+    assert tier.stats()["pinned_nodes"] == 4
+
+    stream = [np.asarray([[0, 5, 9], [5, 17, -1]]),   # -1 clamps to node 0
+              np.asarray([[9, 17, 33]])]
+    # First pass: per batch, each *distinct* (clamped) id counts once.
+    tier.fetch_beams(stream[0])   # distinct {0,5,9,17}: 1 pinned hit, 3 miss
+    tier.fetch_beams(stream[1])   # distinct {9,17,33}: 2 hits, 1 miss
+    st = tier.stats()
+    assert (st["cache_hits"], st["cache_misses"]) == (3, 4)
+    assert st["blocks_read"] == 4                 # reads == misses
+    # Replay: everything is cached now — all hits, zero block reads.
+    tier.reset_stats()
+    for beams in stream:
+        out = tier.fetch_beams(beams)
+        np.testing.assert_array_equal(
+            out, vectors[np.maximum(beams, 0)])   # values still exact
+    st2 = tier.stats()
+    assert (st2["cache_hits"], st2["cache_misses"]) == (7, 0)
+    assert st2["hit_rate"] == 1.0 and st2["blocks_read"] == 0
+
+
+def test_lru_eviction_bounds_cache_and_keeps_pins(store_path):
+    p, vectors, _ = store_path
+    tier = BlockSlowTier(BlockStore(p), cache_nodes=4,
+                         pinned_ids=np.asarray([60]))
+    tier.fetch(np.arange(10))                     # 10 misses through a 4-LRU
+    st = tier.stats()
+    assert st["cached_nodes"] == 4 and st["pinned_nodes"] == 1
+    assert st["cache_misses"] == 10
+    # Pinned node hits without a read even after heavy eviction traffic.
+    tier.reset_stats()
+    np.testing.assert_array_equal(tier.fetch(np.asarray([60]))[0],
+                                  vectors[60])
+    assert tier.stats()["cache_hits"] == 1
+    assert tier.stats()["blocks_read"] == 0
+
+
+def test_prefetch_future_matches_direct_fetch(store_path):
+    p, vectors, _ = store_path
+    tier = BlockSlowTier(BlockStore(p), cache_nodes=N)
+    beams = np.asarray([[1, 4, -1], [44, 2, 9]])
+    fut = tier.prefetch(beams)
+    np.testing.assert_array_equal(fut.result(),
+                                  vectors[np.maximum(beams, 0)])
+
+
+def test_entry_proximal_pins_bfs_neighbourhood():
+    adj = np.asarray([[1, 2, -1], [3, -1, -1], [3, 4, -1],
+                      [-1] * 3, [-1] * 3, [-1] * 3], np.int32)
+    ids = entry_proximal_ids(adj, 0, limit=4)
+    assert ids[0] == 0
+    assert set(ids.tolist()) == {0, 1, 2, 3}      # BFS order, truncated
+    assert entry_proximal_ids(adj, 5, limit=4).tolist() == [5]

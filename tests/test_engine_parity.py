@@ -1,9 +1,12 @@
 """Consolidated cross-backend property harness for the serving engine.
 
-Every backend (exact / PQ / tiered — and distributed whenever the process
-has a mesh, i.e. the CI multi-device matrix job) is pinned to the same
+Every backend (exact / PQ / tiered / disk — the tiered backend over the
+block-aligned on-disk slow tier — and distributed whenever the process has
+a mesh, i.e. the CI multi-device matrix job) is pinned to the same
 scheduling-transparency properties from shared fixtures
-(``tests/_backend_fixtures.py``):
+(``tests/_backend_fixtures.py``); the disk variant's reference paths are
+the *in-memory* tiered ones, so the matrix also pins storage-tier
+bit-identity (plus the explicit bitwise tests below):
 
 * **staged vs monolithic** — the engine's staged probe/bucket/continue
   path returns the single-program adaptive path's results (bitwise for the
@@ -219,6 +222,94 @@ def test_coalescing_monolithic_backend():
     np.testing.assert_array_equal(
         np.concatenate([np.asarray(r.stats.hops) for r in res_c]),
         np.asarray(merged.stats.hops))
+
+
+# ----------------------------------------------- disk slow tier bit-identity
+
+@pytest.mark.parametrize("num_buckets", [None, 3, "auto"])
+def test_disk_slow_tier_bit_identical_to_memory(num_buckets):
+    """The block-store-backed slow tier serves *bit-identical* results to
+    the in-memory rows — ids, distances, hops and granted budgets — for
+    every bucket family, eager and pipelined (ragged final batch included),
+    and coalesced micro-batches.  The walk never touches the slow tier;
+    only the rerank fetch moves from an in-graph gather to checksummed
+    block reads, and the rerank arithmetic is the same jitted program."""
+    _, q, _, _, _ = fx.built()
+    eng_m = fx.engine("tiered", num_buckets=num_buckets)
+    eng_d = fx.engine("disk", num_buckets=num_buckets)
+    fx.assert_bit_identical(eng_d.search(q), eng_m.search(q))
+    batches = fx.split(q, 9)                     # 40 % 9 != 0: ragged tail
+    for res_d, res_m in zip(eng_d.search_batches(batches),
+                            eng_m.search_batches(batches)):
+        fx.assert_bit_identical(res_d, res_m)
+    for res_d, res_m in zip(
+            fx.engine("disk", num_buckets=num_buckets,
+                      coalesce_lanes=16).search_batches(fx.split(q, 5)),
+            fx.engine("tiered", num_buckets=num_buckets,
+                      coalesce_lanes=16).search_batches(fx.split(q, 5))):
+        fx.assert_bit_identical(res_d, res_m)
+
+
+def test_disk_fixed_beam_bit_identical_to_memory():
+    """Fixed-beam (monolithic dispatch) disk serving matches the in-memory
+    fused walk+rerank program bitwise too."""
+    from repro import serving
+
+    _, q, _, _, tiered = fx.built()
+    eng_m = serving.SearchEngine(serving.TieredBackend(tiered), None, k=10,
+                                 beam_width=24)
+    eng_d = serving.SearchEngine(
+        serving.TieredBackend(tiered, slow_tier=fx.built_disk_tier()), None,
+        k=10, beam_width=24)
+    res_m, res_d = eng_m.search(q), eng_d.search(q)
+    np.testing.assert_array_equal(res_d.ids, res_m.ids)
+    np.testing.assert_array_equal(res_d.d2, res_m.d2)
+    np.testing.assert_array_equal(np.asarray(res_d.stats.hops),
+                                  np.asarray(res_m.stats.hops))
+    assert "slow_tier" in res_d.extras   # observability contract holds here too
+
+
+def test_in_memory_slow_tier_honoured():
+    """An explicitly passed InMemorySlowTier is served (not silently
+    shadowed by index.vectors) and matches the default in-memory path
+    bitwise — the other concrete SlowTier implementation stays live."""
+    from repro import serving
+    from repro.index import InMemorySlowTier
+
+    _, q, _, _, tiered = fx.built()
+    eng_t = serving.SearchEngine(
+        serving.TieredBackend(tiered,
+                              slow_tier=InMemorySlowTier(tiered.vectors)),
+        fx.BUDGET, k=10)
+    fx.assert_bit_identical(eng_t.search(q), fx.engine("tiered").search(q))
+
+
+def test_disk_backend_refresh_requires_explicit_slow_tier():
+    """Online-MCGI refresh on a disk backend must re-state the slow tier:
+    the old store holds the old vectors, so a bare update() would either
+    serve stale reranks or silently fall back to memory."""
+    from repro import serving
+
+    _, _, _, _, tiered = fx.built()
+    backend = serving.TieredBackend(tiered, slow_tier=fx.built_disk_tier())
+    with pytest.raises(ValueError, match="slow_tier"):
+        backend.update(tiered)
+    backend.update(tiered, slow_tier=fx.built_disk_tier())  # explicit: fine
+    backend.update(tiered, slow_tier=None)                  # back to memory
+    assert backend.slow_tier is None
+    mem = serving.TieredBackend(tiered)
+    mem.update(tiered)                                      # memory: as before
+
+
+def test_disk_engine_surfaces_cache_stats():
+    """Every disk-backed BatchResult carries the slow tier's cumulative
+    cache/I-O counters in extras (the observability contract)."""
+    _, q, _, _, _ = fx.built()
+    res = fx.engine("disk").search(q)
+    st = res.extras["slow_tier"]
+    assert st["cache_hits"] + st["cache_misses"] > 0
+    assert 0.0 <= st["hit_rate"] <= 1.0
+    assert st["blocks_read"] >= 0 and st["measured_read_us"] >= 0.0
 
 
 # ------------------------------------------- distributed-only extra checks
