@@ -19,6 +19,21 @@ probe/continue programs plus their jit wrappers. Serve-time control flow
 (host-side bucket scheduling, batch pipelining, recalibration) lives in
 :mod:`repro.serving`; the ``num_buckets=`` convenience on the adaptive entry
 points below delegates to that scheduler.
+
+The per-hop body (frontier select -> adjacency gather -> distance eval ->
+beam merge -> visited update) is *pluggable*: :class:`BeamStepKernel` is the
+reference implementation (the historical inline body, factored verbatim),
+and :class:`PallasBeamStep` swaps the whole batched hop for one fused
+``repro.kernels.beam_step`` launch per hop (beam state in VMEM, one kernel
+instead of a chain of HLOs). Every walk entry point — fixed-beam, probe and
+continue — takes ``step_kernel=`` (``None``/"reference" | "pallas" |
+"auto"), threaded from the serving engines as a static jit key.
+"reference" is the default everywhere (bit-stable, no dispatch-policy
+dependence); "pallas" forces the fused kernel (compiled on TPU, interpret
+elsewhere — bit-identical to the reference, see
+:mod:`repro.kernels.beam_step`); "auto" consults the
+:func:`repro.kernels.ops.resolve_impl` policy and falls back to the
+reference off-TPU unless interpret mode is requested.
 """
 from __future__ import annotations
 
@@ -118,37 +133,23 @@ def _init_state(query_ctx: Array, entry: Array, eval_dists: DistEval,
     return beam_ids, beam_d, beam_exp, visited, jnp.int32(0), jnp.int32(0)
 
 
-def _run_search(
-    state,
-    query_ctx: Array,
-    adj: Array,
-    eval_dists: DistEval,
-    beam_width: int,
-    hop_limit: Array,
-    budget: Array | None = None,
-):
-    """Advance one query's beam search until its frontier closes.
+class BeamStepKernel:
+    """The pluggable per-hop kernel of the beam walk (reference impl).
 
-    The physical beam is fixed-shape ``(beam_width,)``; ``budget`` (a traced
-    per-query scalar) restricts the *active frontier* to the best ``budget``
-    slots — the per-query knob of the adaptive engine. Because the beam is
-    kept sorted by the merge, budget-b convergence is exactly beam-width-b
-    search (with a slightly richer candidate pool retained for the final
-    top-k). ``hop_limit`` is likewise a traced scalar, so vmapped batches
-    retire work lane-by-lane as queries converge: a converged lane's cond is
-    False, its state freezes, and its hop counter (== slow-tier I/O) stops —
-    easy queries stop paying for hard ones.
+    ``step`` advances ONE query's state by one hop — the body factored
+    verbatim out of the historical inline ``_run_search`` loop, so fixed-beam,
+    probe and continue all execute the same code.  ``run_batch`` drives a
+    batch of lanes to convergence (here: a vmap of per-lane while loops, the
+    historical execution shape).  Subclasses override ``run_batch`` to change
+    *how* hops execute without touching *what* a hop computes;
+    :class:`PallasBeamStep` swaps in the fused single-launch hop.
     """
-    slot = jnp.arange(beam_width)
-    in_budget = (slot < budget) if budget is not None else jnp.ones(
-        (beam_width,), dtype=bool)
 
-    def cond(state):
-        beam_ids, _, beam_exp, _, hops, _ = state
-        frontier_open = jnp.any((~beam_exp) & (beam_ids != INVALID) & in_budget)
-        return (hops < hop_limit) & frontier_open
+    name = "reference"
 
-    def body(state):
+    def step(self, state, query_ctx: Array, adj: Array,
+             eval_dists: DistEval, beam_width: int, in_budget: Array):
+        """One hop of one query's walk (the reference hop body, verbatim)."""
         beam_ids, beam_d, beam_exp, visited, hops, evals = state
         # Closest unexpanded beam entry within the active budget.
         cand_d = jnp.where(
@@ -174,6 +175,145 @@ def _run_search(
             beam_ids, beam_d, beam_exp, nbr_ids, d, beam_width
         )
         return beam_ids, beam_d, beam_exp, visited, hops + 1, evals + valid.sum()
+
+    def run_batch(self, states, ctxs: Array, adj: Array,
+                  eval_dists: DistEval, beam_width: int, hop_limits: Array,
+                  budgets: Array | None = None):
+        """Run a batch of lanes to convergence; leaves of ``states`` are
+        (Q, ...) with per-lane ``hop_limits`` and optional ``budgets``."""
+        if budgets is None:
+            def one(state, c, h):
+                return _run_search(state, c, adj, eval_dists, beam_width,
+                                   hop_limit=h, step_kernel=self)
+
+            return jax.vmap(one)(states, ctxs, hop_limits)
+
+        def one(state, c, h, b):
+            return _run_search(state, c, adj, eval_dists, beam_width,
+                               hop_limit=h, budget=b, step_kernel=self)
+
+        return jax.vmap(one)(states, ctxs, hop_limits, budgets)
+
+
+class PallasBeamStep(BeamStepKernel):
+    """Fused-hop execution: one ``repro.kernels.ops.beam_step`` launch per
+    hop of the whole batch, beam state resident in VMEM.
+
+    The per-lane ``step`` body is inherited unchanged (it *is* the hop's
+    semantics); ``run_batch`` replaces the vmap-of-while shape with one
+    batch-level while whose body is the fused kernel.  Both shapes freeze
+    converged lanes identically (XLA lowers a vmapped while to exactly this
+    any-cond + select-masking form), so results are bit-identical — the
+    engine-parity kernel axis asserts it per backend.
+
+    The fused kernel sees through the two standard evaluators via their
+    ``kind``/``table`` tags (:func:`_exact_eval`, :func:`_pq_eval`, and the
+    distributed shard evaluator); an untagged custom evaluator falls back to
+    the reference execution shape.
+    """
+
+    name = "pallas"
+    request = "pallas"   # ops-layer dispatch: interpret off-TPU, never oracle
+
+    def run_batch(self, states, ctxs: Array, adj: Array,
+                  eval_dists: DistEval, beam_width: int, hop_limits: Array,
+                  budgets: Array | None = None):
+        kind = getattr(eval_dists, "kind", None)
+        table = getattr(eval_dists, "table", None)
+        if kind not in ("exact", "pq") or table is None:
+            return super().run_batch(states, ctxs, adj, eval_dists,
+                                     beam_width, hop_limits, budgets)
+        from repro.kernels import ops
+
+        q = hop_limits.shape[0]
+        b = (jnp.full((q,), beam_width, jnp.int32) if budgets is None
+             else jnp.broadcast_to(budgets, (q,)).astype(jnp.int32))
+        hl = jnp.broadcast_to(hop_limits, (q,)).astype(jnp.int32)
+
+        def cond(st):
+            beam_ids, _, beam_exp, _, hops, _ = st
+            in_b = jax.lax.broadcasted_iota(
+                jnp.int32, beam_ids.shape, 1) < b[:, None]
+            frontier = jnp.any(
+                (~beam_exp) & (beam_ids != INVALID) & in_b, axis=1)
+            return jnp.any((hops < hl) & frontier)
+
+        def body(st):
+            return ops.beam_step(st, ctxs, adj, table, b, hl, kind=kind,
+                                 request=self.request)
+
+        return jax.lax.while_loop(cond, body, states)
+
+
+REFERENCE_STEP = BeamStepKernel()
+PALLAS_STEP = PallasBeamStep()
+
+
+def resolve_step_kernel(
+    spec: "str | BeamStepKernel | None" = None,
+) -> BeamStepKernel:
+    """Resolve a ``step_kernel=`` knob to a kernel object.
+
+    ``None``/"reference" -> the reference hop; "pallas" -> the fused kernel
+    (compiled on TPU, interpret-mode elsewhere — bit-identical either way);
+    "auto" -> whatever :func:`repro.kernels.ops.resolve_impl` picks for this
+    process (the fused kernel on TPU or under ``REPRO_PALLAS_INTERPRET=1``,
+    the reference otherwise).  Kernel instances pass through, so tests can
+    inject custom execution shapes.
+    """
+    if spec is None or spec == "reference":
+        return REFERENCE_STEP
+    if isinstance(spec, BeamStepKernel):
+        return spec
+    if spec == "pallas":
+        return PALLAS_STEP
+    if spec == "auto":
+        from repro.kernels import ops
+
+        return PALLAS_STEP if ops.resolve_impl() != "ref" else REFERENCE_STEP
+    raise ValueError(
+        f"unknown step_kernel {spec!r}; expected 'reference' | 'pallas' | "
+        "'auto' (or a BeamStepKernel instance)")
+
+
+def _run_search(
+    state,
+    query_ctx: Array,
+    adj: Array,
+    eval_dists: DistEval,
+    beam_width: int,
+    hop_limit: Array,
+    budget: Array | None = None,
+    step_kernel: BeamStepKernel | None = None,
+):
+    """Advance one query's beam search until its frontier closes.
+
+    The physical beam is fixed-shape ``(beam_width,)``; ``budget`` (a traced
+    per-query scalar) restricts the *active frontier* to the best ``budget``
+    slots — the per-query knob of the adaptive engine. Because the beam is
+    kept sorted by the merge, budget-b convergence is exactly beam-width-b
+    search (with a slightly richer candidate pool retained for the final
+    top-k). ``hop_limit`` is likewise a traced scalar, so vmapped batches
+    retire work lane-by-lane as queries converge: a converged lane's cond is
+    False, its state freezes, and its hop counter (== slow-tier I/O) stops —
+    easy queries stop paying for hard ones.
+
+    The hop body itself lives on ``step_kernel`` (default: the reference
+    :class:`BeamStepKernel`) — this function owns only the convergence loop.
+    """
+    kernel = step_kernel if step_kernel is not None else REFERENCE_STEP
+    slot = jnp.arange(beam_width)
+    in_budget = (slot < budget) if budget is not None else jnp.ones(
+        (beam_width,), dtype=bool)
+
+    def cond(state):
+        beam_ids, _, beam_exp, _, hops, _ = state
+        frontier_open = jnp.any((~beam_exp) & (beam_ids != INVALID) & in_budget)
+        return (hops < hop_limit) & frontier_open
+
+    def body(state):
+        return kernel.step(state, query_ctx, adj, eval_dists, beam_width,
+                           in_budget)
 
     return jax.lax.while_loop(cond, body, state)
 
@@ -201,6 +341,32 @@ def _search_one(
         state, query_ctx, adj, eval_dists, beam_width,
         hop_limit=jnp.int32(max_hops),
     )
+    return beam_ids, beam_d, SearchStats(hops=hops, dist_evals=evals)
+
+
+def fixed_search_batch(
+    ctxs: Array,
+    adj: Array,
+    entry: Array,
+    eval_dists: DistEval,
+    n: int,
+    beam_width: int,
+    max_hops: int,
+    step_kernel: "str | BeamStepKernel | None" = None,
+) -> tuple[Array, Array, SearchStats]:
+    """Batched fixed-beam walk through the pluggable step kernel.
+
+    The batch-level counterpart of ``vmap(_search_one)`` (same math, same
+    results): init every lane, then hand the batch to the step kernel's
+    ``run_batch`` — which is exactly the historical vmapped loop for the
+    reference kernel, or one fused launch per hop for the Pallas one.
+    """
+    kernel = resolve_step_kernel(step_kernel)
+    states = jax.vmap(
+        lambda c: _init_state(c, entry, eval_dists, n, beam_width))(ctxs)
+    hop_limits = jnp.full((ctxs.shape[0],), jnp.int32(max_hops))
+    beam_ids, beam_d, _, _, hops, evals = kernel.run_batch(
+        states, ctxs, adj, eval_dists, beam_width, hop_limits)
     return beam_ids, beam_d, SearchStats(hops=hops, dist_evals=evals)
 
 
@@ -259,6 +425,7 @@ def adaptive_probe_batch(
     *,
     lam: Array | None = None,
     l_min: Array | None = None,
+    step_kernel: "str | BeamStepKernel | None" = None,
 ):
     """Phases 1-2 of the adaptive engine: probe walk + budget grant.
 
@@ -283,15 +450,14 @@ def adaptive_probe_batch(
     lam_ = budget_cfg.lam if lam is None else lam
     l_min_ = budget_cfg.l_min if l_min is None else l_min
 
-    def probe_one(c):
-        state = _init_state(c, entry, eval_dists, n, l_max)
-        return _run_search(
-            state, c, adj, eval_dists, l_max,
-            hop_limit=jnp.int32(budget_cfg.probe_hops),
-            budget=jnp.int32(l_min_),
-        )
-
-    probe_state = jax.vmap(probe_one)(ctxs)
+    kernel = resolve_step_kernel(step_kernel)
+    states = jax.vmap(
+        lambda c: _init_state(c, entry, eval_dists, n, l_max))(ctxs)
+    nq = ctxs.shape[0]
+    probe_state = kernel.run_batch(
+        states, ctxs, adj, eval_dists, l_max,
+        hop_limits=jnp.full((nq,), jnp.int32(budget_cfg.probe_hops)),
+        budgets=jnp.broadcast_to(jnp.int32(l_min_), (nq,)))
     p_ids, p_d = probe_state[0], probe_state[1]
     d_pool = jnp.where(p_ids == INVALID, jnp.inf, p_d)
     q_lid = lid_mod.online_lid(d_pool, k=min(budget_cfg.lid_k, l_max))
@@ -311,6 +477,7 @@ def adaptive_continue_batch(
     budget_cfg: AdaptiveBeamBudget,
     budgets: Array,
     hop_limits: Array,
+    step_kernel: "str | BeamStepKernel | None" = None,
 ):
     """Phase 3: resume the probe states (warm beam + visited set, no repeated
     hops) with per-query frontier budgets and hop limits.
@@ -318,14 +485,10 @@ def adaptive_continue_batch(
     Returns (beam_ids, beam_d, hops, evals); the counters include the probe
     phase (the continue loop resumes them).
     """
-    l_max = budget_cfg.l_max
-
-    def continue_one(state, c, b, h):
-        return _run_search(state, c, adj, eval_dists, l_max,
-                           hop_limit=h, budget=b)
-
-    beam_ids, beam_d, _, _, hops, evals = jax.vmap(continue_one)(
-        probe_state, ctxs, budgets, hop_limits)
+    kernel = resolve_step_kernel(step_kernel)
+    beam_ids, beam_d, _, _, hops, evals = kernel.run_batch(
+        probe_state, ctxs, adj, eval_dists, budget_cfg.l_max,
+        hop_limits=hop_limits, budgets=budgets)
     return beam_ids, beam_d, hops, evals
 
 
@@ -341,6 +504,7 @@ def adaptive_search_batch(
     *,
     lam: Array | None = None,
     l_min: Array | None = None,
+    step_kernel: "str | BeamStepKernel | None" = None,
 ) -> tuple[Array, Array, SearchStats, AdaptiveStats]:
     """The per-query adaptive-beam engine (Prop. 4.2 deployed in-graph).
 
@@ -372,12 +536,13 @@ def adaptive_search_batch(
     """
     probe_state, budgets, hop_limits, q_lid = adaptive_probe_batch(
         ctxs, adj, entry, eval_dists, n, budget_cfg, max_hops,
-        lam=lam, l_min=l_min)
+        lam=lam, l_min=l_min, step_kernel=step_kernel)
     if bucket_ceilings is not None:
         _, budgets = quantize_budgets(budgets, bucket_ceilings)
         hop_limits = _bucket_hop_limits(budget_cfg, budgets, max_hops)
     beam_ids, beam_d, hops, evals = adaptive_continue_batch(
-        probe_state, ctxs, adj, eval_dists, budget_cfg, budgets, hop_limits)
+        probe_state, ctxs, adj, eval_dists, budget_cfg, budgets, hop_limits,
+        step_kernel=step_kernel)
     return (beam_ids, beam_d, SearchStats(hops=hops, dist_evals=evals),
             AdaptiveStats(q_lid=q_lid, budget=budgets))
 
@@ -389,6 +554,10 @@ def _exact_eval(x: Array) -> DistEval:
         diff = vecs - q[None, :]
         return jnp.sum(diff * diff, axis=-1)
 
+    # Tags let the fused Pallas step route this evaluator's table itself
+    # (the kernel gathers rows by DMA instead of calling the closure).
+    eval_dists.kind = "exact"
+    eval_dists.table = x
     return eval_dists
 
 
@@ -401,11 +570,13 @@ def _pq_eval(codes: Array) -> DistEval:
         gathered = jax.vmap(lambda row: lut[jnp.arange(m), row])(c)
         return gathered.sum(axis=-1)
 
+    eval_dists.kind = "pq"
+    eval_dists.table = codes
     return eval_dists
 
 
 @functools.partial(
-    jax.jit, static_argnames=("beam_width", "max_hops", "k")
+    jax.jit, static_argnames=("beam_width", "max_hops", "k", "step_kernel")
 )
 def beam_search_exact(
     x: Array,
@@ -415,6 +586,7 @@ def beam_search_exact(
     beam_width: int,
     max_hops: int = 2048,
     k: int = 10,
+    step_kernel: str | None = None,
 ) -> tuple[Array, Array, SearchStats]:
     """Exact-distance beam search, batched over (Q, D) queries.
 
@@ -422,22 +594,15 @@ def beam_search_exact(
     """
     n = x.shape[0]
     eval_dists = _exact_eval(x)
-
-    run = functools.partial(
-        _search_one,
-        adj=adj,
-        entry=entry,
-        eval_dists=eval_dists,
-        n=n,
-        beam_width=beam_width,
-        max_hops=max_hops,
-    )
-    beam_ids, beam_d, stats = jax.vmap(run)(queries)
+    beam_ids, beam_d, stats = fixed_search_batch(
+        queries, adj, entry, eval_dists, n, beam_width, max_hops,
+        step_kernel=step_kernel)
     return beam_ids[:, :k], beam_d[:, :k], stats
 
 
 @functools.partial(
-    jax.jit, static_argnames=("beam_width", "max_hops", "k", "rerank")
+    jax.jit,
+    static_argnames=("beam_width", "max_hops", "k", "rerank", "step_kernel"),
 )
 def beam_search_pq(
     codes: Array,
@@ -450,6 +615,7 @@ def beam_search_pq(
     max_hops: int = 2048,
     k: int = 10,
     rerank: bool = True,
+    step_kernel: str | None = None,
 ) -> tuple[Array, Array, SearchStats]:
     """PQ-routed beam search + optional full-precision re-rank.
 
@@ -464,17 +630,9 @@ def beam_search_pq(
     """
     n = codes.shape[0]
     eval_dists = _pq_eval(codes)
-
-    run = functools.partial(
-        _search_one,
-        adj=adj,
-        entry=entry,
-        eval_dists=eval_dists,
-        n=n,
-        beam_width=beam_width,
-        max_hops=max_hops,
-    )
-    beam_ids, beam_d, stats = jax.vmap(run)(luts)
+    beam_ids, beam_d, stats = fixed_search_batch(
+        luts, adj, entry, eval_dists, n, beam_width, max_hops,
+        step_kernel=step_kernel)
 
     if rerank:
         ids, d2 = _rerank_slow_tier(beam_ids, x_slow, queries, k)
@@ -508,42 +666,50 @@ def _rerank_from_vecs(beam_ids, vecs, queries, k):
     )
 
 
-@functools.partial(jax.jit, static_argnames=("budget_cfg", "k"))
+@functools.partial(jax.jit, static_argnames=("budget_cfg", "k", "step_kernel"))
 def _beam_search_exact_adaptive_jit(
-    x, adj, queries, entry, budget_cfg: AdaptiveBeamBudget, k: int = 10
+    x, adj, queries, entry, budget_cfg: AdaptiveBeamBudget, k: int = 10,
+    step_kernel: str | None = None,
 ):
     """Single-program adaptive path: probe + continue in one compiled call."""
     beam_ids, beam_d, stats, astats = adaptive_search_batch(
-        queries, adj, entry, _exact_eval(x), x.shape[0], budget_cfg)
+        queries, adj, entry, _exact_eval(x), x.shape[0], budget_cfg,
+        step_kernel=step_kernel)
     return beam_ids[:, :k], beam_d[:, :k], stats, astats
 
 
-@functools.partial(jax.jit, static_argnames=("budget_cfg",))
-def _probe_exact_jit(x, adj, queries, entry, budget_cfg: AdaptiveBeamBudget):
+@functools.partial(jax.jit, static_argnames=("budget_cfg", "step_kernel"))
+def _probe_exact_jit(x, adj, queries, entry, budget_cfg: AdaptiveBeamBudget,
+                     step_kernel: str | None = None):
     return adaptive_probe_batch(
-        queries, adj, entry, _exact_eval(x), x.shape[0], budget_cfg)
+        queries, adj, entry, _exact_eval(x), x.shape[0], budget_cfg,
+        step_kernel=step_kernel)
 
 
-@functools.partial(jax.jit, static_argnames=("budget_cfg",))
+@functools.partial(jax.jit, static_argnames=("budget_cfg", "step_kernel"))
 def _continue_exact_jit(x, adj, probe_state, ctxs, budgets, hop_limits,
-                        budget_cfg: AdaptiveBeamBudget):
+                        budget_cfg: AdaptiveBeamBudget,
+                        step_kernel: str | None = None):
     return adaptive_continue_batch(
         probe_state, ctxs, adj, _exact_eval(x), budget_cfg, budgets,
-        hop_limits)
+        hop_limits, step_kernel=step_kernel)
 
 
-@functools.partial(jax.jit, static_argnames=("budget_cfg",))
-def _probe_pq_jit(codes, adj, luts, entry, budget_cfg: AdaptiveBeamBudget):
+@functools.partial(jax.jit, static_argnames=("budget_cfg", "step_kernel"))
+def _probe_pq_jit(codes, adj, luts, entry, budget_cfg: AdaptiveBeamBudget,
+                  step_kernel: str | None = None):
     return adaptive_probe_batch(
-        luts, adj, entry, _pq_eval(codes), codes.shape[0], budget_cfg)
+        luts, adj, entry, _pq_eval(codes), codes.shape[0], budget_cfg,
+        step_kernel=step_kernel)
 
 
-@functools.partial(jax.jit, static_argnames=("budget_cfg",))
+@functools.partial(jax.jit, static_argnames=("budget_cfg", "step_kernel"))
 def _continue_pq_jit(codes, adj, probe_state, luts, budgets, hop_limits,
-                     budget_cfg: AdaptiveBeamBudget):
+                     budget_cfg: AdaptiveBeamBudget,
+                     step_kernel: str | None = None):
     return adaptive_continue_batch(
         probe_state, luts, adj, _pq_eval(codes), budget_cfg, budgets,
-        hop_limits)
+        hop_limits, step_kernel=step_kernel)
 
 
 def _bucketed_continue(
@@ -579,6 +745,7 @@ def beam_search_exact_adaptive(
     budget_cfg: AdaptiveBeamBudget,
     k: int = 10,
     num_buckets: int | None = None,
+    step_kernel: str | None = None,
 ) -> tuple[Array, Array, SearchStats, AdaptiveStats]:
     """Exact-distance adaptive-beam search (probe -> budget -> continue).
 
@@ -593,13 +760,13 @@ def beam_search_exact_adaptive(
     """
     if num_buckets is None or num_buckets <= 1:
         return _beam_search_exact_adaptive_jit(
-            x, adj, queries, entry, budget_cfg, k=k)
+            x, adj, queries, entry, budget_cfg, k=k, step_kernel=step_kernel)
     probe_state, budgets, hop_limits, q_lid = _probe_exact_jit(
-        x, adj, queries, entry, budget_cfg)
+        x, adj, queries, entry, budget_cfg, step_kernel=step_kernel)
     ceilings = budget_bucket_ceilings(
         budget_cfg.l_min, budget_cfg.l_max, num_buckets)
     cont = functools.partial(_continue_exact_jit, x, adj,
-                             budget_cfg=budget_cfg)
+                             budget_cfg=budget_cfg, step_kernel=step_kernel)
     beam_ids, beam_d, hops, evals = _bucketed_continue(
         cont, probe_state, queries, budgets, hop_limits, ceilings)
     return (beam_ids[:, :k], beam_d[:, :k],
@@ -607,13 +774,16 @@ def beam_search_exact_adaptive(
             AdaptiveStats(q_lid=q_lid, budget=budgets))
 
 
-@functools.partial(jax.jit, static_argnames=("budget_cfg", "k", "rerank"))
+@functools.partial(
+    jax.jit, static_argnames=("budget_cfg", "k", "rerank", "step_kernel"))
 def _beam_search_pq_adaptive_jit(
     codes, luts, x_slow, adj, queries, entry,
     budget_cfg: AdaptiveBeamBudget, k: int = 10, rerank: bool = True,
+    step_kernel: str | None = None,
 ):
     beam_ids, beam_d, stats, astats = adaptive_search_batch(
-        luts, adj, entry, _pq_eval(codes), codes.shape[0], budget_cfg)
+        luts, adj, entry, _pq_eval(codes), codes.shape[0], budget_cfg,
+        step_kernel=step_kernel)
     if rerank:
         ids, d2 = _rerank_slow_tier(beam_ids, x_slow, queries, k)
         return ids, d2, stats, astats
@@ -635,6 +805,7 @@ def beam_search_pq_adaptive(
     k: int = 10,
     rerank: bool = True,
     num_buckets: int | None = None,
+    step_kernel: str | None = None,
 ) -> tuple[Array, Array, SearchStats, AdaptiveStats]:
     """PQ-routed adaptive-beam search + optional full-precision re-rank.
 
@@ -648,13 +819,13 @@ def beam_search_pq_adaptive(
     if num_buckets is None or num_buckets <= 1:
         return _beam_search_pq_adaptive_jit(
             codes, luts, x_slow, adj, queries, entry, budget_cfg,
-            k=k, rerank=rerank)
+            k=k, rerank=rerank, step_kernel=step_kernel)
     probe_state, budgets, hop_limits, q_lid = _probe_pq_jit(
-        codes, adj, luts, entry, budget_cfg)
+        codes, adj, luts, entry, budget_cfg, step_kernel=step_kernel)
     ceilings = budget_bucket_ceilings(
         budget_cfg.l_min, budget_cfg.l_max, num_buckets)
     cont = functools.partial(_continue_pq_jit, codes, adj,
-                             budget_cfg=budget_cfg)
+                             budget_cfg=budget_cfg, step_kernel=step_kernel)
     beam_ids, beam_d, hops, evals = _bucketed_continue(
         cont, probe_state, luts, budgets, hop_limits, ceilings)
     stats = SearchStats(hops=hops, dist_evals=evals)

@@ -54,7 +54,6 @@ them). ``l_max`` stays global: it is the physical beam shape.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax
@@ -130,7 +129,12 @@ def sharded_index_specs(
 
 
 def _shard_eval(codes, vectors, use_pq: bool):
-    """The shard-local distance evaluator (PQ/ADC or exact)."""
+    """The shard-local distance evaluator (PQ/ADC or exact).
+
+    Tagged with ``kind``/``table`` like the in-memory evaluators so the fused
+    beam-step kernel can route the shard's table itself (see
+    :class:`repro.core.search.PallasBeamStep`).
+    """
     if use_pq:
         def eval_dists(lut, ids, valid):
             c = codes[ids].astype(jnp.int32)
@@ -138,6 +142,8 @@ def _shard_eval(codes, vectors, use_pq: bool):
             gathered = jax.vmap(lambda row: lut[jnp.arange(m), row])(c)
             return gathered.sum(axis=-1)
 
+        eval_dists.kind = "pq"
+        eval_dists.table = codes
         return eval_dists
 
     def eval_dists(q, ids, valid):
@@ -145,6 +151,8 @@ def _shard_eval(codes, vectors, use_pq: bool):
         diff = vecs - q[None, :]
         return jnp.sum(diff * diff, axis=-1)
 
+    eval_dists.kind = "exact"
+    eval_dists.table = vectors
     return eval_dists
 
 
@@ -254,6 +262,7 @@ def _local_search(
     beam_budget: search_mod.AdaptiveBeamBudget | None = None,
     bucket_ceilings: tuple[int, ...] | None = None,
     lam=None, l_min=None,
+    step_kernel: str | None = None,
 ):
     """Per-shard search over the local sub-graph. Returns (d2, local_ids)
     each (Q, k).
@@ -284,12 +293,6 @@ def _local_search(
     eval_dists = _shard_eval(codes, vectors, use_pq)
     ctxs = _shard_ctxs(centroids, queries, use_pq)
 
-    run = functools.partial(
-        search_mod._search_one,
-        adj=adj, entry=entry, eval_dists=eval_dists,
-        n=n_local, beam_width=beam_width, max_hops=max_hops,
-    )
-
     def chunk_fn(args):
         ctx_chunk, q_chunk = args
         if beam_budget is not None:
@@ -298,9 +301,11 @@ def _local_search(
             beam_ids, beam_d, _, _ = search_mod.adaptive_search_batch(
                 ctx_chunk, adj, entry, eval_dists, n_local, beam_budget,
                 max_hops=max_hops, bucket_ceilings=bucket_ceilings,
-                lam=lam, l_min=l_min)
+                lam=lam, l_min=l_min, step_kernel=step_kernel)
         else:
-            beam_ids, beam_d, _ = jax.vmap(run)(ctx_chunk)
+            beam_ids, beam_d, _ = search_mod.fixed_search_batch(
+                ctx_chunk, adj, entry, eval_dists, n_local, beam_width,
+                max_hops, step_kernel=step_kernel)
         d2, ids = _local_rerank(beam_ids, vectors, q_chunk, k)
         return d2, ids
 
@@ -324,6 +329,7 @@ def make_distributed_search(
     beam_budget: search_mod.AdaptiveBeamBudget | None = None,
     budget_buckets: int | None = None,
     per_shard_laws: bool = False,
+    step_kernel: str | None = None,
 ):
     """Builds the jit-able *monolithic* sharded search step for ``mesh``.
 
@@ -386,7 +392,7 @@ def make_distributed_search(
                 beam_width=beam_width, max_hops=max_hops, k=k,
                 query_chunk=query_chunk, use_pq=use_pq,
                 beam_budget=beam_budget, bucket_ceilings=bucket_ceilings,
-                lam=lam_l, l_min=l_min_l,
+                lam=lam_l, l_min=l_min_l, step_kernel=step_kernel,
             )
             return _hedged_merge(d2, ids, ok_l, mesh, axes, merge)
 
@@ -418,6 +424,7 @@ def make_distributed_probe(
     use_pq: bool = True,
     budget_buckets: int | None = None,
     per_shard_laws: bool = False,
+    step_kernel: str | None = None,
 ):
     """The probe half of the staged distributed step.
 
@@ -476,7 +483,8 @@ def make_distributed_probe(
             def chunk_fn(ctx_chunk):
                 st, budgets, hop_limits, q_lid = search_mod.adaptive_probe_batch(
                     ctx_chunk, adj_l, entry, eval_dists, n_local, budget_cfg,
-                    max_hops=max_hops, lam=lam_l, l_min=l_min_l)
+                    max_hops=max_hops, lam=lam_l, l_min=l_min_l,
+                    step_kernel=step_kernel)
                 if bucket_ceilings is not None:
                     _, budgets = search_mod.quantize_budgets(
                         budgets, bucket_ceilings)
@@ -527,6 +535,7 @@ def make_distributed_continue(
     k: int,
     use_pq: bool = True,
     merge: str = "hierarchical",
+    step_kernel: str | None = None,
 ):
     """The continue half of the staged distributed step.
 
@@ -558,7 +567,7 @@ def make_distributed_continue(
             eval_dists = _shard_eval(codes_l, vectors_l, use_pq)
             beam_ids, beam_d, hops, evals = search_mod.adaptive_continue_batch(
                 walk, ctx, adj_l, eval_dists, budget_cfg,
-                budgets_l[:, 0], hop_limits_l[:, 0])
+                budgets_l[:, 0], hop_limits_l[:, 0], step_kernel=step_kernel)
             d2, ids = _local_rerank(beam_ids, vectors_l, queries_l, k)
             d2, sid, lid = _hedged_merge(d2, ids, ok_l, mesh, axes, merge)
             live_hops = jax.lax.psum(jnp.where(ok_l[0], hops, 0), axes)

@@ -162,13 +162,14 @@ def search_tiered(
     k: int = 10,
     max_hops: int = 2048,
     rerank: bool = True,
+    step_kernel: str | None = None,
 ) -> tuple[Array, Array, search_mod.SearchStats]:
     """PQ-routed beam search with slow-tier rerank (the deployed path)."""
     luts = _query_luts(index, queries)
     return search_mod.beam_search_pq(
         index.codes, luts, index.vectors, index.graph.adj, queries,
         index.graph.entry, beam_width=beam_width, max_hops=max_hops,
-        k=k, rerank=rerank,
+        k=k, rerank=rerank, step_kernel=step_kernel,
     )
 
 
@@ -179,6 +180,7 @@ def search_tiered_adaptive(
     k: int = 10,
     rerank: bool = True,
     num_buckets: int | None = None,
+    step_kernel: str | None = None,
 ) -> tuple[Array, Array, search_mod.SearchStats, search_mod.AdaptiveStats]:
     """Per-query adaptive-beam serving path (Prop. 4.2 in the engine).
 
@@ -197,7 +199,7 @@ def search_tiered_adaptive(
     return search_mod.beam_search_pq_adaptive(
         index.codes, luts, index.vectors, index.graph.adj, queries,
         index.graph.entry, budget_cfg=budget_cfg, k=k, rerank=rerank,
-        num_buckets=num_buckets,
+        num_buckets=num_buckets, step_kernel=step_kernel,
     )
 
 

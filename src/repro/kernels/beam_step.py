@@ -1,0 +1,258 @@
+"""Fused beam-step Pallas kernel — one launch per hop of the graph walk.
+
+The serving hot loop's per-hop body (frontier select -> adjacency-row fetch ->
+neighbor distance evaluation -> beam top-k merge -> visited-bitmap
+test/update) otherwise lowers to a chain of separate XLA HLOs per hop; this
+kernel fuses the whole hop into one ``pallas_call`` with the per-query beam
+state resident in VMEM.  Grid = one program per query lane; the graph
+adjacency and the distance table (full-precision rows or PQ codes) stay in
+``ANY`` memory (HBM at scale) and are pulled row-by-row with explicit async
+copies — the TPU expression of DiskANN's pointer-chasing gather, and exactly
+the per-distance-call launch overhead CRouting identifies as the dominant
+cost of graph walks.
+
+Two static distance variants (the same two evaluators the reference walk
+closes over):
+
+* ``kind="exact"`` — ``table`` is (N, D) vectors; squared L2 against the
+  query context (1, D).
+* ``kind="pq"``    — ``table`` is (N, M) uint8 codes; ADC lookup against the
+  per-query LUT context (1, M, K).
+
+Bit-exactness contract: every arithmetic expression below is copied from the
+reference hop body (``repro.core.search``) and runs on identical values, so
+interpret-mode results are bit-identical to the reference walk — the
+engine-parity kernel axis asserts this end to end.  The one structural
+substitution is the beam merge: the reference's stable
+``argsort(cat_d)[:L]`` becomes an L-round masked-argmin selection loop
+(argsort does not lower on the TPU vector unit).  The two are bitwise equal
+under the walk's state invariant — a beam/candidate entry has ``d == inf``
+iff its id is INVALID (payload (INVALID, inf, False)) — because finite keys
+tie-break lowest-index-first in both, and once only inf keys remain the
+emitted payload is forced to the shared (INVALID, inf, False).
+
+Lane freezing: a converged/hop-capped lane writes its state back unchanged
+(the same select-masking XLA applies to a vmapped ``while_loop``), so a
+batch-level while over fused steps retires lanes exactly like the reference's
+per-lane loops.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.experimental.pallas as pl
+import jax.numpy as jnp
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+INVALID = -1
+
+
+def _select_merge(cat_ids, cat_d, cat_exp, beam_width: int):
+    """Keep-best-L merge as a selection loop (TPU-lowerable argsort stand-in).
+
+    Bitwise equal to ``argsort(cat_d, stable)[:beam_width]`` gathers under
+    the invariant that every inf-keyed entry carries the identical payload
+    (INVALID, inf, False): finite keys pick lowest-index-first in both, and
+    the all-inf tail emits that shared payload explicitly.
+    """
+    total = cat_d.shape[0]
+
+    def select(i, carry):
+        out_ids, out_d, out_exp, taken = carry
+        key = jnp.where(taken, jnp.inf, cat_d)
+        p = jnp.argmin(key)
+        exhausted = jnp.isinf(key[p])
+        out_ids = out_ids.at[i].set(
+            jnp.where(exhausted, INVALID, cat_ids[p]))
+        out_d = out_d.at[i].set(jnp.where(exhausted, jnp.inf, cat_d[p]))
+        out_exp = out_exp.at[i].set(cat_exp[p] & (~exhausted))
+        return out_ids, out_d, out_exp, taken.at[p].set(True)
+
+    init = (jnp.zeros((beam_width,), jnp.int32),
+            jnp.zeros((beam_width,), jnp.float32),
+            jnp.zeros((beam_width,), bool),
+            jnp.zeros((total,), bool))
+    out_ids, out_d, out_exp, _ = jax.lax.fori_loop(
+        0, beam_width, select, init)
+    return out_ids, out_d, out_exp
+
+
+def _beam_step_kernel(
+    # per-query inputs (VMEM blocks / SMEM scalars)
+    ids_ref, d_ref, exp_ref, vis_ref, hops_ref, evals_ref, bud_ref, hl_ref,
+    ctx_ref,
+    # whole-array inputs (ANY memory; fetched by DMA)
+    adj_ref, table_ref,
+    # outputs (same per-query layout as the inputs)
+    o_ids, o_d, o_exp, o_vis, o_hops, o_evals,
+    # scratch
+    nbrs_s, rows_s, adj_sem, row_sem,
+    *, kind: str, beam_width: int, degree: int,
+):
+    beam_ids = ids_ref[...]      # (1, L)
+    beam_d = d_ref[...]          # (1, L)
+    beam_exp = exp_ref[...]      # (1, L)
+    visited = vis_ref[...]       # (1, NW)
+    hops = hops_ref[0]
+    evals = evals_ref[0]
+    budget = bud_ref[0]
+    hop_limit = hl_ref[0]
+
+    slot = jax.lax.broadcasted_iota(jnp.int32, (1, beam_width), 1)
+    in_budget = slot < budget
+    frontier_open = jnp.any(
+        (~beam_exp) & (beam_ids != INVALID) & in_budget)
+    # Lane-freeze predicate: identical to the reference loop's cond, so an
+    # inactive lane writes its state back unchanged.
+    active = (hops < hop_limit) & frontier_open
+
+    # --- frontier select (reference expressions, verbatim) ----------------
+    cand_d = jnp.where(
+        beam_exp | (beam_ids == INVALID) | (~in_budget), jnp.inf, beam_d)
+    j = jnp.argmin(cand_d[0])
+    u = beam_ids[0, j]
+    new_exp = beam_exp.at[0, j].set(True)
+
+    # --- adjacency row fetch (one DMA; inactive lanes fetch row 0) --------
+    u_safe = jnp.maximum(u, 0)
+    adj_cp = pltpu.make_async_copy(adj_ref.at[u_safe], nbrs_s, adj_sem)
+    adj_cp.start()
+    adj_cp.wait()
+    nbrs = nbrs_s[...][None, :]                    # (1, R)
+
+    valid = (nbrs != INVALID) & (u != INVALID)
+    safe = jnp.maximum(nbrs, 0)
+    word_idx = safe >> 5
+    bit = jnp.uint32(1) << (safe.astype(jnp.uint32) & 31)
+    seen = (visited[0][word_idx[0]] & bit[0]) != 0
+    valid = valid & (~seen)[None, :]
+
+    # --- neighbor row gather (R row DMAs into VMEM scratch) ---------------
+    def fetch(r, carry):
+        row_cp = pltpu.make_async_copy(
+            table_ref.at[safe[0, r]], rows_s.at[r], row_sem)
+        row_cp.start()
+        row_cp.wait()
+        return carry
+
+    jax.lax.fori_loop(0, degree, fetch, 0)
+    rows = rows_s[...]                             # (R, D) or (R, M)
+
+    # --- distance evaluation (the reference evaluators' expressions) ------
+    if kind == "pq":
+        lut = ctx_ref[...][0]                      # (M, K)
+        c = rows.astype(jnp.int32)                 # (R, M)
+        m = lut.shape[0]
+        gathered = jax.vmap(lambda row: lut[jnp.arange(m), row])(c)
+        d = gathered.sum(axis=-1)                  # (R,)
+    else:
+        qv = ctx_ref[...][0]                       # (D,)
+        vecs = rows.astype(jnp.float32)
+        diff = vecs - qv[None, :]
+        d = jnp.sum(diff * diff, axis=-1)          # (R,)
+    d = jnp.where(valid[0], d, jnp.inf)
+
+    # Distinct ids set distinct bits, so scatter-add implements the OR.
+    new_visited = visited[0].at[word_idx[0]].add(
+        jnp.where(valid[0], bit[0], jnp.uint32(0)))[None, :]
+
+    nbr_ids = jnp.where(valid[0], nbrs[0], INVALID)
+
+    # --- beam top-k merge --------------------------------------------------
+    cat_ids = jnp.concatenate([beam_ids[0], nbr_ids])
+    cat_d = jnp.concatenate([beam_d[0], d])
+    cat_exp = jnp.concatenate(
+        [new_exp[0], jnp.zeros((degree,), dtype=bool)])
+    m_ids, m_d, m_exp = _select_merge(cat_ids, cat_d, cat_exp, beam_width)
+
+    # --- write-back with lane freezing ------------------------------------
+    o_ids[...] = jnp.where(active, m_ids[None, :], beam_ids)
+    o_d[...] = jnp.where(active, m_d[None, :], beam_d)
+    o_exp[...] = jnp.where(active, m_exp[None, :], beam_exp)
+    o_vis[...] = jnp.where(active, new_visited, visited)
+    o_hops[0] = jnp.where(active, hops + 1, hops)
+    o_evals[0] = jnp.where(active, evals + valid[0].sum(), evals)
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "interpret"))
+def beam_step(
+    state,
+    ctxs: Array,
+    adj: Array,
+    table: Array,
+    budgets: Array,
+    hop_limits: Array,
+    *,
+    kind: str,
+    interpret: bool = False,
+):
+    """Advance every lane of a batched walk state by one fused hop.
+
+    state: (beam_ids (Q, L) i32, beam_d (Q, L) f32, beam_exp (Q, L) bool,
+    visited (Q, ceil(N/32)) u32, hops (Q,) i32, evals (Q,) i32) — the walk
+    state of :mod:`repro.core.search`.  ``ctxs`` is (Q, D) queries
+    (``kind="exact"``) or (Q, M, K) ADC LUTs (``kind="pq"``); ``table`` the
+    matching (N, D) vectors / (N, M) uint8 codes; ``budgets``/``hop_limits``
+    (Q,) i32.  Returns the post-hop state; lanes whose frontier is closed or
+    hop limit reached pass through unchanged.
+    """
+    assert kind in ("exact", "pq"), kind
+    beam_ids, beam_d, beam_exp, visited, hops, evals = state
+    q, beam_width = beam_ids.shape
+    nw = visited.shape[1]
+    degree = adj.shape[1]
+
+    if kind == "pq":
+        ctx_spec = pl.BlockSpec((1,) + ctxs.shape[1:], lambda i: (i, 0, 0))
+    else:
+        ctx_spec = pl.BlockSpec((1, ctxs.shape[1]), lambda i: (i, 0))
+    lane = lambda i: (i, 0)
+    scalar = lambda i: (i,)
+    smem = functools.partial(pl.BlockSpec, memory_space=pltpu.SMEM)
+
+    out = pl.pallas_call(
+        functools.partial(_beam_step_kernel, kind=kind,
+                          beam_width=beam_width, degree=degree),
+        grid=(q,),
+        in_specs=[
+            pl.BlockSpec((1, beam_width), lane),
+            pl.BlockSpec((1, beam_width), lane),
+            pl.BlockSpec((1, beam_width), lane),
+            pl.BlockSpec((1, nw), lane),
+            smem((1,), scalar),        # hops
+            smem((1,), scalar),        # evals
+            smem((1,), scalar),        # budgets
+            smem((1,), scalar),        # hop_limits
+            ctx_spec,
+            pl.BlockSpec(memory_space=pltpu.ANY),   # adj
+            pl.BlockSpec(memory_space=pltpu.ANY),   # table
+        ],
+        out_specs=[
+            pl.BlockSpec((1, beam_width), lane),
+            pl.BlockSpec((1, beam_width), lane),
+            pl.BlockSpec((1, beam_width), lane),
+            pl.BlockSpec((1, nw), lane),
+            smem((1,), scalar),
+            smem((1,), scalar),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q, beam_width), jnp.int32),
+            jax.ShapeDtypeStruct((q, beam_width), jnp.float32),
+            jax.ShapeDtypeStruct((q, beam_width), jnp.bool_),
+            jax.ShapeDtypeStruct((q, nw), jnp.uint32),
+            jax.ShapeDtypeStruct((q,), jnp.int32),
+            jax.ShapeDtypeStruct((q,), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((degree,), jnp.int32),
+            pltpu.VMEM((degree,) + table.shape[1:], table.dtype),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+        interpret=interpret,
+    )(beam_ids, beam_d, beam_exp, visited, hops, evals,
+      budgets.astype(jnp.int32), hop_limits.astype(jnp.int32), ctxs,
+      adj, table)
+    return tuple(out)

@@ -1,19 +1,29 @@
 """Jit'd public wrappers for the Pallas kernels.
 
-Dispatch policy: on a TPU backend the Pallas kernels run compiled; on any
-other backend (this CPU container, tests) the wrapper either runs the kernel
-in interpret mode (``REPRO_PALLAS_INTERPRET=1``, bit-faithful to the kernel
-body) or falls back to the jnp oracle in :mod:`repro.kernels.ref` (fast, same
-semantics). Libraries call these wrappers only — never pallas_call directly —
-so the integration point is uniform across hardware.
+Dispatch policy (one shared :func:`resolve_impl`, used by every wrapper):
+
+1. ``REPRO_PALLAS_INTERPRET=1`` -> ``"interpret"`` — the Pallas kernel body
+   runs in interpret mode, bit-faithful to the compiled kernel, on *any*
+   backend.  The env var wins everywhere, TPU included, so a suspect kernel
+   can be pinned to interpret semantics in production triage.
+2. TPU backend -> ``"pallas"`` — the kernel runs compiled.
+3. otherwise -> ``"ref"`` — the jnp oracle in :mod:`repro.kernels.ref`
+   (fast on CPU, same semantics).
+
+Libraries call these wrappers only — never pallas_call directly — so the
+integration point is uniform across hardware.  :func:`beam_step` additionally
+takes a ``request`` from the step-kernel layer: ``request="pallas"`` means
+the caller explicitly asked for the fused kernel, so off-TPU it upgrades the
+oracle fallback to interpret mode (bit-identical to the compiled kernel)
+instead of silently handing back the reference walk.
 """
 from __future__ import annotations
 
 import os
 
 import jax
-import jax.numpy as jnp
 
+from repro.kernels import beam_step as _beam
 from repro.kernels import decode_attention as _da
 from repro.kernels import l2_distance as _l2
 from repro.kernels import lid_kernel as _lid
@@ -24,48 +34,51 @@ from repro.kernels import topk as _topk
 Array = jax.Array
 
 
-def _use_pallas() -> bool:
-    return jax.default_backend() == "tpu"
+def resolve_impl() -> str:
+    """Resolve the kernel implementation for this process.
 
-
-def _interpret_requested() -> bool:
-    return os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1"
+    Returns ``"interpret"`` | ``"pallas"`` | ``"ref"``; precedence is
+    interpret-env-var > TPU-compiled > oracle (the env var must win on TPU
+    too — it is the triage/CI switch for running kernel bodies bit-faithfully
+    without the hardware fast path).
+    """
+    if os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1":
+        return "interpret"
+    if jax.default_backend() == "tpu":
+        return "pallas"
+    return "ref"
 
 
 def bulk_l2(q: Array, x: Array) -> Array:
     """(Q, D) x (N, D) -> (Q, N) squared L2 (MXU-tiled on TPU)."""
-    if _use_pallas():
-        return _l2.l2_distance(q, x)
-    if _interpret_requested():
-        return _l2.l2_distance(q, x, interpret=True)
-    return _ref.l2_distance_ref(q, x)
+    impl = resolve_impl()
+    if impl == "ref":
+        return _ref.l2_distance_ref(q, x)
+    return _l2.l2_distance(q, x, interpret=impl == "interpret")
 
 
 def pq_bulk_scan(luts: Array, codes: Array) -> Array:
     """(Q, M, K) x (N, M) -> (Q, N) ADC distances (one-hot-MXU on TPU)."""
-    if _use_pallas():
-        return _pq.pq_scan(luts, codes)
-    if _interpret_requested():
-        return _pq.pq_scan(luts, codes, interpret=True)
-    return jax.vmap(lambda lut: _ref.pq_scan_ref(lut, codes))(luts)
+    impl = resolve_impl()
+    if impl == "ref":
+        return jax.vmap(lambda lut: _ref.pq_scan_ref(lut, codes))(luts)
+    return _pq.pq_scan(luts, codes, interpret=impl == "interpret")
 
 
 def topk(d: Array, k: int) -> tuple[Array, Array]:
     """(Q, N) -> ascending (vals, ids) (tile-select + merge on TPU)."""
-    if _use_pallas():
-        return _topk.topk(d, k)
-    if _interpret_requested():
-        return _topk.topk(d, k, interpret=True)
-    return _ref.topk_ref(d, k)
+    impl = resolve_impl()
+    if impl == "ref":
+        return _ref.topk_ref(d, k)
+    return _topk.topk(d, k, interpret=impl == "interpret")
 
 
 def lid_estimate(knn_d2: Array) -> Array:
     """(B, k) sorted squared k-NN dists -> (B,) Hill LID."""
-    if _use_pallas():
-        return _lid.lid_estimate(knn_d2)
-    if _interpret_requested():
-        return _lid.lid_estimate(knn_d2, interpret=True)
-    return _ref.lid_ref(knn_d2)
+    impl = resolve_impl()
+    if impl == "ref":
+        return _ref.lid_ref(knn_d2)
+    return _lid.lid_estimate(knn_d2, interpret=impl == "interpret")
 
 
 def decode_attention(q: Array, k: Array, v: Array, kv_len: Array) -> Array:
@@ -74,8 +87,26 @@ def decode_attention(q: Array, k: Array, v: Array, kv_len: Array) -> Array:
     The non-TPU path uses the grouped-einsum reference (no KV expansion) so
     a sequence-sharded cache lowers to partial-softmax collectives, not a
     full cache all-gather."""
-    if _use_pallas():
-        return _da.decode_attention(q, k, v, kv_len)
-    if _interpret_requested():
-        return _da.decode_attention(q, k, v, kv_len, interpret=True)
-    return _ref.decode_attention_gqa_ref(q, k, v, kv_len)
+    impl = resolve_impl()
+    if impl == "ref":
+        return _ref.decode_attention_gqa_ref(q, k, v, kv_len)
+    return _da.decode_attention(q, k, v, kv_len, interpret=impl == "interpret")
+
+
+def beam_step(state, ctxs: Array, adj: Array, table: Array, budgets: Array,
+              hop_limits: Array, *, kind: str, request: str = "auto"):
+    """One fused hop of the batched beam walk; see
+    :mod:`repro.kernels.beam_step` for the state layout.
+
+    ``request="pallas"`` (the ``step_kernel="pallas"`` knob) never falls back
+    to the oracle: off-TPU the kernel body runs in interpret mode instead, so
+    "pallas" always means the fused kernel's own arithmetic.
+    """
+    impl = resolve_impl()
+    if impl == "ref" and request == "pallas":
+        impl = "interpret"
+    if impl == "ref":
+        return _ref.beam_step_ref(
+            state, ctxs, adj, table, budgets, hop_limits, kind=kind)
+    return _beam.beam_step(state, ctxs, adj, table, budgets, hop_limits,
+                           kind=kind, interpret=impl == "interpret")

@@ -41,6 +41,75 @@ def lid_ref(knn_d2: Array) -> Array:
     return -1.0 / jnp.minimum(mean_log, -1.0 / 4096.0)
 
 
+def beam_step_ref(state, ctxs, adj, table, budgets, hop_limits, *, kind):
+    """One fused beam-walk hop over a batch of lanes (pure-jnp oracle).
+
+    Semantic ground truth for ``kernels/beam_step.py``: advances every lane
+    of the walk state (beam_ids, beam_d, beam_exp, visited, hops, evals) by
+    one hop — frontier select, adjacency gather, distance eval
+    (``kind="exact"``: ``table`` is (N, D) vectors, ``ctxs`` (Q, D) queries;
+    ``kind="pq"``: ``table`` is (N, M) codes, ``ctxs`` (Q, M, K) ADC LUTs),
+    stable-argsort beam merge, visited-bitmap update — freezing lanes whose
+    frontier is closed or hop limit reached.  Mirrors the reference hop body
+    in :mod:`repro.core.search` expression-for-expression (kept standalone so
+    the kernels package has no core dependency).
+    """
+    assert kind in ("exact", "pq"), kind
+    INVALID = -1
+
+    def one(beam_ids, beam_d, beam_exp, visited, hops, evals, ctx,
+            budget, hop_limit):
+        beam_width = beam_ids.shape[0]
+        in_budget = jnp.arange(beam_width) < budget
+        frontier_open = jnp.any((~beam_exp) & (beam_ids != INVALID) & in_budget)
+        active = (hops < hop_limit) & frontier_open
+
+        cand_d = jnp.where(
+            beam_exp | (beam_ids == INVALID) | (~in_budget), jnp.inf, beam_d)
+        j = jnp.argmin(cand_d)
+        u = beam_ids[j]
+        new_exp = beam_exp.at[j].set(True)
+
+        nbrs = adj[jnp.maximum(u, 0)]
+        valid = (nbrs != INVALID) & (u != INVALID)
+        safe = jnp.maximum(nbrs, 0)
+        word_idx = safe >> 5
+        bit = jnp.uint32(1) << (safe.astype(jnp.uint32) & 31)
+        seen = (visited[word_idx] & bit) != 0
+        valid = valid & (~seen)
+
+        if kind == "pq":
+            c = table[safe].astype(jnp.int32)
+            m = ctx.shape[0]
+            gathered = jax.vmap(lambda row: ctx[jnp.arange(m), row])(c)
+            d = gathered.sum(axis=-1)
+        else:
+            vecs = table[safe].astype(jnp.float32)
+            diff = vecs - ctx[None, :]
+            d = jnp.sum(diff * diff, axis=-1)
+        d = jnp.where(valid, d, jnp.inf)
+        new_visited = visited.at[word_idx].add(jnp.where(valid, bit, 0))
+
+        nbr_ids = jnp.where(valid, nbrs, INVALID)
+        cat_ids = jnp.concatenate([beam_ids, nbr_ids])
+        cat_d = jnp.concatenate([beam_d, d])
+        cat_exp = jnp.concatenate([new_exp, jnp.zeros(nbrs.shape, dtype=bool)])
+        order = jnp.argsort(cat_d)[:beam_width]
+        m_ids, m_d, m_exp = cat_ids[order], cat_d[order], cat_exp[order]
+
+        return (jnp.where(active, m_ids, beam_ids),
+                jnp.where(active, m_d, beam_d),
+                jnp.where(active, m_exp, beam_exp),
+                jnp.where(active, new_visited, visited),
+                jnp.where(active, hops + 1, hops),
+                jnp.where(active, evals + valid.sum(), evals))
+
+    q = state[0].shape[0]
+    budgets = jnp.broadcast_to(budgets, (q,)).astype(jnp.int32)
+    hop_limits = jnp.broadcast_to(hop_limits, (q,)).astype(jnp.int32)
+    return jax.vmap(one)(*state, ctxs, budgets, hop_limits)
+
+
 def decode_attention_gqa_ref(
     q: Array, k: Array, v: Array, kv_len: Array | None = None
 ) -> Array:

@@ -5,7 +5,7 @@ I/O per query, modelled SSD latency).
 
     PYTHONPATH=src python -m repro.launch.serve --dataset tiny-mixture \
         --beam 48 --batch 64 --num-batches 20 [--index PATH] [--online] \
-        [--disk PATH] [--distributed N] \
+        [--disk PATH] [--distributed N] [--kernel reference|pallas|auto] \
         [--adaptive [--l-min 16] [--l-max 64] [--lam 0.35] [--buckets auto] \
          [--pipeline] [--calibrate [--joint | --per-shard] \
           [--recall-target 0.95]]]
@@ -93,7 +93,7 @@ def _distributed_engine(args, x, queries, budget_cfg, num_buckets):
         mesh, arrays, beam_width=args.beam, max_hops=2048, k=args.k,
         query_chunk=args.batch, beam_budget=budget_cfg,
         budget_buckets=(4 if budget_cfg is not None else None),
-        shard_laws=shard_laws)
+        shard_laws=shard_laws, step_kernel=args.kernel)
     engine = serving.SearchEngine(backend, budget_cfg, k=args.k,
                                   num_buckets=num_buckets)
     return engine, x[: per * n_shards]
@@ -158,6 +158,13 @@ def main() -> None:
                     help="shard over N virtual host devices and serve "
                          "scatter-gather (staged at engine parity with "
                          "--adaptive)")
+    ap.add_argument("--kernel", default="auto",
+                    choices=("reference", "pallas", "auto"),
+                    help="beam-walk hop implementation: the reference hop "
+                         "chain, the fused Pallas beam step (interpret mode "
+                         "off-TPU), or auto (fused on TPU / under "
+                         "REPRO_PALLAS_INTERPRET=1, reference otherwise; "
+                         "default) — bit-identical results either way")
     args = ap.parse_args()
     num_buckets = args.buckets
     if not args.adaptive and (args.calibrate or args.pipeline
@@ -242,7 +249,8 @@ def main() -> None:
             print(f"[serve] disk slow tier: n={slow_tier.store.n} "
                   f"block={slow_tier.store.block_size}B "
                   f"pinned={slow_tier.stats()['pinned_nodes']}")
-        backend = serving.TieredBackend(index, slow_tier=slow_tier)
+        backend = serving.TieredBackend(index, slow_tier=slow_tier,
+                                        step_kernel=args.kernel)
         if args.adaptive:
             engine = serving.SearchEngine(backend, budget_cfg, k=args.k,
                                           num_buckets=num_buckets)

@@ -133,25 +133,35 @@ class ExactBackend(_StagedRerankMixin):
 
     staged = True
 
-    def __init__(self, x: Array, adj: Array, entry: Array):
+    def __init__(self, x: Array, adj: Array, entry: Array,
+                 step_kernel: str | None = None):
+        self.step_kernel = step_kernel
         self.update(x, adj, entry)
 
     def update(self, x: Array, adj: Array, entry: Array) -> None:
         """Swap the index arrays in place (Online-MCGI refresh path)."""
         self.x, self.adj, self.entry = x, adj, entry
 
+    def set_step_kernel(self, step_kernel: str | None) -> None:
+        """Select the walk's hop implementation ("reference" | "pallas" |
+        "auto"); a static jit key, so switching recompiles but never rebuilds
+        the backend."""
+        self.step_kernel = step_kernel
+
     def admit(self, queries: Array) -> Array:
         return jnp.asarray(queries)
 
     def probe(self, ctxs, budget_cfg):
         return search_mod._probe_exact_jit(
-            self.x, self.adj, ctxs, self.entry, budget_cfg)
+            self.x, self.adj, ctxs, self.entry, budget_cfg,
+            step_kernel=self.step_kernel)
 
     def continue_fn(self, budget_cfg):
         import functools
 
         return functools.partial(search_mod._continue_exact_jit, self.x,
-                                 self.adj, budget_cfg=budget_cfg)
+                                 self.adj, budget_cfg=budget_cfg,
+                                 step_kernel=self.step_kernel)
 
     def rerank(self, beam_ids, beam_d, queries, k: int, prefetch=None):
         return beam_ids[:, :k], beam_d[:, :k]
@@ -159,7 +169,7 @@ class ExactBackend(_StagedRerankMixin):
     def fixed(self, queries, *, beam_width: int, max_hops: int, k: int):
         ids, d2, stats = search_mod.beam_search_exact(
             self.x, self.adj, queries, self.entry, beam_width=beam_width,
-            max_hops=max_hops, k=k)
+            max_hops=max_hops, k=k, step_kernel=self.step_kernel)
         return ids, d2, stats, None
 
     def recall_eval(self, queries, gt_ids, *, k, sample, seed, base_cfg):
@@ -189,10 +199,17 @@ class TieredBackend(_StagedRerankMixin):
 
     _UNSET = object()
 
-    def __init__(self, index, rerank: bool = True, slow_tier=None):
+    def __init__(self, index, rerank: bool = True, slow_tier=None,
+                 step_kernel: str | None = None):
         self.do_rerank = rerank
         self.slow_tier = None
+        self.step_kernel = step_kernel
         self.update(index, slow_tier=slow_tier)
+
+    def set_step_kernel(self, step_kernel: str | None) -> None:
+        """Select the walk's hop implementation (see
+        :meth:`ExactBackend.set_step_kernel`)."""
+        self.step_kernel = step_kernel
 
     def update(self, index, slow_tier=_UNSET) -> None:
         """Swap the tiered index (and the slow tier) in place (Online-MCGI
@@ -227,14 +244,16 @@ class TieredBackend(_StagedRerankMixin):
     def probe(self, ctxs, budget_cfg):
         return search_mod._probe_pq_jit(
             self.index.codes, self.index.graph.adj, ctxs,
-            self.index.graph.entry, budget_cfg)
+            self.index.graph.entry, budget_cfg,
+            step_kernel=self.step_kernel)
 
     def continue_fn(self, budget_cfg):
         import functools
 
         return functools.partial(
             search_mod._continue_pq_jit, self.index.codes,
-            self.index.graph.adj, budget_cfg=budget_cfg)
+            self.index.graph.adj, budget_cfg=budget_cfg,
+            step_kernel=self.step_kernel)
 
     def prefetch_rerank(self, parts):
         """Submit the slow-tier block fetch for gathered continue ``parts``
@@ -271,13 +290,14 @@ class TieredBackend(_StagedRerankMixin):
             # dispatch has no later stage to hide the fetch behind).
             beam_ids, _beam_d, stats = search_tiered(
                 self.index, queries, beam_width=beam_width,
-                max_hops=max_hops, k=beam_width, rerank=False)
+                max_hops=max_hops, k=beam_width, rerank=False,
+                step_kernel=self.step_kernel)
             ids, d2 = rerank_with_slow_tier(
                 self.slow_tier, np.asarray(beam_ids), queries, k)
             return ids, d2, stats, None
         ids, d2, stats = search_tiered(
             self.index, queries, beam_width=beam_width, max_hops=max_hops,
-            k=k, rerank=self.do_rerank)
+            k=k, rerank=self.do_rerank, step_kernel=self.step_kernel)
         return ids, d2, stats, None
 
     def recall_eval(self, queries, gt_ids, *, k, sample, seed, base_cfg):
@@ -317,7 +337,8 @@ class DistributedBackend:
     def __init__(self, mesh, arrays: dict, *, beam_width: int, max_hops: int,
                  k: int, query_chunk: int = 128, use_pq: bool = True,
                  beam_budget=None, budget_buckets: int | None = None,
-                 shard_ok=None, shard_laws=None, merge: str = "hierarchical"):
+                 shard_ok=None, shard_laws=None, merge: str = "hierarchical",
+                 step_kernel: str | None = None):
         from repro.distributed import sharded_search as ss
 
         self.mesh = mesh
@@ -334,29 +355,56 @@ class DistributedBackend:
         if shard_laws is not None:
             self.shard_laws = (jnp.asarray(shard_laws[0], jnp.float32),
                                jnp.asarray(shard_laws[1], jnp.int32))
-        # jit the monolithic step: the builder returns a raw traceable (what
-        # cells.py lowers); serving it eagerly would retrace per call.
-        self.step = jax.jit(ss.make_distributed_search(
-            mesh, beam_width=beam_width, max_hops=max_hops, k=k,
-            query_chunk=query_chunk, use_pq=use_pq, beam_budget=beam_budget,
-            budget_buckets=budget_buckets, merge=merge,
-            per_shard_laws=self.shard_laws is not None))
+        self._build_kw = dict(
+            beam_width=beam_width, max_hops=max_hops, k=k,
+            query_chunk=query_chunk, use_pq=use_pq,
+            budget_buckets=budget_buckets, merge=merge)
+        self.step_kernel = step_kernel
         # One more bucket costs one more *whole-mesh* program (n_shards
         # shard walks + merge collectives + the checkpoint-state gather),
         # not one more single-host kernel launch: scale the scheduler's
         # modelled launch cost accordingly so the bucket DP only splits a
         # batch when the lane-hop savings clear the real dispatch price.
         self.launch_cost_hops = pipe.BUCKET_LAUNCH_COST_HOPS * n_shards
+        self._build_programs()
+
+    def _build_programs(self) -> None:
+        """(Re)jit the mesh programs against the current ``step_kernel``.
+
+        The step kernel is a builder-time knob of the shard walk, so the
+        jitted monolithic/probe/continue programs are rebuilt when it
+        changes; the jit wrappers are fresh objects, so stale-kernel
+        programs can't be served from a cache."""
+        from repro.distributed import sharded_search as ss
+
+        kw = self._build_kw
+        # jit the monolithic step: the builder returns a raw traceable (what
+        # cells.py lowers); serving it eagerly would retrace per call.
+        self.step = jax.jit(ss.make_distributed_search(
+            self.mesh, beam_width=kw["beam_width"], max_hops=kw["max_hops"],
+            k=kw["k"], query_chunk=kw["query_chunk"], use_pq=kw["use_pq"],
+            beam_budget=self.beam_budget,
+            budget_buckets=kw["budget_buckets"], merge=kw["merge"],
+            per_shard_laws=self.shard_laws is not None,
+            step_kernel=self.step_kernel))
         self._probe_step = self._continue_step = None
-        if beam_budget is not None:
+        if self.beam_budget is not None:
             self._probe_step = jax.jit(ss.make_distributed_probe(
-                mesh, budget_cfg=beam_budget, max_hops=max_hops,
-                query_chunk=query_chunk, use_pq=use_pq,
-                budget_buckets=budget_buckets,
-                per_shard_laws=self.shard_laws is not None))
+                self.mesh, budget_cfg=self.beam_budget,
+                max_hops=kw["max_hops"], query_chunk=kw["query_chunk"],
+                use_pq=kw["use_pq"], budget_buckets=kw["budget_buckets"],
+                per_shard_laws=self.shard_laws is not None,
+                step_kernel=self.step_kernel))
             self._continue_step = jax.jit(ss.make_distributed_continue(
-                mesh, budget_cfg=beam_budget, k=k, use_pq=use_pq,
-                merge=merge))
+                self.mesh, budget_cfg=self.beam_budget, k=kw["k"],
+                use_pq=kw["use_pq"], merge=kw["merge"],
+                step_kernel=self.step_kernel))
+
+    def set_step_kernel(self, step_kernel: str | None) -> None:
+        """Select the shard walk's hop implementation ("reference" |
+        "pallas" | "auto") and rebuild the jitted mesh programs."""
+        self.step_kernel = step_kernel
+        self._build_programs()
 
     @property
     def staged(self) -> bool:
@@ -367,7 +415,8 @@ class DistributedBackend:
     def make_step(mesh, *, beam_width: int, max_hops: int, k: int,
                   query_chunk: int = 128, use_pq: bool = True,
                   beam_budget=None, budget_buckets: int | None = None,
-                  per_shard_laws: bool = False):
+                  per_shard_laws: bool = False,
+                  step_kernel: str | None = None):
         """The raw jit-able sharded step — what launch/cells.py lowers for
         the dry-run (same builder the live backend runs)."""
         from repro.distributed import sharded_search as ss
@@ -375,7 +424,8 @@ class DistributedBackend:
         return ss.make_distributed_search(
             mesh, beam_width=beam_width, max_hops=max_hops, k=k,
             query_chunk=query_chunk, use_pq=use_pq, beam_budget=beam_budget,
-            budget_buckets=budget_buckets, per_shard_laws=per_shard_laws)
+            budget_buckets=budget_buckets, per_shard_laws=per_shard_laws,
+            step_kernel=step_kernel)
 
     def set_shard_ok(self, shard_ok) -> None:
         """Runtime straggler/fault mask — no recompilation.  Consumed at
@@ -487,6 +537,12 @@ class SearchEngine:
     the historical fixed family; ``None``/1 disables bucketing (single
     continue program).  Scheduling never changes results.
 
+    ``step_kernel`` ("reference" | "pallas" | "auto") selects the walk's hop
+    implementation on the backend (``backend.set_step_kernel``): the
+    reference hop chain or the fused Pallas beam step
+    (:mod:`repro.kernels.beam_step`) — bit-identical results either way
+    (the engine-parity kernel axis asserts it per backend and variant).
+
     ``search`` serves one batch, unpipelined.  ``search_batches`` serves a
     stream with double buffering: batch i+1's admission + probe are
     *dispatched* before batch i's bucketing/continue are *collected*, so the
@@ -517,8 +573,13 @@ class SearchEngine:
     def __init__(self, backend, budget_cfg=None, *, k: int = 10,
                  beam_width: int = 48, max_hops: int = 2048,
                  num_buckets: int | str | None = "auto",
-                 pad_quantum: int = 4, coalesce_lanes: int | None = None):
+                 pad_quantum: int = 4, coalesce_lanes: int | None = None,
+                 step_kernel: str | None = None):
         self.backend = backend
+        if step_kernel is not None:
+            # The knob lives on the backend (it keys the jitted walk
+            # programs); the engine-level parameter is pure convenience.
+            backend.set_step_kernel(step_kernel)
         self.budget_cfg = budget_cfg
         self.k = k
         self.beam_width = beam_width

@@ -109,34 +109,38 @@ def built_disk_tier():
         pinned_ids=entry_proximal_ids(idx.adj, idx.entry, limit=64))
 
 
-def _make_backend(variant: str, budget, shard_laws=None):
+def _make_backend(variant: str, budget, shard_laws=None, step_kernel=None):
     if variant == "dist":
         mesh, arrays, _per, _q, _gt = built_dist()
         return serving.DistributedBackend(
             mesh, arrays, beam_width=budget.l_max, max_hops=96, k=10,
             query_chunk=DIST_CHUNK, beam_budget=budget, budget_buckets=4,
-            shard_laws=shard_laws)
+            shard_laws=shard_laws, step_kernel=step_kernel)
     x, _, _, idx, tiered = built()
     if variant == "exact":
-        return serving.ExactBackend(x, idx.adj, idx.entry)
+        return serving.ExactBackend(x, idx.adj, idx.entry,
+                                    step_kernel=step_kernel)
     if variant == "pq":
-        return serving.TieredBackend(tiered, rerank=False)
+        return serving.TieredBackend(tiered, rerank=False,
+                                     step_kernel=step_kernel)
     if variant == "disk":
-        return serving.TieredBackend(tiered, slow_tier=built_disk_tier())
+        return serving.TieredBackend(tiered, slow_tier=built_disk_tier(),
+                                     step_kernel=step_kernel)
     assert variant == "tiered", variant
-    return serving.TieredBackend(tiered)
+    return serving.TieredBackend(tiered, step_kernel=step_kernel)
 
 
 @functools.lru_cache(maxsize=64)
 def engine(variant: str, num_buckets="auto", budget=BUDGET,
-           coalesce_lanes=None, staged: bool = True):
+           coalesce_lanes=None, staged: bool = True, step_kernel=None):
     """A cached engine per configuration (jit caches live on the backend's
     compiled programs, so reuse matters for test wall-clock).  ``staged``
     only matters for the distributed backend: False serves the monolithic
-    one-program step through the same engine API."""
+    one-program step through the same engine API.  ``step_kernel`` selects
+    the walk's hop implementation (the engine-parity kernel axis)."""
     if variant == "dist" and budget is BUDGET:
         budget = BUDGET_DIST
-    backend = _make_backend(variant, budget)
+    backend = _make_backend(variant, budget, step_kernel=step_kernel)
     return serving.SearchEngine(backend, budget if staged else None, k=10,
                                 num_buckets=num_buckets,
                                 coalesce_lanes=coalesce_lanes)

@@ -312,6 +312,101 @@ def test_disk_engine_surfaces_cache_stats():
     assert st["blocks_read"] >= 0 and st["measured_read_us"] >= 0.0
 
 
+# ------------------------------------------------------- step-kernel axis
+
+def test_step_kernel_staged_bit_identity():
+    """The fused Pallas beam step (interpret mode off-TPU) serves
+    *bit-identical* results to the reference hop chain on every backend's
+    staged adaptive path — ids, distances, hops, granted budgets and the
+    chosen bucket family (identical probes grant identical budgets)."""
+    for variant in fx.backends():
+        q = _queries(variant)
+        fx.assert_bit_identical(
+            fx.engine(variant, step_kernel="pallas").search(q),
+            fx.engine(variant).search(q))
+
+
+def test_step_kernel_bucketed_and_pipelined_bit_identity():
+    """The kernel axis composes with host bucket scheduling and the
+    double-buffered pipeline: fixed bucket family, pipelined stream with a
+    ragged tail — still bitwise equal to the reference kernel."""
+    for variant in fx.backends():
+        q = _queries(variant)
+        fx.assert_bit_identical(
+            fx.engine(variant, num_buckets=3, step_kernel="pallas").search(q),
+            fx.engine(variant, num_buckets=3).search(q))
+        batches = fx.split(q, 9)                 # 40 % 9 != 0: ragged tail
+        for res_p, res_r in zip(
+                fx.engine(variant,
+                          step_kernel="pallas").search_batches(batches),
+                fx.engine(variant).search_batches(batches)):
+            fx.assert_bit_identical(res_p, res_r)
+
+
+def test_step_kernel_coalesced_bit_identity():
+    """Admission coalescing over the fused kernel splits back to the same
+    per-input-batch results as the reference kernel's coalesced path."""
+    for variant in fx.backends():
+        q = _queries(variant)
+        micro = fx.split(q, 5)
+        res_p = list(fx.engine(variant, coalesce_lanes=16,
+                               step_kernel="pallas").search_batches(micro))
+        res_r = list(fx.engine(variant,
+                               coalesce_lanes=16).search_batches(micro))
+        assert len(res_p) == len(res_r) == len(micro)
+        for a, b in zip(res_p, res_r):
+            fx.assert_bit_identical(a, b)
+
+
+def test_step_kernel_fixed_beam_bit_identity():
+    """Fixed-beam serving (monolithic dispatch, disk rerank included) is on
+    the kernel axis too: the fused step's walk == the reference walk."""
+    from repro import serving
+
+    x, q, _, idx, tiered = fx.built()
+    pairs = [
+        (serving.ExactBackend(x, idx.adj, idx.entry),
+         serving.ExactBackend(x, idx.adj, idx.entry, step_kernel="pallas")),
+        (serving.TieredBackend(tiered),
+         serving.TieredBackend(tiered, step_kernel="pallas")),
+        (serving.TieredBackend(tiered, slow_tier=fx.built_disk_tier()),
+         serving.TieredBackend(tiered, slow_tier=fx.built_disk_tier(),
+                               step_kernel="pallas")),
+    ]
+    for b_ref, b_pal in pairs:
+        eng_r = serving.SearchEngine(b_ref, None, k=10, beam_width=24)
+        eng_p = serving.SearchEngine(b_pal, None, k=10, beam_width=24)
+        res_r, res_p = eng_r.search(q), eng_p.search(q)
+        np.testing.assert_array_equal(res_p.ids, res_r.ids)
+        np.testing.assert_array_equal(res_p.d2, res_r.d2)
+        np.testing.assert_array_equal(np.asarray(res_p.stats.hops),
+                                      np.asarray(res_r.stats.hops))
+
+
+def test_step_kernel_knob_resolution():
+    """The engine-level knob reaches the backend, and "auto" follows the
+    ops-layer dispatch policy (reference on this CPU container, the fused
+    step under REPRO_PALLAS_INTERPRET=1)."""
+    import os
+
+    from repro import serving
+    from repro.core import search
+    from repro.kernels import ops
+
+    x, _, _, idx, _ = fx.built()
+    backend = serving.ExactBackend(x, idx.adj, idx.entry)
+    serving.SearchEngine(backend, fx.BUDGET, k=10, step_kernel="pallas")
+    assert backend.step_kernel == "pallas"
+    expected_auto = (search.PALLAS_STEP if ops.resolve_impl() != "ref"
+                     else search.REFERENCE_STEP)
+    assert search.resolve_step_kernel("auto") is expected_auto
+    assert search.resolve_step_kernel(None) is search.REFERENCE_STEP
+    assert search.resolve_step_kernel("reference") is search.REFERENCE_STEP
+    assert search.resolve_step_kernel("pallas") is search.PALLAS_STEP
+    with pytest.raises(ValueError, match="step_kernel"):
+        search.resolve_step_kernel("vectorised")
+
+
 # ------------------------------------------- distributed-only extra checks
 
 def test_distributed_per_shard_laws_identity_broadcast():
