@@ -15,7 +15,12 @@ NOTE: ``repro.core.calibrate`` is the calibration *module*; the LID
 population-stats helper formerly re-exported here under that name lives at
 :func:`repro.core.lid.calibrate`.
 """
-from repro.core.build import BuildConfig, build_mcgi, build_vamana  # noqa: F401
+from repro.core.build import (  # noqa: F401
+    BuildConfig,
+    block_layout,
+    build_mcgi,
+    build_vamana,
+)
 from repro.core.distance import brute_force_topk, knn_graph, recall_at_k  # noqa: F401
 from repro.core.lid import LidProfile, estimate_dataset_lid, lid_from_dists  # noqa: F401
 from repro.core.mapping import ALPHA_MAX, ALPHA_MIN, AlphaMapping, phi  # noqa: F401

@@ -234,3 +234,16 @@ def build_vamana(
         adj=adj, entry=search_mod.medoid(x), alpha=alpha_arr,
         lid=jnp.zeros((n,), jnp.float32), mu=jnp.float32(0), sigma=jnp.float32(0),
     )
+
+
+def block_layout(graph: GraphIndex, nodes_per_block: int) -> np.ndarray:
+    """Build-time block-aware record layout for the on-disk store.
+
+    Thin entry point over :func:`repro.core.prune.greedy_block_pack` taking
+    the built :class:`GraphIndex` directly; the returned ``slot_of``
+    permutation feeds ``write_block_store(..., nodes_per_block=,
+    slot_of=)`` and is recorded in the store manifest (the serializer's
+    layout rider), so a reopened store knows how its records were packed.
+    """
+    return prune_mod.greedy_block_pack(
+        np.asarray(graph.adj), int(graph.entry), nodes_per_block)

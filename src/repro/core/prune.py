@@ -133,3 +133,74 @@ def robust_prune_batch(
     return jax.vmap(robust_prune_one, in_axes=(0, 0, 0, 0, None))(
         ids, d2, pd2, alpha, degree
     )
+
+
+def greedy_block_pack(adj, entry: int, nodes_per_block: int):
+    """Block-aware slot assignment (the BAMG layout lever): co-locate each
+    node's record with its nearest pruned out-neighbours so one I/O-block
+    read covers a hop's expansions.
+
+    Nodes are visited in BFS order from the entry point — the order a beam
+    walk first touches records — and every still-unassigned node opens a
+    *group*: itself plus its nearest unassigned out-neighbours (adjacency
+    rows come distance-ascending out of the robust prune, so row order *is*
+    nearness order).  Groups fill consecutive record slots and are capped at
+    the current I/O block's remaining capacity, so a seed node and the
+    neighbours packed with it always share one block — when the walk expands
+    the seed, the block read that fetched its adjacency has already paid for
+    the neighbours it is most likely to hop to next.  Unreachable nodes are
+    appended in id order.
+
+    Host-side numpy (build-time layout, not a kernel).  Returns
+    ``slot_of``: (N,) int64 permutation mapping node id -> record slot,
+    the form :func:`repro.index.blockstore.write_block_store` takes.
+    """
+    import numpy as np
+
+    adj = np.asarray(adj)
+    n = adj.shape[0]
+    npb = int(nodes_per_block)
+    if npb <= 1:
+        return np.arange(n, dtype=np.int64)
+
+    # BFS from the entry over out-edges; unreached nodes follow in id order.
+    order = np.empty(n, dtype=np.int64)
+    seen = np.zeros(n, dtype=bool)
+    order[0] = int(entry)
+    seen[int(entry)] = True
+    head, tail = 0, 1
+    while head < tail:
+        u = order[head]
+        head += 1
+        for v in adj[u]:
+            if v >= 0 and not seen[v]:
+                seen[v] = True
+                order[tail] = v
+                tail += 1
+    if tail < n:
+        rest = np.flatnonzero(~seen)
+        order[tail:] = rest
+        seen[rest] = True
+
+    slot_of = np.empty(n, dtype=np.int64)
+    assigned = np.zeros(n, dtype=bool)
+    next_slot = 0
+    for u in order:
+        if assigned[u]:
+            continue
+        group = [int(u)]
+        assigned[u] = True
+        # Fill only to the end of the current I/O block: the group never
+        # straddles a block boundary.
+        capacity = npb - (next_slot % npb)
+        for v in adj[u]:
+            if len(group) >= capacity:
+                break
+            if v >= 0 and not assigned[v]:
+                group.append(int(v))
+                assigned[v] = True
+        for g in group:
+            slot_of[g] = next_slot
+            next_slot += 1
+    assert next_slot == n
+    return slot_of

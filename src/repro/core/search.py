@@ -133,16 +133,64 @@ def _init_state(query_ctx: Array, entry: Array, eval_dists: DistEval,
     return beam_ids, beam_d, beam_exp, visited, jnp.int32(0), jnp.int32(0)
 
 
+def _select_frontier(state, in_budget: Array):
+    """First half of the hop: pick the closest unexpanded in-budget beam
+    entry, mark it expanded, and return its node id.
+
+    This is the point where the walk's next adjacency read becomes known —
+    the out-of-core driver runs this half on device, yields ``u`` to the
+    host for the block fetch, then resumes with :func:`_expand_frontier`.
+    """
+    beam_ids, beam_d, beam_exp, visited, hops, evals = state
+    cand_d = jnp.where(
+        beam_exp | (beam_ids == INVALID) | (~in_budget), jnp.inf, beam_d)
+    j = jnp.argmin(cand_d)
+    u = beam_ids[j]
+    beam_exp = beam_exp.at[j].set(True)
+    return (beam_ids, beam_d, beam_exp, visited, hops, evals), u
+
+
+def _expand_frontier(state, u: Array, nbrs: Array, query_ctx: Array,
+                     eval_dists: DistEval, beam_width: int):
+    """Second half of the hop: evaluate ``u``'s adjacency row and merge.
+
+    ``nbrs`` is ``adj[u]`` however it was obtained — an in-graph gather
+    (:meth:`BeamStepKernel.step`) or a host-side block-store read (the
+    out-of-core walk). Identical ops on identical values either way, which
+    is what keeps the two walks bit-identical.
+    """
+    beam_ids, beam_d, beam_exp, visited, hops, evals = state
+    valid = (nbrs != INVALID) & (u != INVALID)
+    safe = jnp.maximum(nbrs, 0)
+    word_idx = safe >> 5
+    bit = jnp.uint32(1) << (safe.astype(jnp.uint32) & 31)
+    seen = (visited[word_idx] & bit) != 0
+    valid = valid & (~seen)
+    d = eval_dists(query_ctx, safe, valid)
+    d = jnp.where(valid, d, jnp.inf)
+    # Distinct ids set distinct bits, so scatter-add implements the OR.
+    visited = visited.at[word_idx].add(jnp.where(valid, bit, 0))
+
+    nbr_ids = jnp.where(valid, nbrs, INVALID)
+    beam_ids, beam_d, beam_exp = _beam_merge(
+        beam_ids, beam_d, beam_exp, nbr_ids, d, beam_width
+    )
+    return beam_ids, beam_d, beam_exp, visited, hops + 1, evals + valid.sum()
+
+
 class BeamStepKernel:
     """The pluggable per-hop kernel of the beam walk (reference impl).
 
     ``step`` advances ONE query's state by one hop — the body factored
-    verbatim out of the historical inline ``_run_search`` loop, so fixed-beam,
-    probe and continue all execute the same code.  ``run_batch`` drives a
-    batch of lanes to convergence (here: a vmap of per-lane while loops, the
-    historical execution shape).  Subclasses override ``run_batch`` to change
-    *how* hops execute without touching *what* a hop computes;
-    :class:`PallasBeamStep` swaps in the fused single-launch hop.
+    verbatim out of the historical inline ``_run_search`` loop (now split
+    into :func:`_select_frontier` + :func:`_expand_frontier` so the
+    out-of-core walk can interpose a host-side block read between the two
+    halves), so fixed-beam, probe and continue all execute the same code.
+    ``run_batch`` drives a batch of lanes to convergence (here: a vmap of
+    per-lane while loops, the historical execution shape).  Subclasses
+    override ``run_batch`` to change *how* hops execute without touching
+    *what* a hop computes; :class:`PallasBeamStep` swaps in the fused
+    single-launch hop.
     """
 
     name = "reference"
@@ -150,31 +198,10 @@ class BeamStepKernel:
     def step(self, state, query_ctx: Array, adj: Array,
              eval_dists: DistEval, beam_width: int, in_budget: Array):
         """One hop of one query's walk (the reference hop body, verbatim)."""
-        beam_ids, beam_d, beam_exp, visited, hops, evals = state
-        # Closest unexpanded beam entry within the active budget.
-        cand_d = jnp.where(
-            beam_exp | (beam_ids == INVALID) | (~in_budget), jnp.inf, beam_d)
-        j = jnp.argmin(cand_d)
-        u = beam_ids[j]
-        beam_exp = beam_exp.at[j].set(True)
-
+        state, u = _select_frontier(state, in_budget)
         nbrs = adj[jnp.maximum(u, 0)]  # (R,)
-        valid = (nbrs != INVALID) & (u != INVALID)
-        safe = jnp.maximum(nbrs, 0)
-        word_idx = safe >> 5
-        bit = jnp.uint32(1) << (safe.astype(jnp.uint32) & 31)
-        seen = (visited[word_idx] & bit) != 0
-        valid = valid & (~seen)
-        d = eval_dists(query_ctx, safe, valid)
-        d = jnp.where(valid, d, jnp.inf)
-        # Distinct ids set distinct bits, so scatter-add implements the OR.
-        visited = visited.at[word_idx].add(jnp.where(valid, bit, 0))
-
-        nbr_ids = jnp.where(valid, nbrs, INVALID)
-        beam_ids, beam_d, beam_exp = _beam_merge(
-            beam_ids, beam_d, beam_exp, nbr_ids, d, beam_width
-        )
-        return beam_ids, beam_d, beam_exp, visited, hops + 1, evals + valid.sum()
+        return _expand_frontier(state, u, nbrs, query_ctx, eval_dists,
+                                beam_width)
 
     def run_batch(self, states, ctxs: Array, adj: Array,
                   eval_dists: DistEval, beam_width: int, hop_limits: Array,
@@ -370,6 +397,106 @@ def fixed_search_batch(
     return beam_ids, beam_d, SearchStats(hops=hops, dist_evals=evals)
 
 
+# --------------------------------------------------------------------------
+# Out-of-core walk programs.
+#
+# The reference walk is a vmapped ``lax.while_loop`` whose body gathers
+# ``adj[u]`` in-graph — which requires the whole adjacency in device memory.
+# The out-of-core walk runs the *same* per-lane ops as a host-driven loop of
+# two device programs, yielding each hop's frontier ids to the host so the
+# adjacency rows can come from the block store instead:
+#
+#     select:  (state)            -> (state', u, active)     [device]
+#     fetch:   rows = adj[u]      via BlockSlowTier          [host  ]
+#     hop:     (state', u, rows)  -> expand, then next select [device]
+#
+# Bit-identity with the in-graph walk rests on two properties the codebase
+# already pins elsewhere: (a) XLA lowers a vmapped while_loop to an any-cond
+# loop whose body select-masks converged lanes — ``_lane_active`` +
+# ``_freeze_inactive`` below replicate exactly that form, so each lane's
+# state sequence is identical; (b) per-lane ops are batch-shape-invariant
+# (the bucketed scheduler already slices lanes into differently-shaped
+# programs and asserts bitwise equality against the full-batch program).
+
+
+def _lane_active(state, in_budget: Array, hop_limit: Array) -> Array:
+    """One lane's while-loop condition (verbatim from ``_run_search``)."""
+    beam_ids, _, beam_exp, _, hops, _ = state
+    frontier_open = jnp.any((~beam_exp) & (beam_ids != INVALID) & in_budget)
+    return (hops < hop_limit) & frontier_open
+
+
+def _freeze_inactive(active: Array, new, old):
+    """Per-lane select-masking: inactive lanes keep their old state leaves —
+    the exact form XLA lowers a vmapped ``while_loop`` body to."""
+    return jax.tree_util.tree_map(
+        lambda n, o: jnp.where(active, n, o), new, old)
+
+
+def ooc_select_batch(states, budgets: Array, hop_limits: Array,
+                     beam_width: int):
+    """First frontier selection of an out-of-core walk segment.
+
+    Returns ``(states, u, active)``: per-lane frontier node ids (INVALID for
+    lanes whose loop condition is already False — no I/O is issued for them)
+    and the lanes' activity mask. The beam_exp mark of the selection is
+    applied only to active lanes.
+    """
+    def one(state, b, h):
+        in_budget = jnp.arange(beam_width) < b
+        active = _lane_active(state, in_budget, h)
+        sel, u = _select_frontier(state, in_budget)
+        return (_freeze_inactive(active, sel, state),
+                jnp.where(active, u, jnp.int32(INVALID)), active)
+
+    return jax.vmap(one)(states, budgets, hop_limits)
+
+
+def ooc_hop_batch(states, u: Array, active: Array, rows: Array, ctxs: Array,
+                  eval_dists: DistEval, budgets: Array, hop_limits: Array,
+                  beam_width: int):
+    """One out-of-core hop: expand the previously selected frontier with its
+    host-fetched adjacency rows, then select the next frontier.
+
+    ``rows[i]`` must equal ``adj[u[i]]`` for active lanes (INVALID lanes in
+    ``rows`` are ignored — ``_expand_frontier`` masks on ``u``). Returns
+    ``(states, u_next, active_next)`` with the same conventions as
+    :func:`ooc_select_batch`.
+    """
+    def one(state, u1, a1, nbrs, c, b, h):
+        in_budget = jnp.arange(beam_width) < b
+        expanded = _expand_frontier(state, u1, nbrs, c, eval_dists,
+                                    beam_width)
+        state = _freeze_inactive(a1, expanded, state)
+        a2 = _lane_active(state, in_budget, h)
+        sel, u2 = _select_frontier(state, in_budget)
+        return (_freeze_inactive(a2, sel, state),
+                jnp.where(a2, u2, jnp.int32(INVALID)), a2)
+
+    return jax.vmap(one)(states, u, active, rows, ctxs, budgets, hop_limits)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "beam_width"))
+def ooc_init_pq(codes: Array, ctxs: Array, entry: Array, n: int,
+                beam_width: int):
+    """Fresh per-lane states for a PQ-steered out-of-core walk (entry node's
+    ADC distance comes from the device-resident codes)."""
+    return jax.vmap(
+        lambda c: _init_state(c, entry, _pq_eval(codes), n, beam_width))(ctxs)
+
+
+@functools.partial(jax.jit, static_argnames=("beam_width",))
+def ooc_select_pq(states, budgets, hop_limits, beam_width: int):
+    return ooc_select_batch(states, budgets, hop_limits, beam_width)
+
+
+@functools.partial(jax.jit, static_argnames=("beam_width",))
+def ooc_hop_pq(codes, states, u, active, rows, ctxs, budgets, hop_limits,
+               beam_width: int):
+    return ooc_hop_batch(states, u, active, rows, ctxs, _pq_eval(codes),
+                         budgets, hop_limits, beam_width)
+
+
 def budget_bucket_ceilings(
     l_min: int, l_max: int, max_buckets: int = 4
 ) -> tuple[int, ...]:
@@ -414,6 +541,43 @@ def _bucket_hop_limits(
     return hop_limits
 
 
+def grant_budgets(
+    probe_state,
+    budget_cfg: AdaptiveBeamBudget,
+    max_hops: int | None = None,
+    *,
+    lam: Array | None = None,
+    l_min: Array | None = None,
+):
+    """Phase 2 of the adaptive engine: LID estimate + budget grant from a
+    finished probe state.
+
+    Factored out of :func:`adaptive_probe_batch` so the out-of-core walk's
+    host-driven probe grants budgets through the *same* ops (bit-identical
+    LID/budget/hop-limit values for the same probe state). Returns
+    ``(budgets, hop_limits, q_lid)``.
+    """
+    from repro.core import lid as lid_mod
+    from repro.core import mapping as mapping_mod
+
+    lam_ = budget_cfg.lam if lam is None else lam
+    l_min_ = budget_cfg.l_min if l_min is None else l_min
+    p_ids, p_d = probe_state[0], probe_state[1]
+    d_pool = jnp.where(p_ids == INVALID, jnp.inf, p_d)
+    q_lid = lid_mod.online_lid(d_pool, k=min(budget_cfg.lid_k,
+                                             budget_cfg.l_max))
+    center = (jnp.float32(budget_cfg.center)
+              if budget_cfg.center is not None else jnp.mean(q_lid))
+    budgets = mapping_mod.adaptive_beam_budget(
+        q_lid, lam_, l_min_, budget_cfg.l_max, mu=center)
+    hop_limits = _bucket_hop_limits(budget_cfg, budgets, max_hops)
+    return budgets, hop_limits, q_lid
+
+
+_grant_budgets_jit = jax.jit(
+    grant_budgets, static_argnames=("budget_cfg", "max_hops"))
+
+
 def adaptive_probe_batch(
     ctxs: Array,
     adj: Array,
@@ -443,11 +607,7 @@ def adaptive_probe_batch(
     Returns (probe_state, budgets, hop_limits, q_lid); ``probe_state`` is the
     warm per-query search state the continue phase resumes from.
     """
-    from repro.core import lid as lid_mod
-    from repro.core import mapping as mapping_mod
-
     l_max = budget_cfg.l_max
-    lam_ = budget_cfg.lam if lam is None else lam
     l_min_ = budget_cfg.l_min if l_min is None else l_min
 
     kernel = resolve_step_kernel(step_kernel)
@@ -458,14 +618,8 @@ def adaptive_probe_batch(
         states, ctxs, adj, eval_dists, l_max,
         hop_limits=jnp.full((nq,), jnp.int32(budget_cfg.probe_hops)),
         budgets=jnp.broadcast_to(jnp.int32(l_min_), (nq,)))
-    p_ids, p_d = probe_state[0], probe_state[1]
-    d_pool = jnp.where(p_ids == INVALID, jnp.inf, p_d)
-    q_lid = lid_mod.online_lid(d_pool, k=min(budget_cfg.lid_k, l_max))
-    center = (jnp.float32(budget_cfg.center)
-              if budget_cfg.center is not None else jnp.mean(q_lid))
-    budgets = mapping_mod.adaptive_beam_budget(
-        q_lid, lam_, l_min_, budget_cfg.l_max, mu=center)
-    hop_limits = _bucket_hop_limits(budget_cfg, budgets, max_hops)
+    budgets, hop_limits, q_lid = grant_budgets(
+        probe_state, budget_cfg, max_hops, lam=lam, l_min=l_min)
     return probe_state, budgets, hop_limits, q_lid
 
 

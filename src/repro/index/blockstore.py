@@ -17,6 +17,31 @@ byte-identical across hosts.  Reads go through one shared ``np.memmap``
 on this testbed; on a real deployment the same layout reads with
 O_DIRECT/io_uring at sector granularity).
 
+Block-aware layout (BAMG)
+-------------------------
+The walk reads adjacency at I/O-device granularity, which is larger than
+one 512B record — ``nodes_per_block`` groups that many consecutive record
+slots into one *I/O block* (e.g. 8 x 512B = one 4K page), the unit the
+out-of-core walk fetches and caches.  ``slot_of`` permutes nodes across
+record slots so that co-expanded neighbours (greedy packing at build time,
+:func:`repro.core.prune.greedy_block_pack`) land in the same I/O block —
+one page read covers a hop's expansion.  The permutation is persisted in
+dedicated slot-table blocks between the header and the records:
+
+    block 0                      : header (manifest carries
+                                   ``nodes_per_block`` / ``layout`` /
+                                   ``slot_table_blocks``)
+    blocks 1 .. T                : slot table — node id -> record slot,
+                                   ``<i4``, zero padded (T = 0 for the
+                                   node-order layout)
+    block 1 + T + s              : the record of node ``node_of[s]``
+
+Default-layout files (``nodes_per_block=1``, no permutation) are written
+without any of the new manifest keys — byte-identical to the historical
+format, and historical files read back as ``nodes_per_block=1``.
+:attr:`BlockReadStats.io_blocks` counts distinct I/O blocks touched — the
+blocks-per-query numerator reported by ``benchmarks/disk_io.py``.
+
 Every record carries a CRC32 over its payload: a torn write, bit rot, or a
 wrong-length file surfaces as a typed error (:class:`BlockChecksumError`,
 :class:`BlockStoreTruncatedError`, :class:`BlockStoreFormatError`) instead
@@ -82,10 +107,15 @@ class BlockReadStats:
 
     ``read_time_s`` is host wall time spent inside block reads — the
     *measured* counterpart of ``DiskTierModel.read_latency_us * blocks_read``.
+    ``io_blocks`` counts distinct I/O blocks (``nodes_per_block`` record
+    slots each) touched per read call — equal to ``blocks_read`` for the
+    default one-record-per-block layout, strictly smaller when a packed
+    layout makes co-expanded records share a block.
     """
 
     blocks_read: int = 0
     read_time_s: float = 0.0
+    io_blocks: int = 0
 
     def measured_read_us(self) -> float:
         """Mean measured latency per block read, in microseconds."""
@@ -141,18 +171,86 @@ class BlockStore:
         if self.block_size > raw.size:  # header block itself must fit
             raise BlockStoreTruncatedError(
                 f"{self.path}: file smaller than one block")
-        expect = (1 + self.n) * self.block_size
+        # Layout rider (absent -> the historical one-record-per-block file).
+        self.nodes_per_block = int(manifest.get("nodes_per_block", 1))
+        self.layout = manifest.get("layout", "node-order")
+        table_blocks = int(manifest.get("slot_table_blocks", 0))
+        if self.nodes_per_block < 1:
+            raise BlockStoreFormatError(
+                f"{self.path}: nodes_per_block {self.nodes_per_block} < 1")
+        self._data_start = 1 + table_blocks
+        expect = (self._data_start + self.n) * self.block_size
         if raw.size < expect:
             raise BlockStoreTruncatedError(
                 f"{self.path}: {raw.size} bytes on disk, manifest needs "
                 f"{expect} ({self.n} nodes x {self.block_size}B + header)")
         self._mm = raw
+        if table_blocks:
+            tbl = raw[self.block_size: self.block_size * self._data_start]
+            slot_of = tbl[: self.n * 4].view("<i4").astype(np.int64)
+            crc = manifest.get("slot_table_crc32")
+            if crc is not None and zlib.crc32(
+                    np.ascontiguousarray(slot_of.astype("<i4"))) != int(crc):
+                raise BlockStoreFormatError(
+                    f"{self.path}: slot table fails its CRC32")
+            if not np.array_equal(np.sort(slot_of), np.arange(self.n)):
+                raise BlockStoreFormatError(
+                    f"{self.path}: slot table is not a permutation")
+            self.slot_of = slot_of
+            self.node_of = np.empty_like(slot_of)
+            self.node_of[slot_of] = np.arange(self.n, dtype=np.int64)
+        else:
+            self.slot_of = None   # identity layout
+            self.node_of = None
         self.stats = BlockReadStats()
 
     def reset_stats(self) -> None:
         self.stats = BlockReadStats()
 
+    @property
+    def slot_table_crc32(self) -> int | None:
+        """CRC32 of the persisted ``<i4`` slot table (None for identity)."""
+        if self.slot_of is None:
+            return None
+        return zlib.crc32(np.ascontiguousarray(self.slot_of.astype("<i4")))
+
     # ------------------------------------------------------------- reading
+
+    def io_block_of(self, ids: np.ndarray) -> np.ndarray:
+        """The I/O block index holding each node's record."""
+        ids = np.asarray(ids, dtype=np.int64)
+        slots = ids if self.slot_of is None else self.slot_of[ids]
+        return slots // self.nodes_per_block
+
+    def _check_range(self, ids: np.ndarray) -> None:
+        if ids.size and (ids.min() < 0 or ids.max() >= self.n):
+            raise IndexError(
+                f"node id out of range [0, {self.n}): "
+                f"{ids[(ids < 0) | (ids >= self.n)][0]}")
+
+    def _records_at(self, slots: np.ndarray,
+                    named: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """CRC-checked record payloads at ``slots``; ``named`` are the node
+        ids to blame in checksum errors."""
+        bs, d, r = self.block_size, self.d, self.r
+        payload = d * 4 + r * 4
+        # One fancy-indexed gather over the block-matrix view: rows fault in
+        # via the page cache exactly like queue_depth concurrent block reads.
+        blocks = self._mm[: (self._data_start + self.n) * bs].reshape(
+            self._data_start + self.n, bs)
+        recs = np.ascontiguousarray(
+            blocks[self._data_start + slots, : payload + 4])
+        stored = recs[:, payload: payload + 4].view("<u4").ravel()
+        for row, i in enumerate(named):
+            # crc32 over the contiguous row view: no per-record copy on the
+            # hot read path (this time is part of the measured read latency).
+            if zlib.crc32(recs[row, :payload]) != int(stored[row]):
+                raise BlockChecksumError(
+                    f"{self.path}: node {int(i)} payload fails CRC32 "
+                    "(torn write or bit rot)")
+        vecs = recs[:, : d * 4].view("<f4").reshape(-1, d)
+        adj = recs[:, d * 4: payload].view("<i4").reshape(-1, r)
+        return vecs, adj
 
     def read_many(self, ids: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
         """Read the records of ``ids`` (1-D int array, each in [0, n)).
@@ -163,41 +261,65 @@ class BlockStore:
         cache layer above does).
         """
         ids = np.asarray(ids, dtype=np.int64)
-        if ids.size and (ids.min() < 0 or ids.max() >= self.n):
-            raise IndexError(
-                f"node id out of range [0, {self.n}): "
-                f"{ids[(ids < 0) | (ids >= self.n)][0]}")
+        self._check_range(ids)
         t0 = time.perf_counter()
-        bs, d, r = self.block_size, self.d, self.r
-        payload = d * 4 + r * 4
-        # One fancy-indexed gather over the block-matrix view: rows fault in
-        # via the page cache exactly like queue_depth concurrent block reads.
-        blocks = self._mm[: (1 + self.n) * bs].reshape(1 + self.n, bs)
-        recs = np.ascontiguousarray(blocks[1 + ids, : payload + 4])
-        stored = recs[:, payload: payload + 4].view("<u4").ravel()
-        for row, i in enumerate(ids):
-            # crc32 over the contiguous row view: no per-record copy on the
-            # hot read path (this time is part of the measured read latency).
-            if zlib.crc32(recs[row, :payload]) != int(stored[row]):
-                raise BlockChecksumError(
-                    f"{self.path}: node {int(i)} payload fails CRC32 "
-                    "(torn write or bit rot)")
-        vecs = recs[:, : d * 4].view("<f4").reshape(-1, d)
-        adj = recs[:, d * 4: payload].view("<i4").reshape(-1, r)
+        slots = ids if self.slot_of is None else self.slot_of[ids]
+        vecs, adj = self._records_at(slots, ids)
         self.stats.blocks_read += int(ids.size)
+        self.stats.io_blocks += int(
+            np.unique(slots // self.nodes_per_block).size)
         self.stats.read_time_s += time.perf_counter() - t0
         return vecs, adj
+
+    def read_blocks(
+        self, block_ids: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Batched multi-block fetch: every record of the given I/O blocks.
+
+        The walk-time read path — a miss on one node pulls its whole I/O
+        block so the cache layer can keep all co-located records (that is
+        the whole point of the packed layout).  Returns
+        ``(node_ids, vectors, adj)`` for every record slot covered, in slot
+        order.  Counts one ``io_blocks`` per distinct block and one
+        ``blocks_read`` per record returned.
+        """
+        block_ids = np.unique(np.asarray(block_ids, dtype=np.int64))
+        npb = self.nodes_per_block
+        n_blocks = (self.n + npb - 1) // npb
+        if block_ids.size and (block_ids.min() < 0
+                               or block_ids.max() >= n_blocks):
+            raise IndexError(
+                f"I/O block out of range [0, {n_blocks}): "
+                f"{block_ids[(block_ids < 0) | (block_ids >= n_blocks)][0]}")
+        t0 = time.perf_counter()
+        slots = (block_ids[:, None] * npb + np.arange(npb)).ravel()
+        slots = slots[slots < self.n]
+        node_ids = slots if self.node_of is None else self.node_of[slots]
+        vecs, adj = self._records_at(slots, node_ids)
+        self.stats.blocks_read += int(slots.size)
+        self.stats.io_blocks += int(block_ids.size)
+        self.stats.read_time_s += time.perf_counter() - t0
+        return node_ids, vecs, adj
 
 def write_block_store(
     path: str | pathlib.Path,
     vectors: np.ndarray,
     adj: np.ndarray,
     block_size: int | None = None,
+    nodes_per_block: int = 1,
+    slot_of: np.ndarray | None = None,
 ) -> pathlib.Path:
     """Write a block store for (vectors (N, D) f32, adj (N, R) i32).
 
     ``block_size`` defaults to the tight sector-aligned record size; a larger
     multiple of :data:`SECTOR` is accepted (e.g. to pin 4K pages).
+
+    ``nodes_per_block`` sets the I/O-block granularity (how many record
+    slots one device read covers); ``slot_of`` (an (N,) permutation,
+    node id -> record slot — e.g. :func:`repro.core.prune.greedy_block_pack`)
+    packs co-expanded neighbours into shared I/O blocks.  The default
+    ``(1, None)`` writes the historical byte-exact format with none of the
+    layout keys.
     """
     path = pathlib.Path(path)
     vectors = np.ascontiguousarray(np.asarray(vectors), dtype="<f4")
@@ -212,26 +334,55 @@ def write_block_store(
     if block_size < tight or block_size % SECTOR:
         raise ValueError(
             f"block_size {block_size} must be a sector multiple >= {tight}")
-    manifest = json.dumps({
+    if nodes_per_block < 1:
+        raise ValueError(f"nodes_per_block {nodes_per_block} must be >= 1")
+    manifest_fields = {
         "format": FORMAT, "n": n, "d": d, "r": r, "block_size": block_size,
         "checksum": "crc32", "vectors_crc32": zlib.crc32(vectors),
-    }).encode()
+    }
+    table_blocks = 0
+    if slot_of is not None:
+        slot_of = np.ascontiguousarray(np.asarray(slot_of), dtype="<i4")
+        if not np.array_equal(np.sort(slot_of.astype(np.int64)),
+                              np.arange(n)):
+            raise ValueError("slot_of must be a permutation of [0, n)")
+        table_blocks = (n * 4 + block_size - 1) // block_size
+    if slot_of is not None or nodes_per_block > 1:
+        manifest_fields.update(
+            nodes_per_block=nodes_per_block,
+            layout="packed" if slot_of is not None else "node-order",
+            slot_table_blocks=table_blocks)
+        if slot_of is not None:
+            manifest_fields["slot_table_crc32"] = zlib.crc32(slot_of)
+    manifest = json.dumps(manifest_fields).encode()
     if len(MAGIC) + 4 + len(manifest) > block_size:
         raise ValueError("manifest does not fit the header block")
     payload = d * 4 + r * 4
-    blocks = np.zeros((1 + n, block_size), dtype=np.uint8)
+    data_start = 1 + table_blocks
+    blocks = np.zeros((data_start + n, block_size), dtype=np.uint8)
     blocks[0, : len(MAGIC)] = np.frombuffer(MAGIC, np.uint8)
     blocks[0, len(MAGIC): len(MAGIC) + 4] = np.frombuffer(
         np.uint32(len(manifest)).astype("<u4").tobytes(), np.uint8)
     blocks[0, len(MAGIC) + 4: len(MAGIC) + 4 + len(manifest)] = (
         np.frombuffer(manifest, np.uint8))
-    blocks[1:, : d * 4] = vectors.view(np.uint8).reshape(n, d * 4)
-    blocks[1:, d * 4: payload] = adj.view(np.uint8).reshape(n, r * 4)
+    if table_blocks:
+        blocks[1:data_start].reshape(-1)[: n * 4] = slot_of.view(np.uint8)
+        # Records land at their assigned slots: row `data_start + slot_of[i]`
+        # holds node i.  node_order[s] = the node stored at slot s.
+        node_order = np.empty((n,), dtype=np.int64)
+        node_order[slot_of.astype(np.int64)] = np.arange(n)
+    else:
+        node_order = np.arange(n)
+    blocks[data_start:, : d * 4] = (
+        vectors[node_order].view(np.uint8).reshape(n, d * 4))
+    blocks[data_start:, d * 4: payload] = (
+        adj[node_order].view(np.uint8).reshape(n, r * 4))
     crcs = np.empty((n,), dtype="<u4")
-    rows = blocks[1:, :payload]
+    rows = blocks[data_start:, :payload]
     for i in range(n):
         crcs[i] = zlib.crc32(rows[i])   # contiguous row view, no copy
-    blocks[1:, payload: payload + 4] = crcs.view(np.uint8).reshape(n, 4)
+    blocks[data_start:, payload: payload + 4] = crcs.view(np.uint8).reshape(
+        n, 4)
     path.parent.mkdir(parents=True, exist_ok=True)
     tmp = path.with_name(path.name + ".tmp")
     with open(tmp, "wb") as f:
@@ -245,10 +396,13 @@ def ensure_block_store(
     vectors: np.ndarray,
     adj: np.ndarray,
     log=None,
+    nodes_per_block: int = 1,
+    slot_of: np.ndarray | None = None,
 ) -> BlockStore:
     """Open the store at ``path`` if its content fingerprint matches
-    ``vectors``; otherwise — absent, unreadable (any
-    :class:`BlockStoreError`), or stale — write it fresh and open that.
+    ``vectors`` (and its layout matches the requested one); otherwise —
+    absent, unreadable (any :class:`BlockStoreError`), stale, or laid out
+    differently — write it fresh and open that.
 
     The one bootstrap every consumer shares (serve launcher, e2e example,
     benchmarks): geometry can collide between two builds, a torn file must
@@ -257,17 +411,25 @@ def ensure_block_store(
     """
     path = pathlib.Path(path)
     vectors = np.ascontiguousarray(np.asarray(vectors), dtype="<f4")
+    want_table_crc = (
+        None if slot_of is None
+        else zlib.crc32(np.ascontiguousarray(np.asarray(slot_of), "<i4")))
     if path.exists():
         try:
             store = BlockStore(path)
-            if store.vectors_crc32 == zlib.crc32(vectors):
+            if store.vectors_crc32 != zlib.crc32(vectors):
+                reason = "stale (content fingerprint mismatch)"
+            elif (store.nodes_per_block != nodes_per_block
+                  or store.slot_table_crc32 != want_table_crc):
+                reason = "laid out differently"
+            else:
                 return store
-            reason = "stale (content fingerprint mismatch)"
         except BlockStoreError as e:
             reason = f"unreadable ({type(e).__name__})"
         if log:
             log(f"block store {path} is {reason}; rewriting")
-    write_block_store(path, vectors, adj)
+    write_block_store(path, vectors, adj, nodes_per_block=nodes_per_block,
+                      slot_of=slot_of)
     if log:
         log(f"wrote block store {path} ({path.stat().st_size/1e6:.1f}MB)")
     return BlockStore(path)

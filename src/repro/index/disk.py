@@ -29,10 +29,40 @@ its in-memory rows, and serving swaps in the block store via
 walk kernels (the fast tier routes identically either way, and the rerank
 arithmetic is shared — results are bit-identical between tiers).
 :class:`BlockSlowTier` adds what a real disk tier needs: a hot-node cache
-(bounded LRU + statically pinned entry-proximal nodes, exact hit/miss
-counters surfaced in engine stats) and an async host-thread prefetch the
-staged pipeline uses to overlap batch i's block reads with batch i+1's
-continue programs.
+(bounded LRU of full records — vector *and* adjacency row — plus statically
+pinned entry-proximal nodes, exact hit/miss counters surfaced in engine
+stats) and an async host-thread prefetch the staged pipeline uses to
+overlap batch i's block reads with batch i+1's continue programs.  Tiers
+own a worker thread, so they are closeable (``close()`` / context manager);
+``TieredBackend`` closes a replaced disk tier on index refresh.
+
+Out-of-core walk (indices bigger than device memory)
+----------------------------------------------------
+With a ``TieredBackend`` the *walk* still needs the whole adjacency in HBM
+— only the rerank is out-of-core.  The out-of-core serving path
+(:class:`repro.serving.OutOfCoreBackend`) drops that requirement: device
+memory holds only the PQ codes (+ codebook and entry), and the walk reads
+adjacency rows at walk time through this module's :func:`ooc_probe` /
+:func:`ooc_continue` drivers.  Each hop is split at the frontier selection
+(:func:`repro.core.search._select_frontier` /
+:func:`~repro.core.search._expand_frontier`): a small device program picks
+every lane's next node ``u`` and yields it to the host, the host fetches
+``adj[u]`` from the block store through :meth:`BlockSlowTier.fetch_adj`
+(block-granular: one I/O-block read caches all co-located records, which
+is what the build-time packed layout is for), and the next device program
+expands the fetched rows and selects the following frontier.  Lanes are
+round-robined across ``io_groups`` so one group's block reads run on the
+tier's worker thread while another group's hop program runs on the device.
+Per-lane activity masks replicate the vmapped ``while_loop``'s
+select-masking exactly, so results are bit-identical to the in-memory walk
+(the engine-parity matrix pins ooc against the in-memory tiered reference).
+
+The staged pipeline adds a *walk-prefetch* stage for this backend: the
+continue phase's first frontier is computable as soon as the probe and the
+budget grant finish, so the engine submits those adjacency block reads
+(bounded by the backend's ``io_depth``) one stage ahead — they land in the
+tier's cache while other batches' device programs run, exactly like the
+rerank prefetch stage hides the final beam fetch.
 
 Serving architecture: the functions below (:func:`search_tiered`,
 :func:`search_tiered_adaptive`) are the kernel-level entry points over one
@@ -221,10 +251,13 @@ class SlowTier(Protocol):
     """What the serving rerank needs from a slow tier.
 
     ``fetch_beams(beam_ids (Q, L) int) -> (Q, L, D) float32`` — the batched
-    node fetch of the final beam (negative/INVALID lanes are clamped to node
-    0, exactly like the in-memory ``x_slow[max(ids, 0)]`` gather; the rerank
-    masks them to inf afterwards).  ``is_disk`` tells the engine whether the
-    fetch is worth hiding behind the next batch's device programs.
+    node fetch of the final beam.  Rows for negative/INVALID lanes carry no
+    information (the rerank masks their distances to inf before ranking):
+    the in-memory tier clamps them to node 0 like the in-graph
+    ``x_slow[max(ids, 0)]`` gather, while :class:`BlockSlowTier` zero-fills
+    them — INVALID lanes must never count toward its cache statistics or
+    trigger block I/O.  ``is_disk`` tells the engine whether the fetch is
+    worth hiding behind the next batch's device programs.
     """
 
     is_disk: bool
@@ -257,16 +290,26 @@ class BlockSlowTier:
 
     Adds the serving policy the raw store doesn't have:
 
-    * **hot-node cache** — a bounded LRU of recently fetched vectors plus a
-      statically *pinned* set (entry-proximal nodes: every walk funnels
-      through the medoid's neighbourhood, so those blocks are the hottest in
-      any trace and should never be evicted).  Hit/miss counters are exact —
-      each distinct node id per fetch counts once, hit or miss — and are
-      surfaced per batch in the engine's ``BatchResult.extras``.
-    * **async prefetch** — :meth:`prefetch` runs the fetch on a host worker
-      thread and returns a future; the staged pipeline submits batch i's
-      rerank fetch right after batch i+1's continue programs are dispatched,
-      so the block reads and the device compute overlap.
+    * **hot-node cache** — a bounded LRU of recently fetched *records*
+      (vector + adjacency row: the walk and the rerank share one cache)
+      plus a statically *pinned* set (entry-proximal nodes: every walk
+      funnels through the medoid's neighbourhood, so those blocks are the
+      hottest in any trace and should never be evicted).  Hit/miss counters
+      are exact — each distinct *valid* node id per fetch counts once, hit
+      or miss; INVALID (-1) padding lanes are excluded from counting and
+      I/O — and are surfaced per batch in the engine's
+      ``BatchResult.extras``.  Over a packed store
+      (``nodes_per_block > 1``) a miss pulls the whole I/O block and caches
+      every co-located record, so the build-time packing turns a hop's
+      co-expansions into cache hits.
+    * **async prefetch** — :meth:`prefetch` (rerank beams) and
+      :meth:`prefetch_adj` (walk frontiers) run the fetch on a host worker
+      thread and return a future; the staged pipeline submits batch i's
+      fetches right after batch i+1's device programs are dispatched, so
+      the block reads and the device compute overlap.  The worker is
+      created lazily and owned by the tier: :meth:`close` (also via
+      ``with``) shuts it down — tiers must not leak a ``slow-tier-prefetch``
+      thread per index refresh.
 
     Thread safety: the cache and counters are guarded by a lock that is
     *never* held across block I/O (a separate lock serialises store reads),
@@ -285,67 +328,152 @@ class BlockSlowTier:
                  pinned_ids=None):
         self.store = store
         self.cache_nodes = int(cache_nodes)
-        self._lru: "collections.OrderedDict[int, np.ndarray]" = (
+        # id -> (vector (D,) f32, adjacency (R,) i32)
+        self._lru: "collections.OrderedDict[int, tuple]" = (
             collections.OrderedDict())
-        self._pinned: dict[int, np.ndarray] = {}
+        self._pinned: dict[int, tuple] = {}
         self._lock = threading.Lock()       # cache + counters; no I/O under it
         self._io_lock = threading.Lock()    # block-store reads
-        self._pool = concurrent.futures.ThreadPoolExecutor(
-            max_workers=1, thread_name_prefix="slow-tier-prefetch")
+        self._pool = None                   # lazy: many tiers never prefetch
+        self._closed = False
         self.hits = 0
         self.misses = 0
         if pinned_ids is not None:
             ids = np.unique(np.asarray(pinned_ids, np.int64))
             if ids.size:
-                vecs, _ = store.read_many(ids)
-                self._pinned = {int(i): vecs[j].copy()
+                vecs, adjs = store.read_many(ids)
+                self._pinned = {int(i): (vecs[j].copy(), adjs[j].copy())
                                 for j, i in enumerate(ids)}
         store.reset_stats()   # serving counters exclude the pinned load
 
+    # ------------------------------------------------------------- lifecycle
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def close(self, wait: bool = True) -> None:
+        """Shut down the prefetch worker (idempotent).  The memmapped store
+        stays readable — only the owned thread is torn down, so a closed
+        tier can still serve synchronous fetches but not prefetches."""
+        with self._lock:
+            pool, self._pool = self._pool, None
+            self._closed = True
+        if pool is not None:
+            pool.shutdown(wait=wait)
+
+    def __enter__(self) -> "BlockSlowTier":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def _executor(self) -> concurrent.futures.ThreadPoolExecutor:
+        with self._lock:
+            if self._closed:
+                raise RuntimeError(
+                    f"slow tier over {self.store.path} is closed")
+            if self._pool is None:
+                self._pool = concurrent.futures.ThreadPoolExecutor(
+                    max_workers=1, thread_name_prefix="slow-tier-prefetch")
+            return self._pool
+
     # ------------------------------------------------------------- fetching
 
-    def fetch(self, ids: np.ndarray) -> np.ndarray:
-        """(len(ids), D) float32 for a flat id array (duplicates fine —
-        each *distinct* id counts once toward hits/misses and block reads)."""
+    def fetch_records(
+        self, ids: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """(vectors (len, D) f32, adj (len, R) i32) for a flat array of
+        *valid* node ids (duplicates fine — each distinct id counts once
+        toward hits/misses and block reads)."""
         ids = np.asarray(ids, np.int64).ravel()
         uniq, inverse = np.unique(ids, return_inverse=True)
-        out = np.empty((uniq.size, self.store.d), np.float32)
+        vecs = np.empty((uniq.size, self.store.d), np.float32)
+        adjs = np.empty((uniq.size, self.store.r), np.int32)
         with self._lock:                      # probe the cache, count
             missing: list[tuple[int, int]] = []
             for j, i in enumerate(uniq.tolist()):
-                v = self._pinned.get(i)
-                if v is None and (v := self._lru.get(i)) is not None:
+                rec = self._pinned.get(i)
+                if rec is None and (rec := self._lru.get(i)) is not None:
                     self._lru.move_to_end(i)
-                if v is None:
+                if rec is None:
                     missing.append((j, i))
                 else:
-                    out[j] = v
+                    vecs[j], adjs[j] = rec
             self.hits += uniq.size - len(missing)
             self.misses += len(missing)
         if missing:
-            with self._io_lock:               # the block reads — cache lock free
-                vecs, _ = self.store.read_many(
-                    np.asarray([i for _, i in missing], np.int64))
-            with self._lock:                  # insert what was read
-                for (j, i), v in zip(missing, vecs):
-                    out[j] = v
+            miss_ids = np.asarray([i for _, i in missing], np.int64)
+            if self.store.nodes_per_block > 1:
+                # Block-granular read: cache every co-located record, so the
+                # packed layout's co-expansions become hits.
+                with self._io_lock:
+                    got_ids, got_v, got_a = self.store.read_blocks(
+                        self.store.io_block_of(miss_ids))
+                rec_of = {int(i): (got_v[j].copy(), got_a[j].copy())
+                          for j, i in enumerate(got_ids)}
+                with self._lock:
+                    for j, i in missing:
+                        vecs[j], adjs[j] = rec_of[i]
                     if self.cache_nodes > 0:
-                        self._lru[i] = v.copy()
+                        for i, rec in rec_of.items():
+                            if i not in self._pinned:
+                                self._lru[i] = rec
+                                self._lru.move_to_end(i)
                         while len(self._lru) > self.cache_nodes:
                             self._lru.popitem(last=False)
-        return out[inverse]
+            else:
+                with self._io_lock:          # block reads — cache lock free
+                    got_v, got_a = self.store.read_many(miss_ids)
+                with self._lock:             # insert what was read
+                    for (j, i), v, a in zip(missing, got_v, got_a):
+                        vecs[j], adjs[j] = v, a
+                        if self.cache_nodes > 0:
+                            self._lru[i] = (v.copy(), a.copy())
+                            while len(self._lru) > self.cache_nodes:
+                                self._lru.popitem(last=False)
+        return vecs[inverse], adjs[inverse]
+
+    def fetch(self, ids: np.ndarray) -> np.ndarray:
+        """(len(ids), D) float32 for a flat array of valid node ids."""
+        return self.fetch_records(ids)[0]
 
     def fetch_beams(self, beam_ids: np.ndarray) -> np.ndarray:
-        beam_ids = np.asarray(beam_ids)
-        safe = np.maximum(beam_ids, 0)
-        flat = self.fetch(safe.ravel())
-        return flat.reshape(*safe.shape, self.store.d)
+        """Batched rerank fetch.  INVALID (-1) lanes are masked out of
+        counting and I/O and their rows zero-filled — the rerank masks their
+        distances to inf regardless, but padding lanes must not inflate the
+        node-0 counters or trigger real block reads."""
+        beam_ids = np.asarray(beam_ids, np.int64)
+        out = np.zeros((*beam_ids.shape, self.store.d), np.float32)
+        valid = beam_ids >= 0
+        if valid.any():
+            out[valid] = self.fetch(beam_ids[valid])
+        return out
+
+    def fetch_adj(self, ids: np.ndarray) -> np.ndarray:
+        """Adjacency rows for the out-of-core walk's frontier: (..., R) i32,
+        all-INVALID rows for INVALID lanes (inactive walk lanes issue no
+        I/O and are masked out of the expand program anyway)."""
+        ids = np.asarray(ids, np.int64)
+        out = np.full((*ids.shape, self.store.r), search_mod.INVALID,
+                      np.int32)
+        valid = ids >= 0
+        if valid.any():
+            out[valid] = self.fetch_records(ids[valid])[1]
+        return out
 
     def prefetch(self, beam_ids: np.ndarray) -> "concurrent.futures.Future":
         """Submit :meth:`fetch_beams` to the host worker; the caller joins
         the future at rerank time (the staged pipeline joins it one stage
         later, after the next batch's continues are on the device queue)."""
-        return self._pool.submit(self.fetch_beams, np.asarray(beam_ids))
+        return self._executor().submit(self.fetch_beams,
+                                       np.asarray(beam_ids))
+
+    def prefetch_adj(self, ids: np.ndarray) -> "concurrent.futures.Future":
+        """Submit :meth:`fetch_adj` to the host worker — the walk-prefetch
+        stage (next hop's frontier rows) and the out-of-core walk's
+        I/O-group overlap both ride this."""
+        return self._executor().submit(self.fetch_adj, np.asarray(ids))
 
     # ---------------------------------------------------------- observability
 
@@ -360,6 +488,7 @@ class BlockSlowTier:
                 "pinned_nodes": len(self._pinned),
                 "cached_nodes": len(self._lru),
                 "blocks_read": self.store.stats.blocks_read,
+                "io_blocks": self.store.stats.io_blocks,
                 "read_time_s": self.store.stats.read_time_s,
                 "measured_read_us": self.store.stats.measured_read_us(),
             }
@@ -400,16 +529,22 @@ def entry_proximal_ids(adj, entry, limit: int = 256) -> np.ndarray:
 
 def open_or_build_slow_tier(path, index: TieredIndex,
                             cache_nodes: int = 4096, pin_nodes: int = 256,
-                            log=None) -> BlockSlowTier:
+                            log=None, nodes_per_block: int = 1,
+                            slot_of: np.ndarray | None = None
+                            ) -> BlockSlowTier:
     """The serving bootstrap every ``--disk PATH`` consumer shares: open (or
-    write — absent/unreadable/stale, see
+    write — absent/unreadable/stale/re-laid-out, see
     :func:`repro.index.blockstore.ensure_block_store`) the block store for
     ``index`` and wrap it in a :class:`BlockSlowTier` with the
-    entry-proximal neighbourhood pinned."""
+    entry-proximal neighbourhood pinned.  ``nodes_per_block``/``slot_of``
+    select the I/O-block granularity and the packed layout (see
+    :func:`repro.core.build.block_layout`)."""
     from repro.index.blockstore import ensure_block_store
 
     store = ensure_block_store(path, np.asarray(index.vectors),
-                               np.asarray(index.graph.adj), log=log)
+                               np.asarray(index.graph.adj), log=log,
+                               nodes_per_block=nodes_per_block,
+                               slot_of=slot_of)
     pinned = (entry_proximal_ids(index.graph.adj, index.graph.entry,
                                  limit=pin_nodes) if pin_nodes > 0 else None)
     return BlockSlowTier(store, cache_nodes=cache_nodes, pinned_ids=pinned)
@@ -428,3 +563,130 @@ def rerank_with_slow_tier(slow_tier, beam_ids, queries, k: int,
             else slow_tier.fetch_beams(np.asarray(beam_ids)))
     return search_mod._rerank_from_vecs_jit(
         jnp.asarray(beam_ids), jnp.asarray(vecs), jnp.asarray(queries), k=k)
+
+
+# --------------------------------------------------------------------------
+# Out-of-core walk drivers: host loops over the split-hop device programs of
+# repro.core.search (ooc_select_pq / ooc_hop_pq), adjacency served from the
+# block store.  See the module docstring for the architecture; bit-identity
+# with the in-memory walk is argued (and spot-verified) there and pinned by
+# the engine-parity matrix.
+# --------------------------------------------------------------------------
+
+
+def _tree_slice(state, a: int, b: int):
+    return jax.tree_util.tree_map(lambda x: x[a:b], state)
+
+
+def _tree_concat(states):
+    return jax.tree_util.tree_map(
+        lambda *xs: jnp.concatenate(xs, axis=0), *states)
+
+
+def ooc_walk(codes: Array, states, ctxs: Array, budgets: Array,
+             hop_limits: Array, beam_width: int, tier: BlockSlowTier,
+             io_groups: int = 2):
+    """Drive a batch of per-lane walk states to convergence out-of-core.
+
+    Lanes are split into up to ``io_groups`` contiguous groups that advance
+    round-robin: while one group's hop program runs on the device, another
+    group's adjacency rows are being read on the tier's worker thread
+    (submitted via :meth:`BlockSlowTier.prefetch_adj`).  Per-lane results
+    are independent of the grouping (the bucketed scheduler already pins
+    lane-slicing result-transparency), so ``io_groups`` is purely an
+    I/O/compute-overlap knob.  Returns the final states.
+    """
+    nq = int(ctxs.shape[0])
+    if nq == 0:
+        return states
+    budgets = jnp.asarray(budgets)
+    hop_limits = jnp.asarray(hop_limits)
+    n_groups = max(1, min(int(io_groups), nq))
+    per = (nq + n_groups - 1) // n_groups
+    bounds = [(a, min(a + per, nq)) for a in range(0, nq, per)]
+
+    groups = []
+    for a, b in bounds:
+        st, u, act = search_mod.ooc_select_pq(
+            _tree_slice(states, a, b), budgets[a:b], hop_limits[a:b],
+            beam_width)
+        groups.append({
+            "st": st, "u": u, "act": act, "ctx": ctxs[a:b],
+            "bud": budgets[a:b], "hl": hop_limits[a:b],
+            "future": None, "done": False,
+        })
+    # Prime the I/O pipeline: every live group's first frontier fetch goes
+    # to the worker before any hop program is dispatched.
+    for g in groups:
+        if np.asarray(g["act"]).any():
+            g["future"] = tier.prefetch_adj(np.asarray(g["u"]))
+        else:
+            g["done"] = True
+    while not all(g["done"] for g in groups):
+        for g in groups:
+            if g["done"]:
+                continue
+            rows = g["future"].result()     # worker I/O for *this* group
+            st, u, act = search_mod.ooc_hop_pq(
+                codes, g["st"], g["u"], g["act"], jnp.asarray(rows),
+                g["ctx"], g["bud"], g["hl"], beam_width)
+            g["st"], g["u"], g["act"] = st, u, act
+            # Syncing act blocks on this group's device program; the other
+            # groups' fetches are meanwhile in flight on the worker.
+            if np.asarray(act).any():
+                g["future"] = tier.prefetch_adj(np.asarray(u))
+            else:
+                g["done"] = True
+    if n_groups == 1:
+        return groups[0]["st"]
+    return _tree_concat([g["st"] for g in groups])
+
+
+def ooc_probe(codes: Array, ctxs: Array, entry, n: int,
+              budget_cfg: search_mod.AdaptiveBeamBudget,
+              tier: BlockSlowTier, max_hops: int | None = None,
+              io_groups: int = 2):
+    """Out-of-core probe + budget grant: the host-driven counterpart of
+    ``search._probe_pq_jit`` (bit-identical outputs for the same inputs).
+
+    Returns (probe_state, budgets, hop_limits, q_lid).
+    """
+    l_max = budget_cfg.l_max
+    nq = int(ctxs.shape[0])
+    states = search_mod.ooc_init_pq(codes, ctxs, jnp.asarray(entry), n,
+                                    l_max)
+    probe_state = ooc_walk(
+        codes, states, ctxs,
+        jnp.full((nq,), jnp.int32(budget_cfg.l_min)),
+        jnp.full((nq,), jnp.int32(budget_cfg.probe_hops)),
+        l_max, tier, io_groups)
+    budgets, hop_limits, q_lid = search_mod._grant_budgets_jit(
+        probe_state, budget_cfg, max_hops)
+    return probe_state, budgets, hop_limits, q_lid
+
+
+def ooc_continue(codes: Array, probe_state, ctxs: Array, budgets: Array,
+                 hop_limits: Array, beam_width: int, tier: BlockSlowTier,
+                 io_groups: int = 2):
+    """Out-of-core continue: resume probe states under granted budgets —
+    the host-driven counterpart of ``search._continue_pq_jit``.
+
+    Returns (beam_ids, beam_d, hops, evals), the staged continue-program
+    signature (so the engine's bucket scheduler can dispatch it unchanged).
+    """
+    state = ooc_walk(codes, probe_state, ctxs, budgets, hop_limits,
+                     beam_width, tier, io_groups)
+    return state[0], state[1], state[4], state[5]
+
+
+def ooc_first_frontier(probe_state, budgets: Array, hop_limits: Array,
+                       beam_width: int) -> np.ndarray:
+    """The continue phase's first frontier node per lane (INVALID for lanes
+    already converged) — computable as soon as the budget grant lands, which
+    is what makes the engine's walk-prefetch stage possible: these nodes'
+    blocks are submitted to the tier worker one stage before the continue
+    runs."""
+    _, u, _ = search_mod.ooc_select_pq(
+        probe_state, jnp.asarray(budgets), jnp.asarray(hop_limits),
+        beam_width)
+    return np.asarray(u)

@@ -52,6 +52,8 @@ def save_index(
     disk_model: DiskTierModel | None = None,
     shard_laws=None,
     version: int = 1,
+    nodes_per_block: int = 1,
+    slot_of=None,
 ) -> None:
     """Write one index shard; ``disk_model`` (the slow-tier latency model the
     index was benchmarked/SLO'd under) rides along in the manifest so a
@@ -66,6 +68,13 @@ def save_index(
     tier (vector + adjacency per node, block-aligned + checksummed) in the
     ``<path>.blocks`` sidecar — what :func:`load_slow_tier` serves from
     disk.  ``version=1`` keeps the historical single-npz format.
+
+    ``nodes_per_block`` / ``slot_of`` (v2 only) select the sidecar's
+    block-aware record layout (see
+    :func:`repro.index.blockstore.write_block_store`; ``slot_of`` typically
+    comes from :func:`repro.core.build.block_layout`).  The layout rides in
+    the manifest's ``blocks`` entry so a reopened deployment cross-checks
+    it like the store geometry.
     """
     if version not in (1, 2):
         raise ValueError(f"unknown index format version {version}")
@@ -104,7 +113,8 @@ def save_index(
     else:
         bp = blockstore.write_block_store(
             blocks_path(path), np.asarray(index.vectors),
-            np.asarray(index.graph.adj))
+            np.asarray(index.graph.adj),
+            nodes_per_block=nodes_per_block, slot_of=slot_of)
         store = blockstore.BlockStore(bp)
         manifest["blocks"] = {
             "file": bp.name,           # sibling of the npz, relocatable
@@ -114,6 +124,11 @@ def save_index(
             # the same shape apart — a swapped sidecar must fail to open.
             "vectors_crc32": store.vectors_crc32,
         }
+        if store.nodes_per_block != 1 or store.slot_of is not None:
+            # Layout rider: how records were packed (block-aware builds).
+            manifest["blocks"]["nodes_per_block"] = store.nodes_per_block
+            manifest["blocks"]["layout"] = store.layout
+            manifest["blocks"]["slot_table_crc32"] = store.slot_table_crc32
     np.savez_compressed(path, manifest=json.dumps(manifest), **arrays)
 
 
@@ -200,6 +215,9 @@ def open_block_store(path: str | pathlib.Path,
     keys = ("n", "d", "r", "block_size")
     if blk.get("vectors_crc32") is not None:
         keys += ("vectors_crc32",)   # content identity, not just geometry
+    for key in ("nodes_per_block", "slot_table_crc32"):
+        if blk.get(key) is not None:
+            keys += (key,)           # layout rider (block-aware builds)
     for key in keys:
         sval = getattr(store, key)
         if sval is None or int(blk[key]) != int(sval):
@@ -207,6 +225,11 @@ def open_block_store(path: str | pathlib.Path,
                 f"{store.path}: sidecar {key}={sval} does not match the "
                 f"index manifest's {key}={blk[key]} (stale or swapped "
                 "block file)")
+    if blk.get("layout") is not None and blk["layout"] != store.layout:
+        raise blockstore.BlockStoreFormatError(
+            f"{store.path}: sidecar layout={store.layout!r} does not match "
+            f"the index manifest's layout={blk['layout']!r} (stale or "
+            "swapped block file)")
     return store
 
 

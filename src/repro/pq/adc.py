@@ -28,7 +28,10 @@ Array = jax.Array
 @jax.jit
 def build_lut(queries: Array, centroids: Array) -> Array:
     """(Q, D), (M, K, dsub) -> (Q, M, K) squared-distance tables."""
-    q_subs = queries.reshape(queries.shape[0], centroids.shape[0], -1)  # (Q,M,dsub)
+    # Explicit dsub (not -1): a zero-query batch has size 0, which -1
+    # inference can't divide through.
+    q_subs = queries.reshape(queries.shape[0], centroids.shape[0],
+                             centroids.shape[2])  # (Q,M,dsub)
     diff = q_subs[:, :, None, :] - centroids[None, :, :, :]  # (Q,M,K,dsub)
     return jnp.sum(diff * diff, axis=-1)
 

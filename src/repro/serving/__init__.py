@@ -36,6 +36,15 @@ the local rerank + hedged global merge — there is no separate host rerank
 stage.  Fixed-beam serving and engines without a budget law keep the
 monolithic one-program step.
 
+The out-of-core backend (:class:`~repro.serving.engine.OutOfCoreBackend`)
+serves indices bigger than device memory: only PQ codes steer from HBM,
+adjacency + vectors are read at walk time from the block store
+(:mod:`repro.index.disk` out-of-core drivers), and the pipeline grows a
+*walk-prefetch* stage — the continue phase's first-frontier adjacency
+reads are submitted to the tier's worker one stage ahead, bounded by the
+backend's ``io_depth``.  Results stay bit-identical to the in-memory
+tiered backend (the engine-parity matrix pins it).
+
 Cross-batch admission coalescing (``SearchEngine(coalesce_lanes=)``) merges
 micro-batches below the lane threshold into one dispatch and splits the
 results back per input batch — order preserved, results per query unchanged
@@ -75,6 +84,7 @@ from repro.serving.engine import (  # noqa: F401
     BatchResult,
     DistributedBackend,
     ExactBackend,
+    OutOfCoreBackend,
     SearchEngine,
     TieredBackend,
 )

@@ -227,8 +227,21 @@ class TieredBackend(_StagedRerankMixin):
                     "BlockSlowTier over a store written from the new "
                     "vectors, or None to return to in-memory rows")
             slow_tier = None
+        old = self.slow_tier
         self.index = index
         self.slow_tier = slow_tier
+        # A replaced disk tier owns a worker thread — shut it down (the
+        # refresh path would otherwise leak one thread per index swap).
+        if (old is not None and old is not slow_tier
+                and getattr(old, "is_disk", False)):
+            old.close()
+
+    def close(self) -> None:
+        """Release backend resources: shuts down a disk slow tier's worker
+        thread (idempotent; in-memory tiers hold nothing closeable)."""
+        if self.slow_tier is not None and getattr(self.slow_tier, "is_disk",
+                                                  False):
+            self.slow_tier.close()
 
     @property
     def prefetches(self) -> bool:
@@ -306,6 +319,153 @@ class TieredBackend(_StagedRerankMixin):
         return calib.tiered_recall_eval(
             self.index, queries, gt_ids, k=k, sample=sample, seed=seed,
             base_cfg=base_cfg)
+
+
+class OutOfCoreBackend(_StagedRerankMixin):
+    """Serve an index bigger than device memory: only the PQ codes (and
+    codebook + entry) live in HBM to steer the walk — adjacency *and*
+    full-precision vectors stay in the block store and are read at walk /
+    rerank time through the slow tier's worker thread.
+
+    The walk runs the out-of-core drivers of :mod:`repro.index.disk`
+    (:func:`~repro.index.disk.ooc_probe` /
+    :func:`~repro.index.disk.ooc_continue`): each hop is split at the
+    frontier selection so the host can fetch ``adj[u]`` from the store
+    between two small device programs, with ``io_groups`` lane groups
+    round-robined to overlap one group's block reads with another's device
+    hop.  Results are bit-identical to the in-memory
+    :class:`TieredBackend` (the engine-parity matrix pins it).
+
+    ``walk_prefetches`` makes the engine insert a *walk-prefetch* stage:
+    the continue phase's first frontier is known as soon as the probe's
+    budgets are granted, so up to ``io_depth`` of those adjacency blocks
+    are submitted to the tier's worker one pipeline stage before the
+    continue runs — a pure cache warm-up, never a result change.
+
+    ``step_kernel`` is accepted for engine-API parity but the out-of-core
+    hop always runs the reference op chain: the fused Pallas step fuses
+    the full-adjacency HBM gather, which is exactly what this backend
+    avoids having in device memory.  (Reference and fused are bit-identical
+    anyway, so the parity matrix's kernel axis stays meaningful.)
+    """
+
+    staged = True
+    prefetches = True        # the rerank fetch is always a disk read here
+    walk_prefetches = True
+
+    def __init__(self, codes, codebook, entry, slow_tier, *,
+                 io_groups: int = 2, io_depth: int = 32,
+                 step_kernel: str | None = None):
+        self.io_groups = io_groups
+        self.io_depth = io_depth
+        self.step_kernel = step_kernel
+        self.slow_tier = None
+        self.update(codes, codebook, entry, slow_tier=slow_tier)
+
+    def update(self, codes, codebook, entry, *, slow_tier) -> None:
+        """Swap the steering arrays and the block-store tier in place
+        (Online-MCGI refresh path).  ``slow_tier`` is a required keyword:
+        the store holds the graph itself here, so a refresh that doesn't
+        name it would either serve a stale graph or silently lose the
+        index.  A replaced tier's worker thread is shut down."""
+        if slow_tier is None or not getattr(slow_tier, "is_disk", False):
+            raise ValueError(
+                "out-of-core serving needs a BlockSlowTier over a store "
+                "holding the graph's adjacency + vectors")
+        old = self.slow_tier
+        self.codes = jnp.asarray(codes)
+        self.codebook = codebook
+        self.entry = jnp.asarray(entry)
+        self.slow_tier = slow_tier
+        if old is not None and old is not slow_tier:
+            old.close()
+
+    def close(self) -> None:
+        """Shut down the slow tier's worker thread (idempotent)."""
+        if self.slow_tier is not None:
+            self.slow_tier.close()
+
+    def set_step_kernel(self, step_kernel: str | None) -> None:
+        """Recorded for engine-API parity; the out-of-core walk always runs
+        the reference hop ops (see the class docstring)."""
+        self.step_kernel = step_kernel
+
+    def admit(self, queries: Array) -> Array:
+        # Same LUT ops as the tiered admit (repro.index.disk._query_luts),
+        # so admission is bit-identical between the two backends.
+        from repro.pq import build_lut
+
+        q = jnp.asarray(queries)
+        d_book = self.codebook.m * self.codebook.dsub
+        if q.shape[1] < d_book:
+            q = jnp.pad(q, ((0, 0), (0, d_book - q.shape[1])))
+        return build_lut(q, self.codebook.centroids)
+
+    def probe(self, ctxs, budget_cfg):
+        from repro.index import disk as disk_mod
+
+        return disk_mod.ooc_probe(
+            self.codes, ctxs, self.entry, int(self.codes.shape[0]),
+            budget_cfg, self.slow_tier, io_groups=self.io_groups)
+
+    def continue_fn(self, budget_cfg):
+        from repro.index import disk as disk_mod
+
+        def cont(sub_state, sub_ctxs, sub_budgets, sub_hop_limits):
+            return disk_mod.ooc_continue(
+                self.codes, sub_state, sub_ctxs, sub_budgets,
+                sub_hop_limits, budget_cfg.l_max, self.slow_tier,
+                io_groups=self.io_groups)
+
+        return cont
+
+    def prefetch_walk(self, probe_state, budgets, hop_limits):
+        """Submit the continue phase's first-frontier adjacency reads (up
+        to ``io_depth`` nodes) to the tier's worker — the walk-prefetch
+        stage's work.  Cache warm-up only; returns the future (or None when
+        every lane already converged in the probe)."""
+        from repro.index import disk as disk_mod
+
+        u = disk_mod.ooc_first_frontier(
+            probe_state, budgets, hop_limits,
+            int(probe_state[0].shape[1]))
+        u = u[u >= 0][:self.io_depth]
+        if u.size == 0:
+            return None
+        return self.slow_tier.prefetch_adj(u)
+
+    def prefetch_rerank(self, parts):
+        """See :meth:`TieredBackend.prefetch_rerank`."""
+        return self.slow_tier.prefetch(np.asarray(parts[0]))
+
+    def rerank(self, beam_ids, beam_d, queries, k: int, prefetch=None):
+        from repro.index.disk import rerank_with_slow_tier
+
+        return rerank_with_slow_tier(
+            self.slow_tier, np.asarray(beam_ids), queries, k,
+            prefetched=prefetch.result() if prefetch is not None else None)
+
+    def finish_extras(self) -> dict[str, Any]:
+        return {"slow_tier": self.slow_tier.stats()}
+
+    def fixed(self, queries, *, beam_width: int, max_hops: int, k: int):
+        from repro.index import disk as disk_mod
+
+        ctxs = self.admit(queries)
+        nq = int(ctxs.shape[0])
+        states = search_mod.ooc_init_pq(
+            self.codes, ctxs, self.entry, int(self.codes.shape[0]),
+            beam_width)
+        state = disk_mod.ooc_walk(
+            self.codes, states, ctxs,
+            jnp.full((nq,), jnp.int32(beam_width)),
+            jnp.full((nq,), jnp.int32(max_hops)),
+            beam_width, self.slow_tier, self.io_groups)
+        ids, d2 = disk_mod.rerank_with_slow_tier(
+            self.slow_tier, np.asarray(state[0]), queries, k)
+        stats = search_mod.SearchStats(hops=np.asarray(state[4]),
+                                       dist_evals=np.asarray(state[5]))
+        return ids, d2, stats, None
 
 
 class DistributedBackend:
@@ -518,6 +678,8 @@ class _InFlight:
     budgets_np: Any = None
     ceilings: tuple[int, ...] | None = None
     dispatched: Any = None     # [(members, continue handles)] or full-batch handles
+    # Filled by the walk-prefetch stage (out-of-core backend only):
+    walk_prefetch: Any = None  # future of the first-frontier adjacency reads
     # Filled by the prefetch stage (disk slow tier only):
     parts: Any = None          # continue outputs, synced to host numpy
     prefetch: Any = None       # future of the slow tier's block fetch
@@ -605,7 +767,10 @@ class SearchEngine:
 
     def search(self, queries) -> BatchResult:
         """Serve one batch (unpipelined): all stages back to back."""
-        f = self._schedule(self._dispatch(queries))
+        f = self._dispatch(queries)
+        if self._walk_prefetching():
+            f = self._walk_prefetch(f)
+        f = self._schedule(f)
         if self._prefetching():
             f = self._prefetch(f)
         return self._gather(f)
@@ -672,6 +837,11 @@ class SearchEngine:
         reads of one batch overlap the continue programs of the next.
         """
         stages: list = [self._schedule]
+        if self._walk_prefetching():
+            # Runs *before* the bucket/continue stage: the out-of-core
+            # backend's first-frontier adjacency reads go to the tier's
+            # worker while the newest batch's probe occupies the device.
+            stages.insert(0, self._walk_prefetch)
         if self._prefetching():
             stages.append(self._prefetch)
         flight: list[list] = []
@@ -748,6 +918,17 @@ class SearchEngine:
                 quantum=self.pad_quantum)
         return f
 
+    def _walk_prefetch(self, f: _InFlight) -> _InFlight:
+        """Out-of-core walk-prefetch stage: submit the continue phase's
+        first-frontier adjacency block reads (bounded by the backend's
+        ``io_depth``) to the tier's worker thread — they land in the
+        tier's cache while other batches' device programs run.  Pure cache
+        warm-up; results never depend on it."""
+        if self._staged():
+            f.walk_prefetch = self.backend.prefetch_walk(
+                f.probe_state, f.budgets, f.hop_limits)
+        return f
+
     def _prefetch(self, f: _InFlight) -> _InFlight:
         """Disk-slow-tier stage: sync the continue outputs to host numpy and
         submit the rerank's block reads to the tier's worker thread.  Runs
@@ -793,6 +974,12 @@ class SearchEngine:
     def _prefetching(self) -> bool:
         """Whether the pipeline should run the disk-prefetch stage."""
         return self._staged() and getattr(self.backend, "prefetches", False)
+
+    def _walk_prefetching(self) -> bool:
+        """Whether the pipeline should run the walk-prefetch stage (the
+        out-of-core backend reads adjacency at walk time)."""
+        return (self._staged()
+                and getattr(self.backend, "walk_prefetches", False))
 
     def _resolve_ceilings(self, budgets_np, cfg) -> tuple[int, ...] | None:
         if self.num_buckets == "auto":
@@ -870,5 +1057,14 @@ class SearchEngine:
 
     def update_backend(self, *args, **kw) -> None:
         """Swap refreshed index arrays into the live backend (Online-MCGI
-        insert path); see the backend's ``update`` signature."""
+        insert path); see the backend's ``update`` signature.  Backends
+        owning a disk slow tier close the replaced tier's worker thread
+        as part of ``update``."""
         self.backend.update(*args, **kw)
+
+    def close(self) -> None:
+        """Release backend-owned resources (disk slow tiers own a worker
+        thread).  Idempotent; backends without resources are a no-op."""
+        close = getattr(self.backend, "close", None)
+        if close is not None:
+            close()

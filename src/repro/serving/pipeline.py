@@ -188,11 +188,12 @@ def bucketed_continue(
         handles = _dispatch_bucket(continue_fn, probe_state, ctxs, budgets,
                                    hop_limits, padded)
         out = _scatter_bucket(out, q, members, handles)
-    if out is None:  # zero-query batch: no buckets, empty typed outputs
-        l_max = probe_state[0].shape[1]
-        out = (np.empty((q, l_max), np.int32),
-               np.empty((q, l_max), np.float32),
-               np.empty((q,), np.int32), np.empty((q,), np.int32))
+    if out is None:  # zero-query batch: no buckets — dispatch a zero-lane
+        # program so the empty outputs carry the *program's* signature
+        # (single-host continues return 4 arrays, distributed returns 5)
+        members, handles = _zero_lane_bucket(continue_fn, probe_state, ctxs,
+                                             budgets, hop_limits)
+        out = _scatter_bucket(out, q, members, handles)
     return out
 
 
@@ -213,12 +214,16 @@ def dispatch_bucketed_continue(
     another batch's programs sit between dispatch and gather."""
     if budgets_np is None:
         budgets_np = np.asarray(budgets)
-    return [
+    dispatched = [
         (members, _dispatch_bucket(continue_fn, probe_state, ctxs, budgets,
                                    hop_limits, padded))
         for _bi, members, padded in partition_by_bucket(budgets_np, ceilings,
                                                         quantum)
     ]
+    if not dispatched:   # zero-query batch — see bucketed_continue
+        dispatched = [_zero_lane_bucket(continue_fn, probe_state, ctxs,
+                                        budgets, hop_limits)]
+    return dispatched
 
 
 def gather_bucketed_continue(q: int, dispatched):
@@ -243,6 +248,16 @@ def _dispatch_bucket(continue_fn, probe_state, ctxs, budgets, hop_limits,
     sel = jnp.asarray(padded)
     sub_state = jax.tree_util.tree_map(lambda a: a[sel], probe_state)
     return continue_fn(sub_state, ctxs[sel], budgets[sel], hop_limits[sel])
+
+
+def _zero_lane_bucket(continue_fn, probe_state, ctxs, budgets, hop_limits):
+    """A (members, handles) pair for a zero-lane dispatch of the continue
+    program: its outputs are empty but correctly typed/shaped, whatever the
+    program's signature — the generic way to produce a zero-query batch's
+    result tuple without hardcoding any backend's output arity."""
+    none = np.empty((0,), np.int64)
+    return none, _dispatch_bucket(continue_fn, probe_state, ctxs, budgets,
+                                  hop_limits, none)
 
 
 def _scatter_bucket(out, q: int, members, handles):

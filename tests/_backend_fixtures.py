@@ -42,8 +42,12 @@ DIST_CHUNK = 8          # query_chunk of the distributed fixtures
 # "disk" = the tiered backend with its slow tier served from the
 # block-aligned on-disk store — same walk, host-side rerank fetch; its
 # reference paths (monolithic / core-bucketed) are the *in-memory* tiered
-# ones, which is exactly the bit-identity under test.
-SINGLE_HOST = ("exact", "pq", "tiered", "disk")
+# ones, which is exactly the bit-identity under test.  "ooc" = the
+# out-of-core backend: adjacency + vectors live *only* in a block-aware
+# packed store (nodes_per_block=8, greedy build-time layout) and are read
+# at walk time — same in-memory tiered reference paths, so the matrix pins
+# the out-of-core walk's bit-identity too.
+SINGLE_HOST = ("exact", "pq", "tiered", "disk", "ooc")
 
 
 def has_mesh() -> bool:
@@ -104,9 +108,34 @@ def built_disk_tier():
     atexit.register(shutil.rmtree, tmp, ignore_errors=True)
     p = pathlib.Path(tmp) / "fixture.blocks"
     write_block_store(p, np.asarray(tiered.vectors), np.asarray(idx.adj))
-    return BlockSlowTier(
+    tier = BlockSlowTier(
         BlockStore(p), cache_nodes=1024,
         pinned_ids=entry_proximal_ids(idx.adj, idx.entry, limit=64))
+    atexit.register(tier.close)    # don't leak the worker thread
+    return tier
+
+
+@functools.lru_cache(maxsize=1)
+def built_ooc_tier():
+    """Shared BlockSlowTier for the out-of-core backend: a *packed* store
+    (nodes_per_block=8, greedy block-aware slot assignment from the built
+    graph), so the parity matrix exercises the block-granular read path and
+    the build-time layout together."""
+    from repro.core.build import block_layout
+    from repro.index import BlockSlowTier, BlockStore, write_block_store
+    from repro.index.disk import entry_proximal_ids
+
+    _x, _q, _gt, idx, tiered = built()
+    tmp = tempfile.mkdtemp(prefix="mcgi-packedstore-")
+    atexit.register(shutil.rmtree, tmp, ignore_errors=True)
+    p = pathlib.Path(tmp) / "fixture-packed.blocks"
+    write_block_store(p, np.asarray(tiered.vectors), np.asarray(idx.adj),
+                      nodes_per_block=8, slot_of=block_layout(idx, 8))
+    tier = BlockSlowTier(
+        BlockStore(p), cache_nodes=1024,
+        pinned_ids=entry_proximal_ids(idx.adj, idx.entry, limit=64))
+    atexit.register(tier.close)
+    return tier
 
 
 def _make_backend(variant: str, budget, shard_laws=None, step_kernel=None):
@@ -126,6 +155,10 @@ def _make_backend(variant: str, budget, shard_laws=None, step_kernel=None):
     if variant == "disk":
         return serving.TieredBackend(tiered, slow_tier=built_disk_tier(),
                                      step_kernel=step_kernel)
+    if variant == "ooc":
+        return serving.OutOfCoreBackend(
+            tiered.codes, tiered.codebook, idx.entry, built_ooc_tier(),
+            step_kernel=step_kernel)
     assert variant == "tiered", variant
     return serving.TieredBackend(tiered, step_kernel=step_kernel)
 
@@ -158,9 +191,9 @@ def monolithic(variant: str, q, budget=BUDGET):
             x, idx.adj, q, idx.entry, budget, k=10)
     if variant == "pq":
         return search_tiered_adaptive(tiered, q, budget, k=10, rerank=False)
-    # "disk" shares the in-memory tiered reference: the disk engine must
-    # reproduce the in-memory slow tier's results.
-    assert variant in ("tiered", "disk"), variant
+    # "disk" and "ooc" share the in-memory tiered reference: the disk and
+    # out-of-core engines must reproduce the in-memory results.
+    assert variant in ("tiered", "disk", "ooc"), variant
     return search_tiered_adaptive(tiered, q, budget, k=10)
 
 
@@ -175,7 +208,7 @@ def core_bucketed(variant: str, q, num_buckets, budget=BUDGET):
     if variant == "pq":
         return search_tiered_adaptive(
             tiered, q, budget, k=10, rerank=False, num_buckets=num_buckets)
-    assert variant in ("tiered", "disk"), variant
+    assert variant in ("tiered", "disk", "ooc"), variant
     return search_tiered_adaptive(
         tiered, q, budget, k=10, num_buckets=num_buckets)
 

@@ -254,6 +254,14 @@ def scenario_staged_engine():
              and (p.d2 == staged.search(b).d2).all())
         for p, b in zip(piped, batches))
 
+    # Zero-query batch through the staged distributed path: the empty
+    # fallback must carry the *distributed* continue signature (5-tuple,
+    # shard ids included), not a hardcoded single-host 4-tuple.
+    r0 = staged.search(q[:0])
+    out["zero_query_ok"] = (
+        r0.ids.shape == (0, 10) and r0.d2.shape == (0, 10)
+        and np.asarray(r0.extras["shard_ids"]).shape == (0, 10))
+
     # Permutation invariance (pinned center).
     perm = np.random.default_rng(7).permutation(q.shape[0])
     inv = np.argsort(perm)

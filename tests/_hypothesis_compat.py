@@ -8,8 +8,8 @@ are the real thing (shrinking, example database, the works); without it, a
 small deterministic fallback draws a fixed number of seeded examples from
 the same strategy expressions — weaker, but the properties still execute.
 
-Only the strategy surface those two files use is implemented: ``floats``,
-``integers``, ``lists``.
+Only the strategy surface the test files use is implemented: ``floats``,
+``integers``, ``lists``, ``sampled_from``.
 """
 from __future__ import annotations
 
@@ -56,6 +56,12 @@ except ImportError:
         def integers(min_value, max_value):
             return _Strategy(
                 lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def sampled_from(elements):
+            choices = list(elements)
+            return _Strategy(
+                lambda rng: choices[int(rng.integers(len(choices)))])
 
         @staticmethod
         def lists(elements, min_size=0, max_size=10):

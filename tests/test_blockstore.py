@@ -18,6 +18,7 @@ from repro.index import (BlockChecksumError, BlockSlowTier, BlockStore,
                          build_tiered_index, entry_proximal_ids,
                          open_block_store, save_index, write_block_store)
 from repro.index import blockstore as bs
+from tests._hypothesis_compat import given, settings, st
 
 N, D, R = 64, 12, 6
 
@@ -160,6 +161,57 @@ def test_ensure_block_store_reuses_recovers_and_rewrites(tmp_path):
     assert s4.vectors_crc32 == vectors_crc32(v2)
 
 
+@settings(max_examples=10, deadline=None)
+@given(frac=st.floats(0.0, 1.0), seed=st.integers(0, 2**31 - 1))
+def test_crash_recovery_never_opens_a_torn_store(frac, seed):
+    """Crash-recovery property for the atomic tmp-rename publish: simulate
+    a crash at an *arbitrary* byte cut — a partial ``.tmp`` that was never
+    renamed, a torn header, a truncated store — and assert a torn store is
+    never opened (typed error) while ``ensure_block_store`` always recovers
+    by rewriting."""
+    import shutil
+    import tempfile
+
+    from repro.index import ensure_block_store
+
+    rng = np.random.default_rng(seed)
+    vectors = rng.normal(size=(16, 8)).astype(np.float32)
+    adj = rng.integers(-1, 16, size=(16, 4)).astype(np.int32)
+    tmpdir = pathlib.Path(tempfile.mkdtemp(prefix="mcgi-crash-"))
+    try:
+        p = tmpdir / "c.blocks"
+        write_block_store(p, vectors, adj)
+        full = p.read_bytes()
+        cut = int(frac * (len(full) - 1))     # always strictly truncated
+
+        # Crash BEFORE the rename: only a partial .tmp exists, the target
+        # is absent.  The partial write must be invisible to readers and
+        # the rewrite path must recover (and re-publish over the stray tmp).
+        p.unlink()
+        tmp = p.with_name(p.name + ".tmp")
+        tmp.write_bytes(full[:cut])
+        with pytest.raises(bs.BlockStoreFormatError):
+            BlockStore(p)                     # the target was never published
+        store = ensure_block_store(p, vectors, adj)
+        np.testing.assert_array_equal(store.read_many(np.arange(16))[0],
+                                      vectors)
+        assert not tmp.exists()               # publish consumed the tmp name
+
+        # Crash that tore the published file itself (torn header when the
+        # cut lands in block 0, truncated records otherwise): never opens.
+        p.write_bytes(full[:cut])
+        with pytest.raises(bs.BlockStoreError):
+            BlockStore(p)
+        msgs = []
+        store = ensure_block_store(p, vectors, adj, log=msgs.append)
+        assert any("unreadable" in m for m in msgs)
+        vr, ar = store.read_many(np.arange(16))
+        np.testing.assert_array_equal(vr, vectors)
+        np.testing.assert_array_equal(ar, adj)
+    finally:
+        shutil.rmtree(tmpdir, ignore_errors=True)
+
+
 def test_cache_counters_exact_on_replayed_stream(store_path):
     p, vectors, adj = store_path
     pinned = np.asarray([0, 1, 2, 3])
@@ -168,22 +220,26 @@ def test_cache_counters_exact_on_replayed_stream(store_path):
     assert tier.stats()["blocks_read"] == 0
     assert tier.stats()["pinned_nodes"] == 4
 
-    stream = [np.asarray([[0, 5, 9], [5, 17, -1]]),   # -1 clamps to node 0
+    # INVALID (-1) padding lanes are masked out of counting and I/O — they
+    # must not clamp to node 0 and inflate its hit/miss counters (node 0 is
+    # pinned here, so the old clamping would fake an extra pinned hit).
+    stream = [np.asarray([[5, 9, -1], [5, 17, -1]]),
               np.asarray([[9, 17, 33]])]
-    # First pass: per batch, each *distinct* (clamped) id counts once.
-    tier.fetch_beams(stream[0])   # distinct {0,5,9,17}: 1 pinned hit, 3 miss
+    # First pass: per batch, each *distinct valid* id counts once.
+    tier.fetch_beams(stream[0])   # distinct valid {5,9,17}: 0 hits, 3 miss
     tier.fetch_beams(stream[1])   # distinct {9,17,33}: 2 hits, 1 miss
     st = tier.stats()
-    assert (st["cache_hits"], st["cache_misses"]) == (3, 4)
+    assert (st["cache_hits"], st["cache_misses"]) == (2, 4)
     assert st["blocks_read"] == 4                 # reads == misses
     # Replay: everything is cached now — all hits, zero block reads.
     tier.reset_stats()
     for beams in stream:
         out = tier.fetch_beams(beams)
-        np.testing.assert_array_equal(
-            out, vectors[np.maximum(beams, 0)])   # values still exact
+        valid = beams >= 0
+        np.testing.assert_array_equal(out[valid], vectors[beams[valid]])
+        assert (out[~valid] == 0.0).all()         # INVALID rows zero-filled
     st2 = tier.stats()
-    assert (st2["cache_hits"], st2["cache_misses"]) == (7, 0)
+    assert (st2["cache_hits"], st2["cache_misses"]) == (6, 0)
     assert st2["hit_rate"] == 1.0 and st2["blocks_read"] == 0
 
 
@@ -204,12 +260,130 @@ def test_lru_eviction_bounds_cache_and_keeps_pins(store_path):
 
 
 def test_prefetch_future_matches_direct_fetch(store_path):
-    p, vectors, _ = store_path
+    p, vectors, adj = store_path
     tier = BlockSlowTier(BlockStore(p), cache_nodes=N)
     beams = np.asarray([[1, 4, -1], [44, 2, 9]])
+    want = np.zeros((*beams.shape, D), np.float32)
+    want[beams >= 0] = vectors[beams[beams >= 0]]
     fut = tier.prefetch(beams)
-    np.testing.assert_array_equal(fut.result(),
-                                  vectors[np.maximum(beams, 0)])
+    np.testing.assert_array_equal(fut.result(), want)
+    # Walk-frontier prefetch: adjacency rows, INVALID lanes all-INVALID.
+    u = np.asarray([3, -1, 44])
+    rows = tier.prefetch_adj(u).result()
+    np.testing.assert_array_equal(rows[[0, 2]], adj[[3, 44]])
+    assert (rows[1] == -1).all()
+    tier.close()
+
+
+def test_close_shuts_down_worker_and_is_idempotent(store_path):
+    """The tier owns its prefetch thread: close() (or the context manager)
+    tears it down, later prefetches raise, synchronous fetches still work,
+    double-close is fine."""
+    import threading
+
+    def n_workers():
+        return sum("slow-tier-prefetch" in t.name
+                   for t in threading.enumerate())
+
+    p, vectors, _ = store_path
+    base = n_workers()               # other fixtures may own live tiers
+    with BlockSlowTier(BlockStore(p), cache_nodes=8) as tier:
+        tier.prefetch(np.asarray([[1, 2]])).result()
+        assert n_workers() == base + 1
+    assert tier.closed
+    assert n_workers() == base       # close() joins the worker
+    with pytest.raises(RuntimeError, match="closed"):
+        tier.prefetch(np.asarray([[1]]))
+    np.testing.assert_array_equal(tier.fetch(np.asarray([5]))[0], vectors[5])
+    tier.close()                                   # idempotent
+
+
+@pytest.fixture()
+def packed_path(tmp_path):
+    """A packed store: 8 records per I/O block, random slot permutation
+    (content round-trip must be layout-agnostic; the greedy layout is a
+    build-time concern tested in test_prune)."""
+    rng = np.random.default_rng(3)
+    vectors = rng.normal(size=(N, D)).astype(np.float32)
+    adj = rng.integers(-1, N, size=(N, R)).astype(np.int32)
+    slot_of = rng.permutation(N).astype(np.int64)
+    p = write_block_store(tmp_path / "p.blocks", vectors, adj,
+                          nodes_per_block=8, slot_of=slot_of)
+    return p, vectors, adj, slot_of
+
+
+def test_packed_layout_round_trips_by_node_id(store_path, packed_path):
+    p, vectors, adj, slot_of = packed_path
+    store = BlockStore(p)
+    assert store.nodes_per_block == 8 and store.layout == "packed"
+    assert store.slot_table_crc32 is not None
+    np.testing.assert_array_equal(store.slot_of, slot_of)
+    ids = np.asarray([0, 9, 63, 9])              # node ids, not slots
+    vecs, adjs = store.read_many(ids)
+    np.testing.assert_array_equal(vecs, vectors[ids])
+    np.testing.assert_array_equal(adjs, adj[ids])
+    # Default-layout files keep the historical attribute values (and the
+    # historical byte format: no layout keys, no slot table).
+    default = BlockStore(store_path[0])
+    assert default.nodes_per_block == 1 and default.layout == "node-order"
+    assert default.slot_of is None and default.slot_table_crc32 is None
+
+
+def test_read_blocks_returns_every_co_located_record(packed_path):
+    p, vectors, adj, _ = packed_path
+    store = BlockStore(p)
+    bid = store.io_block_of(np.asarray([5]))
+    assert bid.shape == (1,)
+    node_ids, vecs, adjs = store.read_blocks(bid)
+    assert node_ids.size == 8 and 5 in node_ids.tolist()
+    np.testing.assert_array_equal(vecs, vectors[node_ids])
+    np.testing.assert_array_equal(adjs, adj[node_ids])
+    assert store.stats.io_blocks == 1            # one I/O block touched...
+    assert store.stats.blocks_read == 8          # ...eight records read
+    # read_many's io_blocks counter is distinct-blocks, so reading all 8
+    # co-located nodes record-wise still counts a single I/O block.
+    store.reset_stats()
+    store.read_many(node_ids)
+    assert store.stats.io_blocks == 1
+
+
+def test_packed_tier_turns_co_location_into_cache_hits(packed_path):
+    p, vectors, _, _ = packed_path
+    peers = BlockStore(p)                        # discovery copy: own stats
+    node_ids, _, _ = peers.read_blocks(peers.io_block_of(np.asarray([5])))
+    others = np.asarray([i for i in node_ids.tolist() if i != 5][:3])
+    with BlockSlowTier(BlockStore(p), cache_nodes=N) as tier:
+        np.testing.assert_array_equal(tier.fetch(np.asarray([5]))[0],
+                                      vectors[5])
+        st1 = tier.stats()
+        # One miss — but the whole-block read cached the co-located peers.
+        assert (st1["cache_hits"], st1["cache_misses"]) == (0, 1)
+        assert st1["io_blocks"] == 1
+        np.testing.assert_array_equal(tier.fetch(others), vectors[others])
+        st2 = tier.stats()
+        assert (st2["cache_hits"], st2["cache_misses"]) == (3, 1)
+        assert st2["io_blocks"] == 1             # no further I/O
+
+
+def test_ensure_block_store_rewrites_on_layout_change(tmp_path):
+    from repro.index import ensure_block_store
+
+    rng = np.random.default_rng(4)
+    vectors = rng.normal(size=(16, 8)).astype(np.float32)
+    adj = rng.integers(-1, 16, size=(16, 4)).astype(np.int32)
+    slot_of = rng.permutation(16).astype(np.int64)
+    p = tmp_path / "l.blocks"
+    ensure_block_store(p, vectors, adj)          # default layout first
+    msgs = []
+    s = ensure_block_store(p, vectors, adj, nodes_per_block=8,
+                           slot_of=slot_of, log=msgs.append)
+    assert any("laid out differently" in m for m in msgs)
+    assert s.nodes_per_block == 8 and s.layout == "packed"
+    mtime = p.stat().st_mtime_ns
+    s2 = ensure_block_store(p, vectors, adj, nodes_per_block=8,
+                            slot_of=slot_of)     # same layout: reused as-is
+    assert p.stat().st_mtime_ns == mtime
+    np.testing.assert_array_equal(s2.read_many(np.arange(16))[0], vectors)
 
 
 def test_entry_proximal_pins_bfs_neighbourhood():

@@ -86,7 +86,7 @@ def test_staged_engine_parity():
     for key in ("staged_eq_mono_ids", "staged_eq_mono_d2",
                 "pipelined_eq_eager", "permutation_invariant",
                 "coalesce_count", "coalesce_identical",
-                "identity_laws_bitwise"):
+                "identity_laws_bitwise", "zero_query_ok"):
         assert r[key], (key, r)
 
 

@@ -1,8 +1,10 @@
 """Consolidated cross-backend property harness for the serving engine.
 
 Every backend (exact / PQ / tiered / disk — the tiered backend over the
-block-aligned on-disk slow tier — and distributed whenever the process has
-a mesh, i.e. the CI multi-device matrix job) is pinned to the same
+block-aligned on-disk slow tier — ooc — the out-of-core backend walking a
+block-aware packed store with only PQ codes in device memory — and
+distributed whenever the process has a mesh, i.e. the CI multi-device
+matrix job) is pinned to the same
 scheduling-transparency properties from shared fixtures
 (``tests/_backend_fixtures.py``); the disk variant's reference paths are
 the *in-memory* tiered ones, so the matrix also pins storage-tier
@@ -284,21 +286,161 @@ def test_in_memory_slow_tier_honoured():
     fx.assert_bit_identical(eng_t.search(q), fx.engine("tiered").search(q))
 
 
+def _fresh_tier():
+    """A private BlockSlowTier over the shared fixture store file — for
+    tests that close tiers (the shared fixture tier must stay open)."""
+    from repro.index import BlockSlowTier, BlockStore
+
+    return BlockSlowTier(BlockStore(fx.built_disk_tier().store.path))
+
+
 def test_disk_backend_refresh_requires_explicit_slow_tier():
     """Online-MCGI refresh on a disk backend must re-state the slow tier:
     the old store holds the old vectors, so a bare update() would either
-    serve stale reranks or silently fall back to memory."""
+    serve stale reranks or silently fall back to memory.  A replaced disk
+    tier's worker thread is shut down (no leak across refreshes)."""
     from repro import serving
 
     _, _, _, _, tiered = fx.built()
-    backend = serving.TieredBackend(tiered, slow_tier=fx.built_disk_tier())
+    t1, t2 = _fresh_tier(), _fresh_tier()
+    backend = serving.TieredBackend(tiered, slow_tier=t1)
     with pytest.raises(ValueError, match="slow_tier"):
         backend.update(tiered)
-    backend.update(tiered, slow_tier=fx.built_disk_tier())  # explicit: fine
+    assert not t1.closed                  # failed refresh keeps the old tier
+    backend.update(tiered, slow_tier=t2)  # explicit: fine
+    assert t1.closed and not t2.closed    # replaced tier torn down
+    backend.update(tiered, slow_tier=t2)  # same tier re-stated: not closed
+    assert not t2.closed
     backend.update(tiered, slow_tier=None)                  # back to memory
-    assert backend.slow_tier is None
+    assert backend.slow_tier is None and t2.closed
     mem = serving.TieredBackend(tiered)
     mem.update(tiered)                                      # memory: as before
+
+
+def test_backend_close_shuts_down_tier():
+    """TieredBackend.close / SearchEngine.close shut the disk tier's worker
+    down (idempotently); the engine's close reaches any backend's."""
+    from repro import serving
+
+    _, q, _, idx, tiered = fx.built()
+    t = _fresh_tier()
+    eng = serving.SearchEngine(serving.TieredBackend(tiered, slow_tier=t),
+                               fx.BUDGET, k=10)
+    eng.search(q[:4])
+    eng.close()
+    assert t.closed
+    eng.close()                                   # idempotent
+    with pytest.raises(RuntimeError, match="closed"):
+        t.prefetch(np.zeros((1, 2), np.int32))
+    # Backends without resources are a no-op close.
+    serving.SearchEngine(serving.ExactBackend(
+        np.asarray(fx.built()[0]), idx.adj, idx.entry), fx.BUDGET).close()
+
+
+# --------------------------------------------- out-of-core walk bit-identity
+
+@pytest.mark.parametrize("num_buckets", [None, 3, "auto"])
+def test_out_of_core_bit_identical_to_memory(num_buckets):
+    """An index whose adjacency + vectors live *only* in the block store
+    (out-of-core walk: the device holds just PQ codes) serves bit-identical
+    results to the in-memory tiered backend — ids, distances, hops, granted
+    budgets and bucket families — for every bucket family, eager and
+    pipelined (ragged tail included), and coalesced micro-batches.  The
+    fixture store is block-aware packed (nodes_per_block=8, greedy layout),
+    so the packed read path is pinned to the same bits too."""
+    _, q, _, _, _ = fx.built()
+    assert fx.built_ooc_tier().store.nodes_per_block == 8
+    eng_m = fx.engine("tiered", num_buckets=num_buckets)
+    eng_o = fx.engine("ooc", num_buckets=num_buckets)
+    fx.assert_bit_identical(eng_o.search(q), eng_m.search(q))
+    batches = fx.split(q, 9)                     # 40 % 9 != 0: ragged tail
+    for res_o, res_m in zip(eng_o.search_batches(batches),
+                            eng_m.search_batches(batches)):
+        fx.assert_bit_identical(res_o, res_m)
+    for res_o, res_m in zip(
+            fx.engine("ooc", num_buckets=num_buckets,
+                      coalesce_lanes=16).search_batches(fx.split(q, 5)),
+            fx.engine("tiered", num_buckets=num_buckets,
+                      coalesce_lanes=16).search_batches(fx.split(q, 5))):
+        fx.assert_bit_identical(res_o, res_m)
+
+
+def test_out_of_core_io_group_invariance():
+    """io_groups is a pure I/O/compute-overlap knob: any grouping of lanes
+    round-robined through the walk returns the same bits."""
+    from repro import serving
+
+    _, q, _, idx, tiered = fx.built()
+    res = []
+    for iog in (1, 3):
+        be = serving.OutOfCoreBackend(tiered.codes, tiered.codebook,
+                                      idx.entry, fx.built_ooc_tier(),
+                                      io_groups=iog)
+        res.append(serving.SearchEngine(be, fx.BUDGET, k=10).search(q))
+    fx.assert_bit_identical(res[0], res[1])
+    fx.assert_bit_identical(res[0], fx.engine("ooc").search(q))
+
+
+def test_out_of_core_fixed_beam_bit_identical_to_memory():
+    """Fixed-beam out-of-core serving matches the in-memory tiered
+    walk+rerank bitwise (monolithic dispatch, no budget law)."""
+    from repro import serving
+
+    _, q, _, idx, tiered = fx.built()
+    eng_m = serving.SearchEngine(serving.TieredBackend(tiered), None, k=10,
+                                 beam_width=24, max_hops=96)
+    eng_o = serving.SearchEngine(
+        serving.OutOfCoreBackend(tiered.codes, tiered.codebook, idx.entry,
+                                 fx.built_ooc_tier()),
+        None, k=10, beam_width=24, max_hops=96)
+    res_m, res_o = eng_m.search(q), eng_o.search(q)
+    np.testing.assert_array_equal(res_o.ids, res_m.ids)
+    np.testing.assert_array_equal(res_o.d2, res_m.d2)
+    np.testing.assert_array_equal(np.asarray(res_o.stats.hops),
+                                  np.asarray(res_m.stats.hops))
+    assert "slow_tier" in res_o.extras
+
+
+def test_out_of_core_walk_prefetch_stage_engaged():
+    """The ooc engine's pipeline runs the walk-prefetch stage (first in the
+    stage list) and it only warms the cache — serving with io_depth=0-ish
+    tiny depth vs the default returns the same bits."""
+    from repro import serving
+
+    _, q, _, idx, tiered = fx.built()
+    eng = fx.engine("ooc")
+    assert eng._walk_prefetching()
+    assert not fx.engine("disk")._walk_prefetching()
+    be = serving.OutOfCoreBackend(tiered.codes, tiered.codebook, idx.entry,
+                                  fx.built_ooc_tier(), io_depth=1)
+    fx.assert_bit_identical(
+        serving.SearchEngine(be, fx.BUDGET, k=10).search(q),
+        eng.search(q))
+
+
+def test_out_of_core_refresh_and_zero_query():
+    """OOC refresh must name the slow tier explicitly (the store *is* the
+    graph here), a replaced tier is closed; zero-query batches serve empty
+    typed results through the staged path."""
+    from repro import serving
+    from repro.index import BlockSlowTier, BlockStore
+
+    _, q, _, idx, tiered = fx.built()
+    path = fx.built_ooc_tier().store.path
+    t1, t2 = BlockSlowTier(BlockStore(path)), BlockSlowTier(BlockStore(path))
+    be = serving.OutOfCoreBackend(tiered.codes, tiered.codebook, idx.entry,
+                                  t1)
+    with pytest.raises(TypeError):
+        be.update(tiered.codes, tiered.codebook, idx.entry)
+    with pytest.raises(ValueError, match="BlockSlowTier"):
+        be.update(tiered.codes, tiered.codebook, idx.entry, slow_tier=None)
+    be.update(tiered.codes, tiered.codebook, idx.entry, slow_tier=t2)
+    assert t1.closed and not t2.closed
+    eng = serving.SearchEngine(be, fx.BUDGET, k=10)
+    r0 = eng.search(np.asarray(q)[:0])
+    assert r0.ids.shape == (0, 10) and r0.d2.shape == (0, 10)
+    eng.close()
+    assert t2.closed
 
 
 def test_disk_engine_surfaces_cache_stats():

@@ -83,3 +83,34 @@ def test_always_selects_at_least_one(seed, n, alpha):
     x = rng.normal(size=(n, 3)).astype(np.float32)
     rows, _ = _prune_complete(x, 0, alpha, degree=max(4, n // 4))
     assert (rows != INVALID).sum() >= 1
+
+
+def test_greedy_block_pack_co_locates_entry_neighbourhood():
+    """The block-aware layout packs each seed with its nearest unassigned
+    out-neighbours into consecutive slots of one I/O block (adjacency rows
+    are distance-ascending out of the prune), BFS order from the entry;
+    unreached nodes follow in id order."""
+    adj = np.asarray([[5, 3, -1], [-1] * 3, [-1] * 3, [1, -1, -1],
+                      [-1] * 3, [2, -1, -1]], np.int32)
+    slot_of = prune.greedy_block_pack(adj, entry=0, nodes_per_block=4)
+    # Group {0, 5, 3} fills slots 0-2; node 2 lands in the block's last
+    # slot; node 1 opens the next block; unreached node 4 is appended.
+    np.testing.assert_array_equal(slot_of, [0, 4, 3, 2, 5, 1])
+    # The entry's whole out-neighbourhood shares its I/O block.
+    assert {slot_of[v] // 4 for v in (0, 5, 3)} == {0}
+
+
+@given(seed=st.integers(0, 1000), npb=st.sampled_from([1, 2, 4, 8]))
+@settings(max_examples=25, deadline=None)
+def test_greedy_block_pack_is_a_permutation(seed, npb):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(3, 50))
+    adj = rng.integers(-1, n, size=(n, 4)).astype(np.int32)
+    entry = int(rng.integers(0, n))
+    slot_of = prune.greedy_block_pack(adj, entry, npb)
+    assert slot_of.dtype == np.int64
+    assert sorted(slot_of.tolist()) == list(range(n))
+    if npb == 1:
+        np.testing.assert_array_equal(slot_of, np.arange(n))
+    else:
+        assert slot_of[entry] == 0       # the entry seeds the first block

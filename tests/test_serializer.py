@@ -173,9 +173,9 @@ def test_v2_sidecar_serves_the_slow_tier(built, tmp_path):
     tier = load_slow_tier(p, cache_nodes=64, pin_nodes=16)
     assert tier.stats()["pinned_nodes"] == 16
     beams = np.asarray([[0, 5, -1], [7, 7, 2]])
-    np.testing.assert_array_equal(
-        tier.fetch_beams(beams),
-        np.asarray(index.vectors)[np.maximum(beams, 0)])
+    want = np.zeros((*beams.shape, store.d), np.float32)
+    want[beams >= 0] = np.asarray(index.vectors)[beams[beams >= 0]]
+    np.testing.assert_array_equal(tier.fetch_beams(beams), want)
     # v1 files have no sidecar to serve from — a typed error says so.
     from repro.index import BlockStoreFormatError
 
@@ -226,3 +226,37 @@ def test_round_trip_shard_laws(built, tmp_path):
     save_index(p3, index)
     assert load_shard_laws(p3) is None
     assert load_index(p3).n == index.n
+
+
+def test_v2_packed_sidecar_round_trips_and_pins_layout(built, tmp_path):
+    """A block-aware (packed) v2 sidecar: the layout rider rides in the
+    manifest, loading stays bit-identical to the node-order layout, the
+    slow tier serves from it, and a sidecar swapped for a differently-laid
+    -out rebuild of the *same content* is refused."""
+    from repro.core import block_layout
+    from repro.index import BlockStoreFormatError, write_block_store
+
+    index, _ = built
+    p = tmp_path / "packed.npz"
+    save_index(p, index, version=2, nodes_per_block=8,
+               slot_of=block_layout(index.graph, 8))
+    blk = _manifest(p)["blocks"]
+    assert blk["nodes_per_block"] == 8 and blk["layout"] == "packed"
+    assert blk["slot_table_crc32"] is not None
+    store = open_block_store(p)
+    assert store.nodes_per_block == 8 and store.layout == "packed"
+    _assert_same_index(index, load_index(p))     # layout-agnostic arrays
+    tier = load_slow_tier(p, cache_nodes=64, pin_nodes=8)
+    np.testing.assert_array_equal(
+        tier.fetch_beams(np.asarray([[0, 5, -1]]))[0, :2],
+        np.asarray(index.vectors)[[0, 5]])
+    tier.close()
+    # Same content, node-order layout: only the layout rider can tell.
+    write_block_store(blocks_path(p), np.asarray(index.vectors),
+                      np.asarray(index.graph.adj))
+    with pytest.raises(BlockStoreFormatError, match="stale or swapped"):
+        open_block_store(p)
+    # Default-layout saves keep the historical manifest (no layout keys).
+    p1 = tmp_path / "plain.npz"
+    save_index(p1, index, version=2)
+    assert "nodes_per_block" not in _manifest(p1)["blocks"]
