@@ -1,0 +1,266 @@
+"""Frequency-aware hot tier vs static pinned+LRU under skewed traffic.
+
+Real serving traffic is Zipfian and its hot set *drifts*: the nodes a
+query stream touches today are not the nodes it touched an hour ago.  The
+static policy (:class:`repro.index.disk.BlockSlowTier` with a pinned
+entry-proximal set + LRU) follows recency only; the frequency-aware hot
+tier (``BlockSlowTier(hot_nodes=...)`` + :mod:`repro.index.hot_tier`)
+follows a decayed per-node access frequency, promoting the traffic's
+actually-hot nodes in asynchronous chunks and demoting them as the hot set
+moves on.
+
+This benchmark drives the same *shifting-hot-set Zipfian* query stream
+through the out-of-core engine (walk-time adjacency + rerank reads through
+the block store — every miss is real I/O) twice, under the two policies at
+**equal record memory**: ``static: LRU = C``, ``freq-aware: LRU = C - H,
+hot tier = H``.  Both passes are asserted bitwise-identical to each other
+and to the in-memory engine first — the policies only move *where* a
+record is read from — then the report compares what the paper's regime
+actually pays for: hit rate, I/O blocks per query, and fetch-latency
+percentiles (p50/p99), all measured, not modelled.  Promotion I/O is
+accounted separately (the hot tier reads through a private store handle),
+so the serving-stream figures are exact.
+
+The stream: queries are drawn from a pool with Zipf(a) probabilities over
+a *rank permutation* that is reshuffled every phase — within a phase a few
+queries dominate (their walk neighbourhoods are the hot nodes); at a phase
+boundary the popular set jumps, so a policy must both exploit skew and
+track drift.  Promotion ticks are drained after every batch so the run is
+deterministic (serving never drains — the tick is fire-and-forget there).
+
+``--smoke`` is the CI gate: tiny graph, tmpdir store, and hard asserts —
+bitwise-identical results AND strictly higher hit rate AND strictly fewer
+I/O blocks per query for the frequency-aware policy.  Both entry points
+write ``BENCH_cache_skew.json`` (machine-readable, for perf trajectories).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro import serving
+from repro.core import build, search
+from repro.core.build import block_layout
+from repro.index import (BlockSlowTier, BlockStore, build_tiered_index,
+                         entry_proximal_ids, write_block_store)
+
+BUDGET = search.AdaptiveBeamBudget(l_min=16, l_max=64, lam=0.35)
+JSON_PATH = pathlib.Path("BENCH_cache_skew.json")
+
+
+def shifting_zipf_stream(rng, n_pool: int, n_batches: int, batch: int,
+                         a: float = 1.3, phases: int = 3) -> list[np.ndarray]:
+    """Per-batch query-pool indices: Zipf(a) over a rank permutation that
+    reshuffles every ``n_batches/phases`` batches (the hot set *shifts*,
+    it doesn't just exist)."""
+    p = 1.0 / np.arange(1, n_pool + 1) ** a
+    p /= p.sum()
+    per_phase = -(-n_batches // phases)
+    sels = []
+    while len(sels) < n_batches:
+        rank_to_query = rng.permutation(n_pool)
+        for _ in range(min(per_phase, n_batches - len(sels))):
+            sels.append(rank_to_query[rng.choice(n_pool, size=batch, p=p)])
+    return sels
+
+
+def _measure_policy(tag: str, store_path, index, graph, batches,
+                    *, cache_nodes: int, hot_nodes: int, hot_chunk: int,
+                    freq_decay: float, pin_limit: int, io_groups: int = 2):
+    """One policy's full protocol: warm pass (jit + caches + EMA), counter
+    reset, measured pass.  Returns (results, stats dict)."""
+    pins = entry_proximal_ids(graph.adj, graph.entry, limit=pin_limit)
+    tier = BlockSlowTier(BlockStore(store_path), cache_nodes=cache_nodes,
+                         pinned_ids=pins, hot_nodes=hot_nodes,
+                         hot_chunk=hot_chunk, freq_decay=freq_decay)
+    eng = serving.SearchEngine(
+        serving.OutOfCoreBackend(index.codes, index.codebook, graph.entry,
+                                 tier, io_groups=io_groups),
+        BUDGET, k=10, num_buckets="auto")
+    try:
+        for qb in batches:               # warm: compile, fill caches, tick
+            eng.search(qb)
+            tier.drain_promotions()
+        tier.reset_stats()               # measured pass counts from zero;
+        results, t0 = [], time.perf_counter()   # residency/EMA carry over
+        for qb in batches:
+            results.append(eng.search(qb))
+            tier.drain_promotions()
+        wall = time.perf_counter() - t0
+        st = tier.stats()
+        st.update(tier.fetch_latency_us())
+        n_q = sum(b.shape[0] for b in batches)
+        st["policy"] = tag
+        st["wall_s"] = wall
+        st["io_blocks_per_query"] = st["io_blocks"] / n_q
+        return results, st
+    finally:
+        tier.close()
+
+
+def _compare(store_path, index, graph, batches, *, cache_total: int,
+             hot_nodes: int, hot_chunk: int, freq_decay: float,
+             pin_limit: int, ref=None):
+    """Static pinned+LRU vs frequency-aware at equal record memory; asserts
+    bitwise identity (and against ``ref`` if given) before reporting."""
+    res_s, st_s = _measure_policy(
+        "static", store_path, index, graph, batches,
+        cache_nodes=cache_total, hot_nodes=0, hot_chunk=hot_chunk,
+        freq_decay=freq_decay, pin_limit=pin_limit)
+    res_f, st_f = _measure_policy(
+        "freq-aware", store_path, index, graph, batches,
+        cache_nodes=cache_total - hot_nodes, hot_nodes=hot_nodes,
+        hot_chunk=hot_chunk, freq_decay=freq_decay, pin_limit=pin_limit)
+    for a, b in zip(res_s, res_f):
+        np.testing.assert_array_equal(a.ids, b.ids)
+        np.testing.assert_array_equal(a.d2, b.d2)
+    if ref is not None:
+        for a, b in zip(ref, res_f):
+            np.testing.assert_array_equal(a.ids, b.ids)
+            np.testing.assert_array_equal(a.d2, b.d2)
+    return st_s, st_f
+
+
+def _emit_json(config: dict, st_s: dict, st_f: dict) -> None:
+    keep = ("hit_rate", "cache_hits", "cache_misses", "io_blocks",
+            "io_blocks_per_query", "blocks_read", "fetch_p50_us",
+            "fetch_p99_us", "fetch_mean_us", "wall_s", "hot_nodes",
+            "hot_hits", "promotions", "demotions", "promotion_ticks",
+            "promotion_io_blocks")
+    payload = {
+        "bench": "cache_skew",
+        "config": config,
+        "static": {k: st_s[k] for k in keep if k in st_s},
+        "freq_aware": {k: st_f[k] for k in keep if k in st_f},
+        "win": {
+            "hit_rate_delta": st_f["hit_rate"] - st_s["hit_rate"],
+            "io_blocks_per_query_ratio": (
+                st_f["io_blocks_per_query"] / st_s["io_blocks_per_query"]
+                if st_s["io_blocks_per_query"] else 1.0),
+            "fetch_p99_ratio": (st_f["fetch_p99_us"] / st_s["fetch_p99_us"]
+                                if st_s["fetch_p99_us"] else 1.0),
+        },
+    }
+    JSON_PATH.write_text(json.dumps(payload, indent=2, sort_keys=True))
+
+
+def run(csv: common.Csv, scale: str = "small"):
+    x, q, _gt = common.dataset("gist-proxy", scale)
+    mcgi = common.cached_graph(
+        f"gist-proxy-{scale}-mcgi",
+        lambda: build.build_mcgi(x, common.BUILD_CFG))
+    index = build_tiered_index(x, mcgi, m_pq=16)
+    from repro.index.blockstore import ensure_block_store
+
+    common.CACHE.mkdir(parents=True, exist_ok=True)
+    store_path = common.CACHE / f"gist-proxy-{scale}-mcgi-skew.blocks"
+    ensure_block_store(store_path, np.asarray(index.vectors),
+                       np.asarray(mcgi.adj), nodes_per_block=8,
+                       slot_of=block_layout(mcgi, 8))
+    qn = np.asarray(q)
+    rng = np.random.default_rng(7)
+    sels = shifting_zipf_stream(rng, qn.shape[0], n_batches=24, batch=32,
+                                a=1.3, phases=4)
+    batches = [qn[s] for s in sels]
+    config = dict(scale=scale, n=int(qn.shape[0]), batches=len(batches),
+                  batch=32, zipf_a=1.3, phases=4, cache_total=1024,
+                  hot_nodes=768, hot_chunk=256, freq_decay=0.6,
+                  pin_limit=128, nodes_per_block=8)
+    st_s, st_f = _compare(store_path, index, mcgi, batches,
+                          cache_total=config["cache_total"],
+                          hot_nodes=config["hot_nodes"],
+                          hot_chunk=config["hot_chunk"],
+                          freq_decay=config["freq_decay"],
+                          pin_limit=config["pin_limit"])
+    n_q = len(batches) * 32
+    for st in (st_s, st_f):
+        csv.add(f"cache_skew/{st['policy']}", st["wall_s"] / n_q * 1e6,
+                f"hit_rate={st['hit_rate']:.3f} "
+                f"io_blocks/query={st['io_blocks_per_query']:.1f} "
+                f"fetch_p99={st['fetch_p99_us']:.0f}us"
+                + (f" promotions={st['promotions']} "
+                   f"demotions={st['demotions']} "
+                   f"hot_hits={st['hot_hits']}"
+                   if st["policy"] == "freq-aware" else ""))
+    csv.add("cache_skew/win", 0.0,
+            f"hit_rate {st_s['hit_rate']:.3f} -> {st_f['hit_rate']:.3f} "
+            f"io_blocks/query {st_s['io_blocks_per_query']:.1f} -> "
+            f"{st_f['io_blocks_per_query']:.1f} (bitwise-identical results; "
+            f"equal record memory)")
+    _emit_json(config, st_s, st_f)
+    return {"static_hit_rate": st_s["hit_rate"],
+            "freq_hit_rate": st_f["hit_rate"],
+            "static_io_blocks_per_query": st_s["io_blocks_per_query"],
+            "freq_io_blocks_per_query": st_f["io_blocks_per_query"]}
+
+
+def smoke() -> None:
+    """CI smoke: tiny graph, tmpdir block store, hard asserts — the
+    frequency-aware policy must beat static pinned+LRU on hit rate AND
+    I/O blocks per query at bitwise-identical results, and its promotion
+    machinery must have observably run (promotions, demotions, separate
+    promotion I/O accounting)."""
+    from repro.data import make_dataset
+
+    x, q = make_dataset("tiny-mixture", seed=0)
+    x = x[:1500]
+    cfg = build.BuildConfig(degree=16, beam_width=32, iters=1, batch=256,
+                            max_hops=64)
+    idx = build.build_mcgi(x, cfg)
+    index = build_tiered_index(x, idx, m_pq=8)
+    global BUDGET
+    BUDGET = search.AdaptiveBeamBudget(l_min=8, l_max=32, lam=0.3,
+                                       center=8.0)
+    qn = np.asarray(q)
+    rng = np.random.default_rng(3)
+    sels = shifting_zipf_stream(rng, qn.shape[0], n_batches=18, batch=16,
+                                a=1.4, phases=3)
+    batches = [qn[s] for s in sels]
+    with tempfile.TemporaryDirectory() as td:
+        p = pathlib.Path(td) / "skew.blocks"
+        write_block_store(p, np.asarray(index.vectors), np.asarray(idx.adj),
+                          nodes_per_block=8, slot_of=block_layout(idx, 8))
+        eng_mem = serving.SearchEngine(serving.TieredBackend(index), BUDGET,
+                                       k=10)
+        ref = [eng_mem.search(qb) for qb in batches]
+        config = dict(scale="smoke", batches=len(batches), batch=16,
+                      zipf_a=1.4, phases=3, cache_total=384, hot_nodes=256,
+                      hot_chunk=64, freq_decay=0.6, pin_limit=64,
+                      nodes_per_block=8)
+        st_s, st_f = _compare(p, index, idx, batches,
+                              cache_total=config["cache_total"],
+                              hot_nodes=config["hot_nodes"],
+                              hot_chunk=config["hot_chunk"],
+                              freq_decay=config["freq_decay"],
+                              pin_limit=config["pin_limit"], ref=ref)
+    assert st_f["hit_rate"] > st_s["hit_rate"], (st_s, st_f)
+    assert st_f["io_blocks_per_query"] < st_s["io_blocks_per_query"], (
+        st_s, st_f)
+    assert st_f["promotions"] > 0 and st_f["demotions"] > 0, st_f
+    # Promotion I/O rides its own store handle: the serving stream's block
+    # counter must not have absorbed it.
+    assert st_f["promotion_io_blocks"] > 0, st_f
+    _emit_json(config, st_s, st_f)
+    print(f"# smoke ok: freq-aware==static==memory bitwise over "
+          f"{len(batches)} batches; hit_rate {st_s['hit_rate']:.3f} -> "
+          f"{st_f['hit_rate']:.3f}; io_blocks/query "
+          f"{st_s['io_blocks_per_query']:.1f} -> "
+          f"{st_f['io_blocks_per_query']:.1f}; "
+          f"promotions={st_f['promotions']} demotions={st_f['demotions']} "
+          f"hot_hits={st_f['hot_hits']} (promotion io accounted separately: "
+          f"{st_f['promotion_io_blocks']} blocks)")
+
+
+if __name__ == "__main__":
+    if "--smoke" in sys.argv:
+        smoke()
+    else:
+        csv = common.Csv()
+        print("name,us_per_call,derived")
+        run(csv, scale="small")

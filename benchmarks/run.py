@@ -23,6 +23,7 @@ def main() -> None:
     from benchmarks import (
         adaptive_beam,
         build_time,
+        cache_skew,
         common,
         disk_io,
         kernel_bench,
@@ -44,6 +45,7 @@ def main() -> None:
         "adaptive_beam": adaptive_beam.run,     # beyond-paper (Prop. 4.2)
         "pipeline": pipeline_throughput.run,    # serving-engine pipeline
         "disk_io": disk_io.run,                 # measured vs modelled slow tier
+        "cache_skew": cache_skew.run,           # freq-aware hot tier vs static
         "kernels": kernel_bench.run,            # hot-op microbench
     }
     if args.only:

@@ -19,6 +19,7 @@ from repro.index.disk import (  # noqa: F401
     search_tiered,
     search_tiered_adaptive,
 )
+from repro.index.hot_tier import HotTier  # noqa: F401
 from repro.index.serializer import (  # noqa: F401
     load_disk_model,
     load_index,

@@ -33,8 +33,40 @@ arithmetic is shared — results are bit-identical between tiers).
 pinned entry-proximal nodes, exact hit/miss counters surfaced in engine
 stats) and an async host-thread prefetch the staged pipeline uses to
 overlap batch i's block reads with batch i+1's continue programs.  Tiers
-own a worker thread, so they are closeable (``close()`` / context manager);
+own worker threads, so they are closeable (``close()`` / context manager);
 ``TieredBackend`` closes a replaced disk tier on index refresh.
+
+Three-tier storage and the promotion lifecycle
+----------------------------------------------
+With ``hot_nodes > 0`` the tier grows a frequency-aware *hot tier*
+(:class:`repro.index.hot_tier.HotTier`) and the storage hierarchy becomes
+three levels, each a strict superset of speed over the one below:
+
+  hot tier   : dense preallocated record arrays, O(1) membership probe
+               (``slot[id]``) — the fastest host copy of the traffic's
+               current hot set; optionally mirrored to device arrays
+               (``device_mirror``) as the steering fast tier a fused
+               out-of-core hop would index
+  block cache: the pinned set + LRU of this class — host-DRAM records
+               keyed by node id, populated by demand misses
+  SSD        : the block-aligned store (:class:`BlockStore`) — one
+               checksummed aligned block per ``nodes_per_block`` records
+
+The lifecycle: every fetch adds 1 to each distinct accessed id's EMA score
+(the exact PR 5 hit/miss counting, extended per node).  The serving
+engine's gather stage calls :meth:`BlockSlowTier.promotion_tick` once per
+batch — non-blocking: it submits (at most) one tick to the hot tier's own
+promoter thread and returns.  A tick snapshots + decays the scores
+(``freq *= decay`` — old traffic ages out, so a shifted hot set overtakes
+the old one), selects up to ``hot_chunk`` hottest non-resident nodes, reads
+their records through a *private* store handle (promotion I/O never holds
+the serving ``_io_lock`` and never counts in the serving stream's I/O
+stats), and installs them under the cache lock as a bounded memcpy —
+demoting the coldest residents only for strictly-hotter candidates
+(hysteresis).  Demotion is metadata-only and records are immutable, so the
+hot tier changes *where* a record is read from, never its bytes: search
+results are bit-identical with the tier on or off (the engine-parity
+matrix pins the hot axis).
 
 Out-of-core walk (indices bigger than device memory)
 ----------------------------------------------------
@@ -92,6 +124,7 @@ import collections
 import concurrent.futures
 import dataclasses
 import threading
+import time
 from typing import Protocol
 
 import jax
@@ -304,30 +337,51 @@ class BlockSlowTier:
       co-expansions into cache hits.
     * **async prefetch** — :meth:`prefetch` (rerank beams) and
       :meth:`prefetch_adj` (walk frontiers) run the fetch on a host worker
-      thread and return a future; the staged pipeline submits batch i's
+      pool and return a future; the staged pipeline submits batch i's
       fetches right after batch i+1's device programs are dispatched, so
-      the block reads and the device compute overlap.  The worker is
-      created lazily and owned by the tier: :meth:`close` (also via
-      ``with``) shuts it down — tiers must not leak a ``slow-tier-prefetch``
-      thread per index refresh.
+      the block reads and the device compute overlap.  ``io_workers`` sizes
+      the pool (the out-of-core walk round-robins ``io_groups`` lane groups
+      whose whole point is overlapping one group's reads with another's
+      device hop — a single worker would serialise them, so
+      :class:`repro.serving.OutOfCoreBackend` adopts its ``io_groups`` as
+      the default via :meth:`default_io_workers`).  Each future wraps one
+      deterministic fetch call, so per-future semantics are unchanged at
+      any worker count: a joined prefetch future equals the direct fetch.
+      The pool is created lazily and owned by the tier: :meth:`close` (also
+      via ``with``) shuts it down — tiers must not leak
+      ``slow-tier-prefetch`` threads per index refresh.
+    * **frequency-aware hot tier** (``hot_nodes > 0``) — a
+      :class:`repro.index.hot_tier.HotTier` probed between the pinned set
+      and the LRU, fed by per-node EMA access scores and refilled by
+      chunked asynchronous promotion ticks on its own promoter thread (see
+      the module docstring's three-tier story).  :meth:`promotion_tick` is
+      the engine-facing hook (non-blocking, at most one tick in flight);
+      :meth:`drain_promotions` joins the pending tick — a determinism hook
+      for tests and benchmarks, never called on the serving path.
 
     Thread safety: the cache and counters are guarded by a lock that is
     *never* held across block I/O (a separate lock serialises store reads),
     so :meth:`stats` — called at every pipeline gather — returns immediately
     even while a prefetch read is in flight; blocking there would stall the
-    host loop on exactly the I/O the prefetch stage exists to hide.  The
-    engine has at most one prefetch in flight per tier; concurrent external
-    fetches stay correct (worst case a doubly-read block, counters exact per
-    call).  Counters start at zero: the pinned-set load is construction,
-    not serving traffic.
+    host loop on exactly the I/O the prefetch stage exists to hide.
+    Concurrent fetches stay correct at any worker count (worst case a
+    doubly-read block; hit/miss totals stay exact per call — each call
+    counts its distinct valid ids once, wherever they are found).  Counters
+    start at zero: the pinned-set load is construction, not serving
+    traffic.
     """
 
     is_disk = True
 
     def __init__(self, store: BlockStore, cache_nodes: int = 4096,
-                 pinned_ids=None):
+                 pinned_ids=None, *, io_workers: int | None = None,
+                 hot_nodes: int = 0, hot_chunk: int = 256,
+                 freq_decay: float = 0.5, hot_device_mirror: bool = False):
         self.store = store
         self.cache_nodes = int(cache_nodes)
+        # Prefetch pool width; None = unset (1, unless a consumer adopts a
+        # better default via default_io_workers before the pool spins up).
+        self.io_workers = io_workers
         # id -> (vector (D,) f32, adjacency (R,) i32)
         self._lru: "collections.OrderedDict[int, tuple]" = (
             collections.OrderedDict())
@@ -338,12 +392,31 @@ class BlockSlowTier:
         self._closed = False
         self.hits = 0
         self.misses = 0
+        # Per-call fetch wall times (us), bounded window — percentiles via
+        # fetch_latency_us(), kept out of stats() (see there).
+        self._fetch_us: "collections.deque[float]" = collections.deque(
+            maxlen=65536)
         if pinned_ids is not None:
             ids = np.unique(np.asarray(pinned_ids, np.int64))
             if ids.size:
                 vecs, adjs = store.read_many(ids)
                 self._pinned = {int(i): (vecs[j].copy(), adjs[j].copy())
                                 for j, i in enumerate(ids)}
+        self._hot = None
+        self._hot_future = None
+        if hot_nodes > 0:
+            from repro.index.hot_tier import HotTier
+
+            exclude = (np.fromiter(self._pinned, np.int64,
+                                   len(self._pinned))
+                       if self._pinned else None)
+            # Private store handle: promotion I/O must share neither the
+            # serving _io_lock nor the serving stream's I/O counters.
+            self._hot = HotTier(BlockStore(store.path), store.n,
+                                int(hot_nodes), chunk=hot_chunk,
+                                decay=freq_decay, lock=self._lock,
+                                exclude_ids=exclude,
+                                device_mirror=hot_device_mirror)
         store.reset_stats()   # serving counters exclude the pinned load
 
     # ------------------------------------------------------------- lifecycle
@@ -353,20 +426,33 @@ class BlockSlowTier:
         return self._closed
 
     def close(self, wait: bool = True) -> None:
-        """Shut down the prefetch worker (idempotent).  The memmapped store
-        stays readable — only the owned thread is torn down, so a closed
-        tier can still serve synchronous fetches but not prefetches."""
+        """Shut down the prefetch workers and the hot tier's promoter
+        (idempotent).  The memmapped store stays readable — only the owned
+        threads are torn down, so a closed tier can still serve synchronous
+        fetches but not prefetches or promotion ticks."""
         with self._lock:
             pool, self._pool = self._pool, None
+            hot = self._hot
             self._closed = True
         if pool is not None:
             pool.shutdown(wait=wait)
+        if hot is not None:
+            hot.close(wait=wait)
 
     def __enter__(self) -> "BlockSlowTier":
         return self
 
     def __exit__(self, *exc) -> None:
         self.close()
+
+    def default_io_workers(self, n: int) -> None:
+        """Adopt ``n`` prefetch workers unless the constructor pinned a
+        count or the pool already exists — how the out-of-core backend
+        sizes the pool to its ``io_groups`` (one worker per round-robin
+        group, so the groups' block reads actually overlap)."""
+        with self._lock:
+            if self.io_workers is None and self._pool is None:
+                self.io_workers = max(1, int(n))
 
     def _executor(self) -> concurrent.futures.ThreadPoolExecutor:
         with self._lock:
@@ -375,8 +461,35 @@ class BlockSlowTier:
                     f"slow tier over {self.store.path} is closed")
             if self._pool is None:
                 self._pool = concurrent.futures.ThreadPoolExecutor(
-                    max_workers=1, thread_name_prefix="slow-tier-prefetch")
+                    max_workers=max(1, int(self.io_workers or 1)),
+                    thread_name_prefix="slow-tier-prefetch")
             return self._pool
+
+    # ------------------------------------------------------------- promotion
+
+    def promotion_tick(self):
+        """Non-blocking: submit one hot-tier promotion round to the
+        promoter thread (the engine calls this at every pipeline gather).
+        At most one tick is in flight — if the previous one is still
+        running, its future is returned unchanged, so a slow promotion can
+        never pile up work.  Returns ``None`` without a hot tier or after
+        :meth:`close`."""
+        with self._lock:
+            if self._hot is None or self._closed:
+                return None
+            fut = self._hot_future
+            if fut is not None and not fut.done():
+                return fut
+            self._hot_future = self._hot.submit_tick()
+            return self._hot_future
+
+    def drain_promotions(self) -> None:
+        """Join the in-flight promotion tick, if any — the determinism hook
+        tests and benchmarks use between measured passes.  Serving never
+        calls this; a promotion error would surface here."""
+        fut = self._hot_future
+        if fut is not None:
+            fut.result()
 
     # ------------------------------------------------------------- fetching
 
@@ -385,21 +498,32 @@ class BlockSlowTier:
     ) -> tuple[np.ndarray, np.ndarray]:
         """(vectors (len, D) f32, adj (len, R) i32) for a flat array of
         *valid* node ids (duplicates fine — each distinct id counts once
-        toward hits/misses and block reads)."""
+        toward hits/misses, block reads, and the hot tier's frequency
+        score)."""
+        t0 = time.perf_counter()
         ids = np.asarray(ids, np.int64).ravel()
         uniq, inverse = np.unique(ids, return_inverse=True)
         vecs = np.empty((uniq.size, self.store.d), np.float32)
         adjs = np.empty((uniq.size, self.store.r), np.int32)
+        hot = self._hot
         with self._lock:                      # probe the cache, count
+            if hot is not None:
+                hot.freq[uniq] += 1.0         # EMA numerator; tick decays it
             missing: list[tuple[int, int]] = []
             for j, i in enumerate(uniq.tolist()):
                 rec = self._pinned.get(i)
                 if rec is None and (rec := self._lru.get(i)) is not None:
                     self._lru.move_to_end(i)
-                if rec is None:
-                    missing.append((j, i))
-                else:
+                if rec is not None:
                     vecs[j], adjs[j] = rec
+                    continue
+                # Hot tier: O(1) membership, dense-array copy, no dict.
+                if hot is not None and (s := int(hot.slot[i])) >= 0:
+                    vecs[j] = hot.vectors[s]
+                    adjs[j] = hot.adj[s]
+                    hot.hot_hits += 1
+                    continue
+                missing.append((j, i))
             self.hits += uniq.size - len(missing)
             self.misses += len(missing)
         if missing:
@@ -432,6 +556,9 @@ class BlockSlowTier:
                             self._lru[i] = (v.copy(), a.copy())
                             while len(self._lru) > self.cache_nodes:
                                 self._lru.popitem(last=False)
+        dt_us = (time.perf_counter() - t0) * 1e6
+        with self._lock:
+            self._fetch_us.append(dt_us)
         return vecs[inverse], adjs[inverse]
 
     def fetch(self, ids: np.ndarray) -> np.ndarray:
@@ -478,10 +605,13 @@ class BlockSlowTier:
     # ---------------------------------------------------------- observability
 
     def stats(self) -> dict:
-        """Cumulative cache + I/O counters (exact on a replayed stream)."""
+        """Cumulative cache + I/O counters (exact on a replayed stream).
+        With a hot tier, promotion counters ride along — promotion I/O is
+        accounted on the hot tier's private store handle, so ``blocks_read``
+        / ``io_blocks`` here describe the serving stream alone."""
         with self._lock:
             total = self.hits + self.misses
-            return {
+            out = {
                 "cache_hits": self.hits,
                 "cache_misses": self.misses,
                 "hit_rate": self.hits / total if total else 0.0,
@@ -492,11 +622,35 @@ class BlockSlowTier:
                 "read_time_s": self.store.stats.read_time_s,
                 "measured_read_us": self.store.stats.measured_read_us(),
             }
+            if self._hot is not None:
+                out.update(self._hot.stats())
+            return out
+
+    def fetch_latency_us(self) -> dict:
+        """Percentiles over the recent per-call fetch wall times (bounded
+        window).  Kept out of :meth:`stats` — that runs at every pipeline
+        gather, and percentile math over 64k samples there would put numpy
+        work on the host loop for numbers only benchmarks read."""
+        with self._lock:
+            arr = np.asarray(self._fetch_us, np.float64)
+        if arr.size == 0:
+            return {"fetch_p50_us": 0.0, "fetch_p99_us": 0.0,
+                    "fetch_mean_us": 0.0, "fetch_samples": 0}
+        return {"fetch_p50_us": float(np.percentile(arr, 50)),
+                "fetch_p99_us": float(np.percentile(arr, 99)),
+                "fetch_mean_us": float(arr.mean()),
+                "fetch_samples": int(arr.size)}
 
     def reset_stats(self) -> None:
+        """Zero the counters and the latency window.  Hot-tier *state*
+        (residency, the frequency EMA) survives — it is policy memory, not
+        a statistic."""
         with self._lock:
             self.hits = self.misses = 0
+            self._fetch_us.clear()
             self.store.reset_stats()
+            if self._hot is not None:
+                self._hot.reset_stats()
 
     def clear_cache(self) -> None:
         """Empty the LRU (cold-cache experiments); the pinned set stays —
@@ -530,15 +684,19 @@ def entry_proximal_ids(adj, entry, limit: int = 256) -> np.ndarray:
 def open_or_build_slow_tier(path, index: TieredIndex,
                             cache_nodes: int = 4096, pin_nodes: int = 256,
                             log=None, nodes_per_block: int = 1,
-                            slot_of: np.ndarray | None = None
-                            ) -> BlockSlowTier:
+                            slot_of: np.ndarray | None = None,
+                            io_workers: int | None = None,
+                            hot_nodes: int = 0, hot_chunk: int = 256,
+                            freq_decay: float = 0.5) -> BlockSlowTier:
     """The serving bootstrap every ``--disk PATH`` consumer shares: open (or
     write — absent/unreadable/stale/re-laid-out, see
     :func:`repro.index.blockstore.ensure_block_store`) the block store for
     ``index`` and wrap it in a :class:`BlockSlowTier` with the
     entry-proximal neighbourhood pinned.  ``nodes_per_block``/``slot_of``
     select the I/O-block granularity and the packed layout (see
-    :func:`repro.core.build.block_layout`)."""
+    :func:`repro.core.build.block_layout`); ``io_workers`` sizes the
+    prefetch pool and ``hot_nodes``/``hot_chunk``/``freq_decay`` enable the
+    frequency-aware hot tier (see the module docstring)."""
     from repro.index.blockstore import ensure_block_store
 
     store = ensure_block_store(path, np.asarray(index.vectors),
@@ -547,7 +705,9 @@ def open_or_build_slow_tier(path, index: TieredIndex,
                                slot_of=slot_of)
     pinned = (entry_proximal_ids(index.graph.adj, index.graph.entry,
                                  limit=pin_nodes) if pin_nodes > 0 else None)
-    return BlockSlowTier(store, cache_nodes=cache_nodes, pinned_ids=pinned)
+    return BlockSlowTier(store, cache_nodes=cache_nodes, pinned_ids=pinned,
+                         io_workers=io_workers, hot_nodes=hot_nodes,
+                         hot_chunk=hot_chunk, freq_decay=freq_decay)
 
 
 def rerank_with_slow_tier(slow_tier, beam_ids, queries, k: int,

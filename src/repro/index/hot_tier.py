@@ -1,0 +1,217 @@
+"""Frequency-aware hot tier: chunked async promotion/demotion of graph nodes.
+
+Under real serving traffic (Zipfian, millions of users) the hot node set
+drifts — a static pinned set + LRU (:class:`repro.index.disk.BlockSlowTier`)
+cannot follow it.  This module adds the missing policy, following the
+CacheEmbedding shape (a frequency-tracking manager that promotes hot rows
+into a fast tier in chunks and evicts cold ones), applied to graph nodes:
+
+* **per-node EMA frequency** — the tier's exact per-fetch distinct-id
+  counting (PR 5) feeds ``freq[id] += 1``; every promotion tick halves the
+  whole array (``freq *= decay``), so the score is an exponential moving
+  average of access counts and old traffic ages out.  A shifted hot set
+  therefore *overtakes* the old one instead of fighting a monotone counter.
+* **dense hot storage** — promoted records live in preallocated arrays
+  (``vectors (capacity, D)``, ``adj (capacity, R)``) with O(1) membership
+  (``slot[id]`` — slot index or -1) probed on the tier's fetch path between
+  the pinned set and the LRU.  A hot hit costs two array reads, no dict,
+  no block I/O.
+* **chunked async promotion/demotion** — :meth:`HotTier.submit_tick` runs
+  one tick on the tier's *own* single-thread promoter (never the prefetch
+  pool, so a promotion chunk can never queue ahead of a serving prefetch):
+  snapshot + decay the frequencies, select up to ``chunk`` hottest
+  non-resident nodes, read their records through a *private*
+  :class:`~repro.index.blockstore.BlockStore` handle (promotion I/O shares
+  neither the serving ``_io_lock`` nor the serving I/O counters — a fetch
+  never waits on a promotion read, and ``blocks_read`` stays exact for the
+  serving stream), and install them under the shared cache lock (a bounded
+  memcpy — no I/O is ever done under the lock).  Demotion is metadata-only:
+  records are immutable, so clearing ``slot[old]`` just changes *where* the
+  next fetch reads the same bytes — search results stay bit-identical by
+  construction.
+* **hysteresis** — a resident node is only demoted for a strictly-hotter
+  candidate (by the same frequency snapshot), so ties never thrash the
+  tier; statically pinned ids are excluded from promotion (they already
+  live in the fastest probe).
+
+Device mirror (``device_mirror=True``): after each tick the hot arrays are
+re-uploaded as jax device arrays (``device_vectors`` / ``device_adj`` /
+``device_node_of``) — the steering-side fast tier a fused out-of-core hop
+would index instead of host memory.  Off by default: on this CPU testbed
+the upload costs more than the host probe saves, and wiring the OOC hop to
+consume it is hardware-gated (see ROADMAP).
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import threading
+
+import numpy as np
+
+from repro.index.blockstore import BlockStore
+
+
+class HotTier:
+    """Frequency-tracked fast tier above a :class:`BlockSlowTier`'s LRU.
+
+    Owned by the tier: shares its cache lock (``lock``), probes on its fetch
+    path, and is ticked via :meth:`submit_tick` from the serving engine's
+    gather stage.  All mutation of residency (``slot`` / ``node_of`` / the
+    record arrays) happens on the single promoter thread, under the shared
+    lock only for the install memcpy — so fetches either see the old
+    location (LRU/miss) or the new one (hot), both serving identical bytes.
+    """
+
+    def __init__(self, store: BlockStore, n: int, capacity: int, *,
+                 chunk: int = 256, decay: float = 0.5,
+                 lock: threading.Lock, exclude_ids=None,
+                 device_mirror: bool = False):
+        self.store = store              # private handle: promotion I/O only
+        self.capacity = int(capacity)
+        self.chunk = max(1, int(chunk))
+        self.decay = float(decay)
+        self._lock = lock               # shared with the owning BlockSlowTier
+        self.device_mirror = bool(device_mirror)
+        # Per-node EMA access frequency (written under the shared lock by
+        # the tier's fetch path; snapshotted + decayed at each tick).
+        self.freq = np.zeros(n, np.float32)
+        # Membership: node id -> hot slot (-1 absent) and the inverse map.
+        self.slot = np.full(n, -1, np.int32)
+        self.node_of = np.full(self.capacity, -1, np.int64)
+        self.vectors = np.zeros((self.capacity, store.d), np.float32)
+        self.adj = np.full((self.capacity, store.r), -1, np.int32)
+        self._excluded = (np.unique(np.asarray(exclude_ids, np.int64))
+                          if exclude_ids is not None else
+                          np.empty(0, np.int64))
+        self.n_hot = 0
+        self.hot_hits = 0
+        self.promotions = 0
+        self.demotions = 0
+        self.ticks = 0
+        self.device_vectors = None
+        self.device_adj = None
+        self.device_node_of = None
+        self._pool = None               # lazy: tiers that never tick stay free
+        self._closed = False
+
+    # ------------------------------------------------------------- lifecycle
+
+    def submit_tick(self) -> "concurrent.futures.Future":
+        """Enqueue one promotion tick on the promoter thread (the caller —
+        :meth:`BlockSlowTier.promotion_tick` — holds the shared lock and has
+        already checked there is no tick in flight)."""
+        if self._pool is None:
+            self._pool = concurrent.futures.ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="hot-tier-promoter")
+        return self._pool.submit(self._tick)
+
+    def close(self, wait: bool = True) -> None:
+        """Shut down the promoter thread (idempotent); a tick in flight
+        completes first when ``wait``.  Residency stays probe-able — only
+        future ticks are refused."""
+        pool, self._pool = self._pool, None
+        self._closed = True
+        if pool is not None:
+            pool.shutdown(wait=wait)
+
+    # ------------------------------------------------------------- the tick
+
+    def _tick(self) -> int:
+        """One promotion round; returns the number of nodes promoted.
+
+        Runs entirely on the promoter thread.  ``slot`` / ``node_of`` are
+        only ever written here, so the selection below reads them without
+        the lock; the lock guards just the frequency snapshot+decay and the
+        final install memcpy.
+        """
+        with self._lock:
+            snap = self.freq.copy()
+            self.freq *= self.decay
+            self.ticks += 1
+        if self._excluded.size:
+            snap[self._excluded] = 0.0
+        n = snap.shape[0]
+        cap = self.capacity
+        # Hottest `cap` candidates with nonzero score, hottest first.
+        if n > cap:
+            top = np.argpartition(-snap, cap - 1)[:cap]
+        else:
+            top = np.arange(n)
+        top = top[snap[top] > 0.0]
+        top = top[np.argsort(-snap[top], kind="stable")]
+        cand = top[self.slot[top] < 0][:self.chunk].astype(np.int64)
+        if cand.size == 0:
+            return 0
+        free_slots = np.nonzero(self.node_of < 0)[0]
+        n_free = min(free_slots.size, cand.size)
+        victim_slots = np.empty(0, np.int64)
+        need = cand.size - n_free
+        if need > 0:
+            resident = np.nonzero(self.node_of >= 0)[0]
+            coldest = resident[np.argsort(snap[self.node_of[resident]],
+                                          kind="stable")][:need]
+            extra = cand[n_free:]
+            # Hysteresis: pair the hottest extras with the coldest
+            # residents; keep a pair only if strictly hotter.  Both sides
+            # are sorted, so `keep` is a true prefix.
+            keep = snap[extra] > snap[self.node_of[coldest]]
+            k = int(keep.size if keep.all() else keep.argmin())
+            victim_slots = coldest[:k].astype(np.int64)
+            cand = np.concatenate([cand[:n_free], extra[:k]])
+        if cand.size == 0:
+            return 0
+        slots = np.concatenate(
+            [free_slots[:n_free].astype(np.int64), victim_slots])
+        # Promotion I/O on the private store handle — off the serving path.
+        vecs, adjs = self.store.read_many(cand)
+        with self._lock:
+            old = self.node_of[slots]
+            demoted = old[old >= 0]
+            if demoted.size:
+                self.slot[demoted] = -1
+            self.vectors[slots] = vecs
+            self.adj[slots] = adjs
+            self.node_of[slots] = cand
+            self.slot[cand] = slots
+            self.n_hot += int(cand.size) - int(demoted.size)
+            self.promotions += int(cand.size)
+            self.demotions += int(demoted.size)
+        if self.device_mirror:
+            self._upload()
+        return int(cand.size)
+
+    def _upload(self) -> None:
+        """Refresh the device-resident mirror of the hot arrays (steering
+        fast tier for a fused OOC hop; see the module docstring)."""
+        import jax.numpy as jnp
+
+        with self._lock:
+            v, a, ids = (self.vectors.copy(), self.adj.copy(),
+                         self.node_of.copy())
+        self.device_vectors = jnp.asarray(v)
+        self.device_adj = jnp.asarray(a)
+        self.device_node_of = jnp.asarray(ids)
+
+    # ---------------------------------------------------------- observability
+
+    def stats(self) -> dict:
+        """Promotion counters (caller holds the shared lock — this is read
+        from :meth:`BlockSlowTier.stats` at every pipeline gather).
+        Promotion I/O is reported from the private store handle, so it never
+        pollutes the serving stream's ``blocks_read`` / ``io_blocks``."""
+        return {
+            "hot_capacity": self.capacity,
+            "hot_nodes": self.n_hot,
+            "hot_hits": self.hot_hits,
+            "promotions": self.promotions,
+            "demotions": self.demotions,
+            "promotion_ticks": self.ticks,
+            "promotion_io_blocks": self.store.stats.io_blocks,
+            "promotion_read_time_s": self.store.stats.read_time_s,
+        }
+
+    def reset_stats(self) -> None:
+        """Zero the counters (caller holds the shared lock).  Residency and
+        the frequency EMA are *state*, not stats — they survive."""
+        self.hot_hits = self.promotions = self.demotions = self.ticks = 0
+        self.store.reset_stats()

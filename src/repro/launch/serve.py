@@ -31,7 +31,12 @@ hot-node cache (entry-proximal nodes pinned) and, with ``--pipeline``, the
 async-prefetch stage that overlaps batch i's block reads with batch i+1's
 continue programs. Results are bit-identical to the in-memory slow tier;
 the final report adds measured block-read latency next to the
-``DiskTierModel``'s modelled figure plus the cache hit rate.
+``DiskTierModel``'s modelled figure plus the cache hit rate and fetch
+latency percentiles. ``--cache-nodes`` / ``--pin-nodes`` size the LRU and
+the statically pinned entry-proximal set; ``--hot-nodes`` (with
+``--hot-chunk`` / ``--freq-decay``) adds the frequency-aware hot tier —
+per-stream promotion/demotion counters are reported at the end; and
+``--io-workers`` sizes the tier's prefetch pool.
 
 ``--distributed N`` shards the dataset over N virtual host devices (one
 locally built sub-graph per shard) and serves scatter-gather through a
@@ -124,8 +129,25 @@ def main() -> None:
                          "store at PATH (written there first if absent); "
                          "bit-identical results, real block I/O")
     ap.add_argument("--cache-nodes", type=int, default=4096,
-                    help="with --disk: hot-node LRU capacity "
-                         "(plus 256 pinned entry-proximal nodes)")
+                    help="with --disk: hot-node LRU capacity")
+    ap.add_argument("--pin-nodes", type=int, default=256,
+                    help="with --disk: statically pinned entry-proximal "
+                         "node count (0 disables pinning)")
+    ap.add_argument("--hot-nodes", type=int, default=0,
+                    help="with --disk: capacity of the frequency-aware hot "
+                         "tier (0 disables it); hot nodes are promoted in "
+                         "chunks off the serving path and demoted as the "
+                         "traffic's hot set drifts — results stay "
+                         "bit-identical")
+    ap.add_argument("--hot-chunk", type=int, default=256,
+                    help="with --hot-nodes: max promotions per tick")
+    ap.add_argument("--freq-decay", type=float, default=0.5,
+                    help="with --hot-nodes: per-tick EMA decay of the "
+                         "per-node access frequencies")
+    ap.add_argument("--io-workers", type=int, default=None,
+                    help="with --disk: prefetch worker threads (default: "
+                         "1 for the rerank-only tier; the out-of-core "
+                         "backend adopts its io_groups)")
     ap.add_argument("--online", action="store_true",
                     help="build with Online-MCGI (Algorithm 2)")
     ap.add_argument("--vamana", action="store_true",
@@ -245,10 +267,15 @@ def main() -> None:
 
             slow_tier = open_or_build_slow_tier(
                 args.disk, index, cache_nodes=args.cache_nodes,
+                pin_nodes=args.pin_nodes, io_workers=args.io_workers,
+                hot_nodes=args.hot_nodes, hot_chunk=args.hot_chunk,
+                freq_decay=args.freq_decay,
                 log=lambda m: print(f"[serve] {m}"))
+            hot_part = (f" hot={args.hot_nodes} (chunk={args.hot_chunk} "
+                        f"decay={args.freq_decay})" if args.hot_nodes else "")
             print(f"[serve] disk slow tier: n={slow_tier.store.n} "
                   f"block={slow_tier.store.block_size}B "
-                  f"pinned={slow_tier.stats()['pinned_nodes']}")
+                  f"pinned={slow_tier.stats()['pinned_nodes']}" + hot_part)
         backend = serving.TieredBackend(index, slow_tier=slow_tier,
                                         step_kernel=args.kernel)
         if args.adaptive:
@@ -325,11 +352,21 @@ def main() -> None:
           f"p99={np.percentile(lat_ms,99):.1f}ms" + ssd_part)
     if not args.distributed and args.disk:
         st = backend.slow_tier.stats()
+        lat = backend.slow_tier.fetch_latency_us()
         print(f"[serve] disk tier: hit_rate={st['hit_rate']:.3f} "
               f"(hits={st['cache_hits']} misses={st['cache_misses']}) "
               f"blocks_read={st['blocks_read']} "
               f"measured_read={st['measured_read_us']:.1f}us vs "
-              f"modelled={model.read_latency_us:.1f}us")
+              f"modelled={model.read_latency_us:.1f}us "
+              f"fetch p50={lat['fetch_p50_us']:.0f}us "
+              f"p99={lat['fetch_p99_us']:.0f}us")
+        if "hot_capacity" in st:
+            print(f"[serve] hot tier: resident={st['hot_nodes']}"
+                  f"/{st['hot_capacity']} hot_hits={st['hot_hits']} "
+                  f"promotions={st['promotions']} "
+                  f"demotions={st['demotions']} "
+                  f"ticks={st['promotion_ticks']} "
+                  f"promotion_io_blocks={st['promotion_io_blocks']}")
 
 
 if __name__ == "__main__":

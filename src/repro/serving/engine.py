@@ -38,7 +38,13 @@ block-aligned on-disk store.  The pipeline then grows a third stage —
 blocks are read on the tier's host worker thread while batch i+1's continue
 programs occupy the device, and the gather stage joins the future.  Cache
 hit/miss and measured block-read-latency counters ride in each
-``BatchResult.extras["slow_tier"]``.
+``BatchResult.extras["slow_tier"]``.  With a frequency-aware hot tier
+(``BlockSlowTier(hot_nodes=...)``) the gather stage additionally kicks one
+non-blocking *promotion tick* per batch (``backend.promotion_tick``) — the
+hot tier's promoter thread digests the access frequencies the finished
+batch recorded while the younger batches' device programs and prefetches
+run, so promotion work sits between pipeline stages but never on them;
+the promotion counters ride in the same ``extras["slow_tier"]`` payload.
 
 Recalibration is a first-class hook: :meth:`SearchEngine.recalibrate` refits
 the budget law (lam — and jointly l_min, see
@@ -294,6 +300,16 @@ class TieredBackend(_StagedRerankMixin):
             return {}
         return {"slow_tier": self.slow_tier.stats()}
 
+    def promotion_tick(self):
+        """Kick one hot-tier promotion round on the disk tier's promoter
+        thread (non-blocking; None without a disk tier or hot tier).  The
+        engine calls this at every pipeline gather."""
+        if self.slow_tier is None or not getattr(self.slow_tier, "is_disk",
+                                                 False):
+            return None
+        tick = getattr(self.slow_tier, "promotion_tick", None)
+        return tick() if tick is not None else None
+
     def fixed(self, queries, *, beam_width: int, max_hops: int, k: int):
         from repro.index.disk import rerank_with_slow_tier, search_tiered
 
@@ -377,6 +393,13 @@ class OutOfCoreBackend(_StagedRerankMixin):
         self.codebook = codebook
         self.entry = jnp.asarray(entry)
         self.slow_tier = slow_tier
+        # Unless the tier was built with an explicit worker count, size its
+        # prefetch pool to the round-robin group count — one I/O worker per
+        # group is what lets one group's block reads actually overlap
+        # another's device hop (a single worker would serialise them).
+        adopt = getattr(slow_tier, "default_io_workers", None)
+        if adopt is not None:
+            adopt(self.io_groups)
         if old is not None and old is not slow_tier:
             old.close()
 
@@ -447,6 +470,13 @@ class OutOfCoreBackend(_StagedRerankMixin):
 
     def finish_extras(self) -> dict[str, Any]:
         return {"slow_tier": self.slow_tier.stats()}
+
+    def promotion_tick(self):
+        """See :meth:`TieredBackend.promotion_tick` — here the walk itself
+        benefits: promoted adjacency rows turn walk-time block reads into
+        dense-array hits."""
+        tick = getattr(self.slow_tier, "promotion_tick", None)
+        return tick() if tick is not None else None
 
     def fixed(self, queries, *, beam_width: int, max_hops: int, k: int):
         from repro.index import disk as disk_mod
@@ -952,7 +982,19 @@ class SearchEngine:
 
     def _gather(self, f: _InFlight) -> BatchResult:
         """Collection stage: pull continue results, finish (rerank or the
-        distributed id reassembly), restore original query order."""
+        distributed id reassembly), restore original query order.  Then —
+        with the batch's results already in hand — kick one hot-tier
+        promotion round on the disk tier's promoter thread
+        (``backend.promotion_tick``, non-blocking; a no-op for backends
+        without a frequency-aware tier): the tick digests the frequency
+        the batch just recorded while the next batches' stages run."""
+        res = self._collect(f)
+        tick = getattr(self.backend, "promotion_tick", None)
+        if tick is not None:
+            tick()
+        return res
+
+    def _collect(self, f: _InFlight) -> BatchResult:
         if not self._staged():
             if hasattr(self.backend, "collect"):
                 return self.backend.collect(f.handles)

@@ -23,6 +23,16 @@ Two gather disciplines are provided:
   halves in different pipeline stages; results are the same arrays either
   way (identical programs, identical inputs — only the moment of the
   blocking transfer moves).
+
+Host work that is *not* scheduling also rides between the stages this
+module defines: the engine's gather stage ends by kicking the disk tier's
+hot-node promotion tick (``backend.promotion_tick`` — see
+:mod:`repro.index.hot_tier`), a non-blocking submit to the tier's promoter
+thread.  It lives at the stage boundary for the same reason the bucket
+scheduling does: the device queue already holds the younger batches' work,
+so the host cycles spent there are free — and the promotion I/O itself runs
+on its own thread against a private store handle, so no pipeline stage (or
+fetch) ever waits on it.
 """
 from __future__ import annotations
 

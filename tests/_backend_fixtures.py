@@ -46,8 +46,14 @@ DIST_CHUNK = 8          # query_chunk of the distributed fixtures
 # out-of-core backend: adjacency + vectors live *only* in a block-aware
 # packed store (nodes_per_block=8, greedy build-time layout) and are read
 # at walk time — same in-memory tiered reference paths, so the matrix pins
-# the out-of-core walk's bit-identity too.
-SINGLE_HOST = ("exact", "pq", "tiered", "disk", "ooc")
+# the out-of-core walk's bit-identity too.  "disk_hot"/"ooc_hot" = the same
+# two storage backends with the frequency-aware hot tier enabled over a
+# deliberately small LRU: promotions and demotions run asynchronously
+# *during* the matrix, so every scheduling property is also pinned while
+# residency migrates between tiers (the hot tier may change where a record
+# is read, never its bytes).
+SINGLE_HOST = ("exact", "pq", "tiered", "disk", "ooc", "disk_hot",
+               "ooc_hot")
 
 
 def has_mesh() -> bool:
@@ -138,6 +144,33 @@ def built_ooc_tier():
     return tier
 
 
+def _hot_tier(store_path):
+    """A frequency-aware tier over an existing fixture store: the LRU is
+    kept small (128 nodes over a 1500-node graph) so real misses feed the
+    EMA scores and promotion/demotion actually churn under the matrix's
+    traffic; entry-proximal pins stay excluded from promotion."""
+    from repro.index import BlockSlowTier, BlockStore
+    from repro.index.disk import entry_proximal_ids
+
+    _x, _q, _gt, idx, _tiered = built()
+    tier = BlockSlowTier(
+        BlockStore(store_path), cache_nodes=128,
+        pinned_ids=entry_proximal_ids(idx.adj, idx.entry, limit=64),
+        hot_nodes=256, hot_chunk=64, freq_decay=0.5)
+    atexit.register(tier.close)
+    return tier
+
+
+@functools.lru_cache(maxsize=1)
+def built_disk_hot_tier():
+    return _hot_tier(built_disk_tier().store.path)
+
+
+@functools.lru_cache(maxsize=1)
+def built_ooc_hot_tier():
+    return _hot_tier(built_ooc_tier().store.path)
+
+
 def _make_backend(variant: str, budget, shard_laws=None, step_kernel=None):
     if variant == "dist":
         mesh, arrays, _per, _q, _gt = built_dist()
@@ -155,15 +188,22 @@ def _make_backend(variant: str, budget, shard_laws=None, step_kernel=None):
     if variant == "disk":
         return serving.TieredBackend(tiered, slow_tier=built_disk_tier(),
                                      step_kernel=step_kernel)
+    if variant == "disk_hot":
+        return serving.TieredBackend(tiered, slow_tier=built_disk_hot_tier(),
+                                     step_kernel=step_kernel)
     if variant == "ooc":
         return serving.OutOfCoreBackend(
             tiered.codes, tiered.codebook, idx.entry, built_ooc_tier(),
+            step_kernel=step_kernel)
+    if variant == "ooc_hot":
+        return serving.OutOfCoreBackend(
+            tiered.codes, tiered.codebook, idx.entry, built_ooc_hot_tier(),
             step_kernel=step_kernel)
     assert variant == "tiered", variant
     return serving.TieredBackend(tiered, step_kernel=step_kernel)
 
 
-@functools.lru_cache(maxsize=64)
+@functools.lru_cache(maxsize=128)
 def engine(variant: str, num_buckets="auto", budget=BUDGET,
            coalesce_lanes=None, staged: bool = True, step_kernel=None):
     """A cached engine per configuration (jit caches live on the backend's
@@ -191,9 +231,10 @@ def monolithic(variant: str, q, budget=BUDGET):
             x, idx.adj, q, idx.entry, budget, k=10)
     if variant == "pq":
         return search_tiered_adaptive(tiered, q, budget, k=10, rerank=False)
-    # "disk" and "ooc" share the in-memory tiered reference: the disk and
-    # out-of-core engines must reproduce the in-memory results.
-    assert variant in ("tiered", "disk", "ooc"), variant
+    # The disk / out-of-core variants (hot tier on or off) share the
+    # in-memory tiered reference: storage must reproduce the in-memory bits.
+    assert variant in ("tiered", "disk", "ooc", "disk_hot", "ooc_hot"), (
+        variant)
     return search_tiered_adaptive(tiered, q, budget, k=10)
 
 
@@ -208,7 +249,8 @@ def core_bucketed(variant: str, q, num_buckets, budget=BUDGET):
     if variant == "pq":
         return search_tiered_adaptive(
             tiered, q, budget, k=10, rerank=False, num_buckets=num_buckets)
-    assert variant in ("tiered", "disk", "ooc"), variant
+    assert variant in ("tiered", "disk", "ooc", "disk_hot", "ooc_hot"), (
+        variant)
     return search_tiered_adaptive(
         tiered, q, budget, k=10, num_buckets=num_buckets)
 

@@ -386,6 +386,70 @@ def test_ensure_block_store_rewrites_on_layout_change(tmp_path):
     np.testing.assert_array_equal(s2.read_many(np.arange(16))[0], vectors)
 
 
+def test_concurrent_fetches_bit_exact_with_exact_counter_totals(store_path):
+    """Stress the lock-split design (``_lock`` for cache+counters, never
+    held across I/O; ``_io_lock`` for store reads) the way serving actually
+    drives it: ``fetch_beams`` / ``prefetch`` / ``prefetch_adj`` racing from
+    many threads over a multi-worker prefetch pool.  Every returned record
+    must be bit-exact, and the hit+miss *total* must be exact — each call
+    counts its distinct valid ids once, wherever they are found, so the
+    total is deterministic even when the hit/miss split races.  A replay
+    with everything cached then pins the split itself: all hits, zero
+    reads."""
+    import concurrent.futures as cf
+
+    p, vectors, adj = store_path
+    rng = np.random.default_rng(11)
+    beams = [rng.integers(-1, N, size=(4, 5)) for _ in range(10)]
+    frontiers = [rng.integers(-1, N, size=(7,)) for _ in range(10)]
+    expected_total = sum(
+        np.unique(a[a >= 0]).size for a in beams + frontiers)
+
+    def check_beams(tier, b):
+        out = tier.fetch_beams(b)
+        valid = b >= 0
+        np.testing.assert_array_equal(out[valid], vectors[b[valid]])
+        assert (out[~valid] == 0.0).all()
+
+    def check_adj(tier, u):
+        rows = tier.prefetch_adj(u).result()     # worker-pool path
+        valid = u >= 0
+        np.testing.assert_array_equal(rows[valid], adj[u[valid]])
+        assert (rows[~valid] == -1).all()
+
+    def check_prefetch(tier, b):
+        out = tier.prefetch(b).result()          # future == direct fetch
+        valid = b >= 0
+        np.testing.assert_array_equal(out[valid], vectors[b[valid]])
+
+    def race(tier):
+        with cf.ThreadPoolExecutor(max_workers=8) as pool:
+            futs = []
+            for b, u in zip(beams, frontiers):
+                futs.append(pool.submit(check_beams, tier, b))
+                futs.append(pool.submit(check_adj, tier, u))
+                futs.append(pool.submit(check_prefetch, tier, b))
+            for f in futs:
+                f.result()                       # re-raises thread asserts
+
+    with BlockSlowTier(BlockStore(p), cache_nodes=N,
+                       io_workers=4) as tier:
+        assert tier.io_workers == 4
+        race(tier)
+        st = tier.stats()
+        # prefetch repeats each beam batch, so its distinct ids count twice.
+        beams_total = sum(np.unique(b[b >= 0]).size for b in beams)
+        assert (st["cache_hits"] + st["cache_misses"]
+                == expected_total + beams_total)
+        # Replay: the LRU holds every node now (cache_nodes=N, nothing
+        # evicted) — the split itself is deterministic: all hits, no I/O.
+        tier.reset_stats()
+        race(tier)
+        st2 = tier.stats()
+        assert st2["cache_misses"] == 0 and st2["blocks_read"] == 0
+        assert st2["cache_hits"] == expected_total + beams_total
+
+
 def test_entry_proximal_pins_bfs_neighbourhood():
     adj = np.asarray([[1, 2, -1], [3, -1, -1], [3, 4, -1],
                       [-1] * 3, [-1] * 3, [-1] * 3], np.int32)

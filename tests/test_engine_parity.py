@@ -2,7 +2,9 @@
 
 Every backend (exact / PQ / tiered / disk — the tiered backend over the
 block-aligned on-disk slow tier — ooc — the out-of-core backend walking a
-block-aware packed store with only PQ codes in device memory — and
+block-aware packed store with only PQ codes in device memory — disk_hot /
+ooc_hot — the same two with the frequency-aware hot tier promoting and
+demoting asynchronously underneath the matrix — and
 distributed whenever the process has a mesh, i.e. the CI multi-device
 matrix job) is pinned to the same
 scheduling-transparency properties from shared fixtures
@@ -452,6 +454,42 @@ def test_disk_engine_surfaces_cache_stats():
     assert st["cache_hits"] + st["cache_misses"] > 0
     assert 0.0 <= st["hit_rate"] <= 1.0
     assert st["blocks_read"] >= 0 and st["measured_read_us"] >= 0.0
+
+
+# ------------------------------------------- frequency-aware hot-tier axis
+
+@pytest.mark.parametrize("variant", ["disk_hot", "ooc_hot"])
+def test_hot_tier_bit_identical_to_memory(variant):
+    """With the frequency-aware hot tier enabled (small LRU, so promotions
+    and demotions actually churn mid-stream), both storage backends stay
+    bit-identical to the in-memory tiered reference — eager, pipelined
+    (ragged tail) and coalesced micro-batches.  Each pass drains the
+    in-flight promotion tick so the next one runs against migrated
+    residency, and the counters in ``extras`` prove the tier was live, not
+    idle: this is the axis that pins 'promotion changes where a record is
+    read, never its bytes'."""
+    _, q, _, _, _ = fx.built()
+    tier = (fx.built_disk_hot_tier() if variant == "disk_hot"
+            else fx.built_ooc_hot_tier())
+    eng_m, eng_h = fx.engine("tiered"), fx.engine(variant)
+    fx.assert_bit_identical(eng_h.search(q), eng_m.search(q))       # eager
+    tier.drain_promotions()
+    for res_h, res_m in zip(eng_h.search_batches(fx.split(q, 9)),
+                            eng_m.search_batches(fx.split(q, 9))):
+        fx.assert_bit_identical(res_h, res_m)   # pipelined, ragged tail
+        tier.drain_promotions()                 # next batch sees new residency
+    for res_h, res_m in zip(
+            fx.engine(variant,
+                      coalesce_lanes=16).search_batches(fx.split(q, 5)),
+            fx.engine("tiered",
+                      coalesce_lanes=16).search_batches(fx.split(q, 5))):
+        fx.assert_bit_identical(res_h, res_m)   # coalesced micro-batches
+    tier.drain_promotions()
+    st = fx.engine(variant).search(q[:4]).extras["slow_tier"]
+    assert st["promotion_ticks"] >= 1 and st["promotions"] > 0
+    assert 0 < st["hot_nodes"] <= st["hot_capacity"]
+    assert st["hot_hits"] > 0          # migrated residency actually served
+    assert st["pinned_nodes"] == 64    # pins excluded, still the fast probe
 
 
 # ------------------------------------------------------- step-kernel axis

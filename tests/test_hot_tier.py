@@ -1,0 +1,223 @@
+"""Frequency-aware hot tier: promotion policy, hysteresis, off-path I/O.
+
+The engine-parity matrix pins the one invariant that matters for results
+(the hot tier changes *where* a record is read, never its bytes); this file
+pins the *policy* and the *asynchrony*: EMA decay lets a shifted hot set
+overtake the old one, ties never thrash residency, promotion I/O runs on
+its own thread and never blocks (or is counted against) the serving
+stream, and the prefetch-pool sizing knob follows its adoption rules.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.index import BlockSlowTier, BlockStore, write_block_store
+
+N, D, R = 64, 12, 6
+
+
+@pytest.fixture()
+def store_path(tmp_path):
+    rng = np.random.default_rng(5)
+    vectors = rng.normal(size=(N, D)).astype(np.float32)
+    adj = rng.integers(-1, N, size=(N, R)).astype(np.int32)
+    p = write_block_store(tmp_path / "h.blocks", vectors, adj)
+    return p, vectors, adj
+
+
+def _tier(p, **kw):
+    return BlockSlowTier(BlockStore(p), **kw)
+
+
+def test_promotion_serves_bit_exact_records_without_serving_io(store_path):
+    """A promoted node's next fetch is served from the hot arrays: same
+    bytes, zero serving block reads, counted as a hit + a hot hit.  With
+    cache_nodes=0 the LRU cannot shadow the property."""
+    p, vectors, adj = store_path
+    tier = _tier(p, cache_nodes=0, hot_nodes=4, hot_chunk=4)
+    try:
+        ids = np.asarray([3, 9, 3, 21])
+        v1, a1 = tier.fetch_records(ids)
+        np.testing.assert_array_equal(v1, vectors[ids])
+        np.testing.assert_array_equal(a1, adj[ids])
+        tier.promotion_tick().result()
+        st = tier.stats()
+        assert st["hot_nodes"] == 3 and st["promotions"] == 3
+        assert st["promotion_io_blocks"] > 0
+        before = st["blocks_read"]
+        v2, a2 = tier.fetch_records(ids)
+        np.testing.assert_array_equal(v2, vectors[ids])
+        np.testing.assert_array_equal(a2, adj[ids])
+        st = tier.stats()
+        assert st["blocks_read"] == before     # hot hits: no serving I/O
+        assert st["hot_hits"] == 3
+        assert st["cache_hits"] == 3 and st["cache_misses"] == 3
+    finally:
+        tier.close()
+
+
+def test_decay_lets_shifted_hot_set_overtake(store_path):
+    """The EMA decay is what makes the tier *traffic-following*: after the
+    hot set shifts, the new nodes' fresh scores beat the old residents'
+    decayed ones and a tick demotes the stale set in one chunk."""
+    p, _, _ = store_path
+    tier = _tier(p, cache_nodes=0, hot_nodes=2, hot_chunk=2, freq_decay=0.5)
+    try:
+        for _ in range(4):
+            tier.fetch_records(np.asarray([1, 2]))
+        tier.promotion_tick().result()
+        st = tier.stats()
+        assert st["hot_nodes"] == 2 and st["demotions"] == 0
+        assert set(tier._hot.node_of.tolist()) == {1, 2}
+        for _ in range(4):
+            tier.fetch_records(np.asarray([3, 4]))
+        tier.promotion_tick().result()
+        st = tier.stats()
+        assert st["demotions"] == 2 and st["hot_nodes"] == 2
+        assert set(tier._hot.node_of.tolist()) == {3, 4}
+    finally:
+        tier.close()
+
+
+def test_hysteresis_never_demotes_on_ties(store_path):
+    """A resident is only displaced by a *strictly* hotter candidate —
+    equal scores keep the incumbent, so alternating traffic between two
+    equally-warm nodes cannot thrash one hot slot."""
+    p, _, _ = store_path
+    tier = _tier(p, cache_nodes=0, hot_nodes=1, hot_chunk=1, freq_decay=1.0)
+    try:
+        tier.fetch_records(np.asarray([5]))
+        tier.promotion_tick().result()
+        assert tier.stats()["hot_nodes"] == 1
+        tier.fetch_records(np.asarray([6]))    # freq: both exactly 1.0 now
+        tier.promotion_tick().result()
+        st = tier.stats()
+        assert st["demotions"] == 0
+        assert tier._hot.node_of.tolist() == [5]
+    finally:
+        tier.close()
+
+
+def test_promotion_never_blocks_serving(store_path):
+    """The tentpole's serving contract, made observable: gate the promoter
+    thread's block read on an Event and show that while promotion I/O is
+    stuck mid-flight, (a) promotion_tick() keeps returning the same
+    in-flight future instead of piling up ticks, (b) stats() returns, (c) a
+    serving fetch completes with correct bytes, and (d) the promotion read
+    never appears in the serving stream's I/O counters."""
+    p, vectors, adj = store_path
+    tier = _tier(p, cache_nodes=8, hot_nodes=4, hot_chunk=4)
+    gate, entered = threading.Event(), threading.Event()
+    try:
+        tier.fetch_records(np.asarray([1, 2, 3]))
+        real = tier._hot.store.read_many
+
+        def gated(ids):
+            entered.set()
+            assert gate.wait(30.0)
+            return real(ids)
+
+        tier._hot.store.read_many = gated
+        fut = tier.promotion_tick()
+        assert entered.wait(30.0)              # promotion I/O now in flight
+        assert tier.promotion_tick() is fut    # at most one tick in flight
+        before = tier.stats()                  # doesn't block on the gate
+        ids = np.asarray([7, 8])
+        v, a = tier.fetch_records(ids)         # serving doesn't block either
+        np.testing.assert_array_equal(v, vectors[ids])
+        np.testing.assert_array_equal(a, adj[ids])
+        st = tier.stats()
+        assert st["blocks_read"] == before["blocks_read"] + 2
+        assert st["promotion_io_blocks"] == before["promotion_io_blocks"]
+        gate.set()
+        fut.result()
+        assert tier.stats()["promotions"] == 3
+        assert tier.promotion_tick() is not fut   # done tick -> next starts
+        tier.drain_promotions()
+    finally:
+        gate.set()
+        tier.close()
+
+
+def test_promotion_tick_lifecycle(store_path):
+    """No hot tier -> no tick; closed tier -> no tick; close() joins the
+    promoter thread so nothing named hot-tier-promoter leaks."""
+    p, _, _ = store_path
+    with _tier(p) as plain:
+        assert plain.promotion_tick() is None
+    tier = _tier(p, hot_nodes=4)
+    tier.fetch_records(np.asarray([1, 2]))
+    tier.promotion_tick()
+    promoters = set(tier._hot._pool._threads)   # this tier's, not global:
+    tier.close()                                # other fixtures' tiers live
+    assert tier.promotion_tick() is None
+    assert promoters and not any(t.is_alive() for t in promoters)
+    # Residency stays probe-able after close: synchronous fetches still work.
+    tier.fetch_records(np.asarray([1, 2]))
+
+
+def test_default_io_workers_adoption_rules(store_path):
+    """default_io_workers is a *default*, not an override: an explicit
+    constructor count wins, the first adoption sticks, and once the pool
+    exists the knob is frozen."""
+    p, _, _ = store_path
+    with _tier(p, io_workers=3) as t:
+        t.default_io_workers(8)
+        assert t.io_workers == 3               # explicit ctor value wins
+    with _tier(p) as t:
+        t.default_io_workers(4)
+        assert t.io_workers == 4               # adopted
+        t.default_io_workers(9)
+        assert t.io_workers == 4               # first adoption sticks
+    with _tier(p) as t:
+        t.prefetch(np.asarray([[1]])).result() # pool spins up at width 1
+        t.default_io_workers(6)
+        assert t.io_workers is None            # too late: pool exists
+
+
+def test_fetch_latency_window(store_path):
+    """Per-call fetch latency percentiles come from a bounded window that
+    reset_stats() clears; the empty window reports zeros, not NaNs."""
+    p, _, _ = store_path
+    with _tier(p) as tier:
+        assert tier.fetch_latency_us()["fetch_samples"] == 0
+        assert tier.fetch_latency_us()["fetch_p99_us"] == 0.0
+        for _ in range(5):
+            tier.fetch_records(np.asarray([1, 2, 3]))
+        lat = tier.fetch_latency_us()
+        assert lat["fetch_samples"] == 5
+        assert 0.0 < lat["fetch_p50_us"] <= lat["fetch_p99_us"]
+        tier.reset_stats()
+        assert tier.fetch_latency_us()["fetch_samples"] == 0
+
+
+def test_engine_integration_adopts_and_ticks():
+    """Through the serving engine: the OOC backend sizes the tier's
+    prefetch pool to its io_groups, every gather fires a non-blocking
+    promotion tick, the counters ride BatchResult.extras, results stay
+    bit-identical to the in-memory reference while residency migrates, and
+    engine.close() tears the promoter down."""
+    from repro import serving
+    from tests import _backend_fixtures as fx
+
+    _x, q, _gt, idx, tiered = fx.built()
+    tier = BlockSlowTier(BlockStore(fx.built_ooc_tier().store.path),
+                         cache_nodes=64, hot_nodes=128, hot_chunk=32)
+    assert tier.io_workers is None
+    be = serving.OutOfCoreBackend(tiered.codes, tiered.codebook, idx.entry,
+                                  tier, io_groups=2)
+    assert tier.io_workers == 2                # backend adopted io_groups
+    eng = serving.SearchEngine(be, fx.BUDGET, k=10)
+    ref = fx.engine("tiered")
+    fx.assert_bit_identical(eng.search(q), ref.search(q))
+    tier.drain_promotions()                    # first gather's tick lands
+    res = eng.search(q)                        # now served against hot set
+    fx.assert_bit_identical(res, ref.search(q))
+    st = res.extras["slow_tier"]
+    assert st["promotion_ticks"] >= 1 and st["promotions"] > 0
+    assert st["hot_hits"] > 0
+    promoters = set(tier._hot._pool._threads)
+    eng.close()
+    assert tier.closed
+    assert promoters and not any(t.is_alive() for t in promoters)
