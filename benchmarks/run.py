@@ -33,6 +33,7 @@ def main() -> None:
         recall_qps,
         recall_vs_L,
         scalability,
+        serving_load,
     )
 
     suites = {
@@ -46,6 +47,7 @@ def main() -> None:
         "pipeline": pipeline_throughput.run,    # serving-engine pipeline
         "disk_io": disk_io.run,                 # measured vs modelled slow tier
         "cache_skew": cache_skew.run,           # freq-aware hot tier vs static
+        "serving_load": serving_load.run,       # front door: QPS at p99 SLO
         "kernels": kernel_bench.run,            # hot-op microbench
     }
     if args.only:

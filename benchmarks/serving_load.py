@@ -1,0 +1,314 @@
+"""Serving front-door load benchmark: sustained QPS at a fixed p99 SLO.
+
+The front door (:mod:`repro.serving.server`) serves two QoS classes —
+``interactive`` (tight deadline, cheap budget law) and ``batch`` (loose
+deadline, thorough law) — over one shared backend, each class through its
+own calibrated ``(lam, l_min)`` engine.  This benchmark drives open-loop
+arrival processes through it on the **virtual clock** with *measured*
+dispatch service times (``VirtualDispatcher(service_time="measured")``):
+arrival timing, queueing, coalescing windows and deadlines all live in
+deterministic virtual time, while every dispatch's service time is the
+real wall clock of its synchronous engine call — so the reported latency
+distributions are grounded in actual compute, yet the run is replayable.
+
+Arrival processes: Poisson at a swept rate (the QPS ladder) and an on/off
+bursty process (rate spikes to ``burst``x during on-phases) — the regime
+where coalescing windows and deadline hedging actually earn their keep.
+
+Reported per class, per rung: p50/p99 latency vs the class deadline, shed
+rate, outcome counts, and the per-class I/O counters — mean granted budget
+and mean walk hops — which *visibly diverge* between the classes' laws on
+the same queries (the whole point of per-class calibration).  The headline
+figure is **sustained QPS**: the largest swept rate at which nothing sheds
+and the interactive class's p99 stays within its deadline.
+
+Compile-shape discipline: ``lane_quantum == max_lanes`` pads every
+dispatch to one fixed lane count per class and ``num_buckets=None``
+disables the bucket family, so after a one-dispatch warmup the steady
+state replays a single compiled program per class — the benchmark measures
+serving, not compilation.
+
+``--smoke`` is the CI gate: tiny graph, hard asserts — at low load nothing
+sheds, every admitted request completes ``ok`` and the interactive p99
+meets its deadline; under overload (a constant-service backend driven past
+its capacity) the open-lane bound converts the excess to sheds without
+ever exceeding the bound, and every future completes; and the two classes'
+granted budgets diverge on identical queries.  Both entry points write
+``BENCH_serving_load.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import sys
+
+import numpy as np
+
+from benchmarks import common
+from repro import serving
+from repro.core import build, distance, search
+from repro.serving import server as sv
+
+JSON_PATH = pathlib.Path("BENCH_serving_load.json")
+
+INTERACTIVE = search.AdaptiveBeamBudget(l_min=8, l_max=32, lam=0.3,
+                                        center=8.0)
+BATCH = dataclasses.replace(INTERACTIVE, l_min=32)
+
+
+def poisson_arrivals(rng, qps: float, n: int) -> np.ndarray:
+    """n absolute arrival times of a Poisson process at ``qps``."""
+    return np.cumsum(rng.exponential(1.0 / qps, size=n))
+
+
+def bursty_arrivals(rng, qps: float, n: int, *, burst: float = 8.0,
+                    on_s: float = 0.05, off_s: float = 0.2) -> np.ndarray:
+    """On/off modulated Poisson: rate ``qps*burst`` during on-phases,
+    ``qps/burst`` during off-phases — same order of mean rate, far worse
+    tail pressure."""
+    out, t, on = [], 0.0, True
+    phase_end = on_s
+    while len(out) < n:
+        rate = qps * burst if on else qps / burst
+        t += float(rng.exponential(1.0 / rate))
+        if t >= phase_end:
+            t, on = phase_end, not on
+            phase_end += on_s if on else off_s
+            continue
+        out.append(t)
+    return np.asarray(out)
+
+
+def _classes(deadlines: dict[str, float], *, lanes: dict[str, int],
+             windows: dict[str, float]):
+    return [sv.QoSClass(name, deadline_s=deadlines[name],
+                        batch_window_s=windows[name], max_lanes=lanes[name],
+                        lane_quantum=lanes[name])
+            for name in deadlines]
+
+
+def _run_leg(backend, budgets: dict, arrivals, lane_rows, cls_of, qn,
+             *, deadlines, lanes, windows, max_queue=256,
+             service_time="measured", k=10):
+    """One open-loop leg: fresh engines over the shared backend, submissions
+    replayed at their virtual arrival times, full drain.  Returns
+    (per-request ServedResults, door stats)."""
+    engines = {name: serving.SearchEngine(backend, cfg, k=k,
+                                          num_buckets=None)
+               for name, cfg in budgets.items()}
+    clock = sv.VirtualClock()
+    door = sv.FrontDoor(
+        engines, _classes(deadlines, lanes=lanes, windows=windows),
+        max_queue=max_queue, clock=clock,
+        dispatcher=sv.VirtualDispatcher(clock, service_time=service_time))
+    for name in budgets:                    # one-dispatch warmup per class
+        engines[name].search(qn[:lanes[name]])
+    futs = []
+    for t, row, cls in zip(arrivals, lane_rows, cls_of):
+        clock.run_until(float(t))
+        futs.append((row, cls, door.submit(qn[row], cls=cls)))
+    sv.drain_virtual(door, clock)
+    results = [(row, cls, f.result(timeout=0)) for row, cls, f in futs]
+    return results, door.stats()
+
+
+def _per_class(results, gt_i, k=10):
+    """Latency percentiles, outcome counts and I/O counters per class."""
+    out = {}
+    for name in sorted({cls for _, cls, _ in results}):
+        rs = [(row, r) for row, cls, r in results if cls == name]
+        lat = [r.latency for _, r in rs if r.status != sv.SHED]
+        ok = [(row, r) for row, r in rs if r.status == sv.OK]
+        counts = {}
+        for _, r in rs:
+            counts[r.status] = counts.get(r.status, 0) + 1
+        rec = None
+        if ok and gt_i is not None:
+            rec = float(np.mean([
+                np.isin(r.ids, gt_i[row][:k]).mean() for row, r in ok]))
+        out[name] = {
+            "n": len(rs),
+            "counts": counts,
+            "p50_ms": float(np.percentile(lat, 50) * 1e3) if lat else None,
+            "p99_ms": float(np.percentile(lat, 99) * 1e3) if lat else None,
+            "mean_budget": (float(np.mean([r.budget for _, r in ok]))
+                            if ok else None),
+            "mean_hops": (float(np.mean([r.hops for _, r in ok]))
+                          if ok else None),
+            "recall": rec,
+        }
+    return out
+
+
+def _mix(rng, n: int, names, frac_first: float = 0.5):
+    return [names[0] if rng.random() < frac_first else names[1]
+            for _ in range(n)]
+
+
+def run(csv: common.Csv, scale: str = "small"):
+    x, q, gt_i = common.dataset("gist-proxy", scale)
+    mcgi = common.cached_graph(
+        f"gist-proxy-{scale}-mcgi",
+        lambda: build.build_mcgi(x, common.BUILD_CFG))
+    qn, gt = np.asarray(q), np.asarray(gt_i)
+    backend = serving.ExactBackend(x, mcgi.adj, mcgi.entry)
+
+    # Per-class (lam, l_min) calibration against each class's own recall
+    # target — the front door's knob (joint fit: smallest feasible floor,
+    # largest feasible lam at it).
+    from repro.core import calibrate
+
+    def make_eval(cfg):
+        return calibrate.exact_recall_eval(
+            np.asarray(x), np.asarray(mcgi.adj), int(mcgi.entry), qn, gt,
+            k=10, sample=96, base_cfg=cfg)
+
+    fits = calibrate.calibrate_budget_law_per_class(
+        make_eval, INTERACTIVE, {"interactive": 0.85, "batch": 0.95})
+    budgets = calibrate.class_budget_cfgs(fits, INTERACTIVE)
+    for name, r in fits.items():
+        csv.add(f"serving_load/calib_{name}", 0.0,
+                f"lam={r.lam:.3f} l_min={budgets[name].l_min} "
+                f"recall={r.recall:.3f} "
+                f"({'hit' if r.achieved else 'MISSED'} {r.target:.2f})")
+
+    deadlines = {"interactive": 0.25, "batch": 5.0}
+    lanes = {"interactive": 8, "batch": 16}
+    windows = {"interactive": 0.002, "batch": 0.02}
+    rng = np.random.default_rng(11)
+    n_req = 160
+    ladder, sustained = {}, None
+    for qps in (50.0, 100.0, 200.0, 400.0):
+        arr = poisson_arrivals(rng, qps, n_req)
+        rows = rng.integers(0, qn.shape[0], size=n_req)
+        cls_of = _mix(rng, n_req, ("interactive", "batch"))
+        results, stats = _run_leg(
+            backend, budgets, arr, rows, cls_of, qn,
+            deadlines=deadlines, lanes=lanes, windows=windows)
+        per = _per_class(results, gt)
+        ladder[qps] = {"stats": stats, "per_class": per}
+        p99 = per["interactive"]["p99_ms"]
+        meets = (stats["shed"] == 0 and p99 is not None
+                 and p99 <= deadlines["interactive"] * 1e3)
+        if meets:
+            sustained = qps
+        csv.add(f"serving_load/poisson_{int(qps)}qps", 0.0,
+                f"interactive p99={p99:.1f}ms "
+                f"(SLO {deadlines['interactive']*1e3:.0f}ms) "
+                f"shed={stats['shed']} "
+                f"budget i/b={per['interactive']['mean_budget']:.1f}/"
+                f"{per['batch']['mean_budget']:.1f}")
+
+    arr_b = bursty_arrivals(rng, 100.0, n_req)
+    rows_b = rng.integers(0, qn.shape[0], size=n_req)
+    results_b, stats_b = _run_leg(
+        backend, budgets, arr_b, rows_b,
+        _mix(rng, n_req, ("interactive", "batch")), qn,
+        deadlines=deadlines, lanes=lanes, windows=windows)
+    per_b = _per_class(results_b, gt)
+    csv.add("serving_load/bursty_100qps", 0.0,
+            f"interactive p50={per_b['interactive']['p50_ms']:.1f}ms "
+            f"p99={per_b['interactive']['p99_ms']:.1f}ms "
+            f"shed={stats_b['shed']} partial={stats_b['partial']}")
+    csv.add("serving_load/sustained", 0.0,
+            f"sustained_qps={sustained} at interactive p99 <= "
+            f"{deadlines['interactive']*1e3:.0f}ms, shed=0 "
+            f"(classes diverge: budget "
+            f"{per_b['interactive']['mean_budget']:.1f} vs "
+            f"{per_b['batch']['mean_budget']:.1f}, hops "
+            f"{per_b['interactive']['mean_hops']:.1f} vs "
+            f"{per_b['batch']['mean_hops']:.1f})")
+    JSON_PATH.write_text(json.dumps({
+        "bench": "serving_load", "scale": scale,
+        "calibration": {n: {"lam": r.lam, "l_min": budgets[n].l_min,
+                            "recall": r.recall, "achieved": r.achieved}
+                        for n, r in fits.items()},
+        "deadlines_s": deadlines, "ladder": ladder,
+        "bursty": {"stats": stats_b, "per_class": per_b},
+        "sustained_qps": sustained,
+    }, indent=2, sort_keys=True, default=float))
+    return {"sustained_qps": sustained}
+
+
+def smoke() -> None:
+    """CI smoke (virtual clock throughout, hard asserts): low load serves
+    everything within SLO, overload sheds at the bound, and the two
+    classes' granted budgets diverge on identical queries."""
+    from repro.data import make_dataset
+
+    x, q = make_dataset("tiny-mixture", seed=0)
+    x = x[:1500]
+    cfg = build.BuildConfig(degree=16, beam_width=32, iters=1, batch=256,
+                            max_hops=64)
+    idx = build.build_mcgi(x, cfg)
+    qn = np.asarray(q)
+    _gt_d, gt_i = distance.brute_force_topk(q, x, k=10)
+    gt = np.asarray(gt_i)
+    backend = serving.ExactBackend(x, idx.adj, idx.entry)
+    budgets = {"interactive": INTERACTIVE, "batch": BATCH}
+    deadlines = {"interactive": 0.5, "batch": 5.0}
+    lanes = {"interactive": 4, "batch": 8}
+    windows = {"interactive": 0.002, "batch": 0.01}
+    rng = np.random.default_rng(5)
+    n_req = 80
+
+    # Low-load Poisson *and* bursty: nothing sheds, everything completes
+    # ok, and the interactive class's p99 meets its deadline.
+    reports = {}
+    for tag, arr in (("poisson", poisson_arrivals(rng, 100.0, n_req)),
+                     ("bursty", bursty_arrivals(rng, 100.0, n_req))):
+        rows = rng.integers(0, qn.shape[0], size=n_req)
+        cls_of = _mix(rng, n_req, ("interactive", "batch"))
+        results, stats = _run_leg(
+            backend, budgets, arr, rows, cls_of, qn,
+            deadlines=deadlines, lanes=lanes, windows=windows)
+        per = _per_class(results, gt)
+        assert stats["shed"] == 0, (tag, stats)
+        assert stats["ok"] == stats["admitted"] == n_req, (tag, stats)
+        p99 = per["interactive"]["p99_ms"]
+        assert p99 <= deadlines["interactive"] * 1e3, (tag, per)
+        # The per-class (lam, l_min) split is visible in the I/O counters:
+        # the thorough class is granted strictly more budget.
+        assert per["batch"]["mean_budget"] > per["interactive"][
+            "mean_budget"], (tag, per)
+        reports[tag] = {"stats": stats, "per_class": per}
+
+    # Overload: constant 50ms service at 2000 qps — the open-lane bound
+    # converts the excess to sheds (never exceeded), every future
+    # completes, and every *admitted* request is served ok.
+    arr = poisson_arrivals(rng, 2000.0, n_req)
+    rows = rng.integers(0, qn.shape[0], size=n_req)
+    cls_of = _mix(rng, n_req, ("interactive", "batch"))
+    results, stats = _run_leg(
+        backend, budgets, arr, rows, cls_of, qn,
+        deadlines=deadlines, lanes=lanes, windows=windows,
+        max_queue=24, service_time=0.05)
+    assert stats["shed"] > 0, stats
+    assert stats["max_open_lanes"] <= 24, stats
+    assert stats["ok"] == stats["admitted"], stats
+    assert stats["shed"] + stats["admitted"] == n_req, stats
+    reports["overload"] = {"stats": stats,
+                           "per_class": _per_class(results, gt)}
+
+    JSON_PATH.write_text(json.dumps(
+        {"bench": "serving_load", "scale": "smoke", **reports},
+        indent=2, sort_keys=True, default=float))
+    pi = reports["poisson"]["per_class"]["interactive"]
+    pb = reports["poisson"]["per_class"]["batch"]
+    print(f"# smoke ok: low load shed=0, interactive "
+          f"p99={pi['p99_ms']:.1f}ms <= {deadlines['interactive']*1e3:.0f}ms "
+          f"(poisson + bursty); overload shed="
+          f"{reports['overload']['stats']['shed']} at bound<=24; "
+          f"class I/O diverges: budget {pi['mean_budget']:.1f} vs "
+          f"{pb['mean_budget']:.1f}, hops {pi['mean_hops']:.1f} vs "
+          f"{pb['mean_hops']:.1f}")
+
+
+if __name__ == "__main__":
+    if "--smoke" in sys.argv:
+        smoke()
+    else:
+        csv = common.Csv()
+        print("name,us_per_call,derived")
+        run(csv, scale="small")

@@ -342,6 +342,53 @@ def calibrate_budget_law_per_shard(
     )
 
 
+def calibrate_budget_law_per_class(
+    make_eval: Callable[
+        [search_mod.AdaptiveBeamBudget],
+        Callable[[search_mod.AdaptiveBeamBudget], float]],
+    base_cfg: search_mod.AdaptiveBeamBudget,
+    recall_targets: "dict[str, float]",
+    *,
+    joint: bool = True,
+    **fit_kw,
+) -> "dict[str, CalibrationResult]":
+    """Fit one budget law per QoS class — the serving front door's knob.
+
+    ``recall_targets`` maps class name -> recall target (e.g.
+    ``{"interactive": 0.85, "batch": 0.97}``); each class runs the joint
+    (lam, l_min) fit (or the plain lam fit with ``joint=False``) against
+    *its own* target over the same ``make_eval`` factory and the same
+    held-out sample.  The result is the per-class (lam, l_min) split the
+    paper's budget law makes free: a looser target fits a higher lam and a
+    lower floor — fewer slow-tier reads — while a stricter class keeps its
+    recall SLO, on the same index and the same backend.
+
+    Deploy via :func:`class_budget_cfgs`: one
+    :class:`~repro.serving.engine.SearchEngine` per class over one shared
+    backend, handed to ``repro.serving.server.FrontDoor`` keyed by class
+    name.  Deterministic end to end under a fixed seed, class by class
+    (dict order is preserved).
+    """
+    out: dict[str, CalibrationResult] = {}
+    for name, target in recall_targets.items():
+        if joint:
+            out[name] = calibrate_budget_law_joint(
+                make_eval, base_cfg, float(target), **fit_kw)
+        else:
+            out[name] = calibrate_budget_law(
+                make_eval(base_cfg), base_cfg, float(target), **fit_kw)
+    return out
+
+
+def class_budget_cfgs(
+    results: "dict[str, CalibrationResult]",
+    base_cfg: search_mod.AdaptiveBeamBudget,
+) -> "dict[str, search_mod.AdaptiveBeamBudget]":
+    """Per-class serving configs from a :func:`calibrate_budget_law_per_class`
+    fit — each class's base config with its fitted knobs substituted in."""
+    return {name: r.budget_cfg(base_cfg) for name, r in results.items()}
+
+
 def shard_exact_recall_evals(
     vectors, adj, entries, queries, n_shards: int, *,
     k: int = 10, sample: int = 256, seed: int = 0,

@@ -426,18 +426,23 @@ class BlockSlowTier:
         return self._closed
 
     def close(self, wait: bool = True) -> None:
-        """Shut down the prefetch workers and the hot tier's promoter
-        (idempotent).  The memmapped store stays readable — only the owned
-        threads are torn down, so a closed tier can still serve synchronous
-        fetches but not prefetches or promotion ticks."""
+        """Shut down the prefetch workers and the hot tier's promoter.
+        Idempotent and safe under concurrent callers — engine teardown can
+        race a server drain: exactly one caller claims the pool and the hot
+        tier (later/parallel closes see them already taken).  The memmapped
+        store stays readable — only the owned threads are torn down, so a
+        closed tier still serves synchronous fetches, and in-flight streams
+        keep working: :meth:`prefetch` / :meth:`prefetch_adj` degrade to
+        completed-synchronously futures instead of raising (the pipeline
+        loses its overlap, never its results).  Promotion ticks become
+        no-ops."""
         with self._lock:
+            already, self._closed = self._closed, True
             pool, self._pool = self._pool, None
-            hot = self._hot
-            self._closed = True
         if pool is not None:
             pool.shutdown(wait=wait)
-        if hot is not None:
-            hot.close(wait=wait)
+        if not already and self._hot is not None:
+            self._hot.close(wait=wait)
 
     def __enter__(self) -> "BlockSlowTier":
         return self
@@ -454,16 +459,31 @@ class BlockSlowTier:
             if self.io_workers is None and self._pool is None:
                 self.io_workers = max(1, int(n))
 
-    def _executor(self) -> concurrent.futures.ThreadPoolExecutor:
+    def _submit(self, fn, *args) -> "concurrent.futures.Future":
+        """Submit ``fn(*args)`` to the prefetch pool; on a closed tier (or
+        one closed between the check and the submit — teardown may race an
+        in-flight stream) run it synchronously into a completed future
+        instead.  The store stays readable after close, so degrading costs
+        the overlap, never the result."""
         with self._lock:
-            if self._closed:
-                raise RuntimeError(
-                    f"slow tier over {self.store.path} is closed")
-            if self._pool is None:
-                self._pool = concurrent.futures.ThreadPoolExecutor(
-                    max_workers=max(1, int(self.io_workers or 1)),
-                    thread_name_prefix="slow-tier-prefetch")
-            return self._pool
+            pool = None
+            if not self._closed:
+                if self._pool is None:
+                    self._pool = concurrent.futures.ThreadPoolExecutor(
+                        max_workers=max(1, int(self.io_workers or 1)),
+                        thread_name_prefix="slow-tier-prefetch")
+                pool = self._pool
+        if pool is not None:
+            try:
+                return pool.submit(fn, *args)
+            except RuntimeError:
+                pass   # pool shut down after the check; fall through
+        fut: concurrent.futures.Future = concurrent.futures.Future()
+        try:
+            fut.set_result(fn(*args))
+        except BaseException as e:
+            fut.set_exception(e)
+        return fut
 
     # ------------------------------------------------------------- promotion
 
@@ -593,14 +613,13 @@ class BlockSlowTier:
         """Submit :meth:`fetch_beams` to the host worker; the caller joins
         the future at rerank time (the staged pipeline joins it one stage
         later, after the next batch's continues are on the device queue)."""
-        return self._executor().submit(self.fetch_beams,
-                                       np.asarray(beam_ids))
+        return self._submit(self.fetch_beams, np.asarray(beam_ids))
 
     def prefetch_adj(self, ids: np.ndarray) -> "concurrent.futures.Future":
         """Submit :meth:`fetch_adj` to the host worker — the walk-prefetch
         stage (next hop's frontier rows) and the out-of-core walk's
         I/O-group overlap both ride this."""
-        return self._executor().submit(self.fetch_adj, np.asarray(ids))
+        return self._submit(self.fetch_adj, np.asarray(ids))
 
     # ---------------------------------------------------------- observability
 

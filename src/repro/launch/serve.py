@@ -38,6 +38,19 @@ the statically pinned entry-proximal set; ``--hot-nodes`` (with
 per-stream promotion/demotion counters are reported at the end; and
 ``--io-workers`` sizes the tier's prefetch pool.
 
+``--serve`` (with ``--adaptive``) runs the closed-loop *front door* instead
+of the batch benchmark: live requests are paced at ``--qps`` (Poisson or
+bursty ``--arrival``), admitted into two QoS classes (``--interactive-frac``
+splits the mix) with their own deadlines (``--deadline-ms`` /
+``--batch-deadline-ms``) and their own budget-law engines over the shared
+backend — with ``--calibrate``, one (lam, l_min) law per class is fitted to
+``--interactive-recall-target`` / ``--recall-target``.  The report is
+per-class: outcome counts, latency p50/p99 vs the deadline, recall, and the
+per-class I/O counters (mean granted budget, walk hops).  Timing runs on
+the production wall-clock seam (:class:`repro.serving.server.WallClock` +
+``ThreadDispatcher``); the deterministic virtual-clock twin of this loop is
+``benchmarks/serving_load.py``.
+
 ``--distributed N`` shards the dataset over N virtual host devices (one
 locally built sub-graph per shard) and serves scatter-gather through a
 ``DistributedBackend``. With ``--adaptive`` the distributed step runs
@@ -102,6 +115,135 @@ def _distributed_engine(args, x, queries, budget_cfg, num_buckets):
     engine = serving.SearchEngine(backend, budget_cfg, k=args.k,
                                   num_buckets=num_buckets)
     return engine, x[: per * n_shards]
+
+
+def _report_disk_tier(backend, model) -> None:
+    """Measured slow-tier figures next to the DiskTierModel's modelled ones
+    (stats stay readable after engine close)."""
+    st = backend.slow_tier.stats()
+    lat = backend.slow_tier.fetch_latency_us()
+    print(f"[serve] disk tier: hit_rate={st['hit_rate']:.3f} "
+          f"(hits={st['cache_hits']} misses={st['cache_misses']}) "
+          f"blocks_read={st['blocks_read']} "
+          f"measured_read={st['measured_read_us']:.1f}us vs "
+          f"modelled={model.read_latency_us:.1f}us "
+          f"fetch p50={lat['fetch_p50_us']:.0f}us "
+          f"p99={lat['fetch_p99_us']:.0f}us")
+    if "hot_capacity" in st:
+        print(f"[serve] hot tier: resident={st['hot_nodes']}"
+              f"/{st['hot_capacity']} hot_hits={st['hot_hits']} "
+              f"promotions={st['promotions']} "
+              f"demotions={st['demotions']} "
+              f"ticks={st['promotion_ticks']} "
+              f"promotion_io_blocks={st['promotion_io_blocks']}")
+
+
+def _serve_front_door(args, backend, index, queries, gt_i,
+                      budget_cfg, num_buckets) -> None:
+    """Closed-loop front-door serving on the wall clock: one budget-law
+    engine per QoS class over the shared backend, arrival pacing at --qps,
+    per-class SLO report."""
+    import dataclasses
+
+    import numpy as np
+
+    from repro import serving
+    from repro.core import calibrate
+    from repro.serving import server as sv
+
+    laws = {"interactive": budget_cfg,
+            "batch": dataclasses.replace(budget_cfg,
+                                         l_min=budget_cfg.l_max)}
+    if args.calibrate:
+        def make_eval(cfg):
+            return calibrate.tiered_recall_eval(
+                index, queries, np.asarray(gt_i), k=args.k,
+                sample=args.calib_sample, base_cfg=cfg)
+
+        fits = calibrate.calibrate_budget_law_per_class(
+            make_eval, budget_cfg,
+            {"interactive": args.interactive_recall_target,
+             "batch": args.recall_target},
+            joint=args.joint)
+        laws = calibrate.class_budget_cfgs(fits, budget_cfg)
+        for name, r in fits.items():
+            print(f"[serve] class {name}: lam={r.lam:.4f} "
+                  f"l_min={laws[name].l_min} recall={r.recall:.4f} "
+                  f"({'hit' if r.achieved else 'MISSED'} {r.target:.2f})")
+    lanes = {"interactive": 8, "batch": 32}
+    engines = {name: serving.SearchEngine(backend, law, k=args.k,
+                                          num_buckets=num_buckets)
+               for name, law in laws.items()}
+    classes = [
+        sv.QoSClass("interactive", deadline_s=args.deadline_ms / 1e3,
+                    batch_window_s=0.002, max_lanes=lanes["interactive"],
+                    lane_quantum=lanes["interactive"]),
+        sv.QoSClass("batch", deadline_s=args.batch_deadline_ms / 1e3,
+                    batch_window_s=0.02, max_lanes=lanes["batch"],
+                    lane_quantum=lanes["batch"]),
+    ]
+    qn = np.asarray(queries)
+    for name, eng in engines.items():      # warm the padded dispatch shape
+        eng.search(qn[:lanes[name]])
+    rng = np.random.default_rng(0)
+    n = args.requests
+    if args.arrival == "poisson":
+        arr = np.cumsum(rng.exponential(1.0 / args.qps, size=n))
+    else:                                  # bursty: on/off modulated Poisson
+        out, t, on, phase_end = [], 0.0, True, 0.05
+        while len(out) < n:
+            t += float(rng.exponential(
+                1.0 / (args.qps * 8.0 if on else args.qps / 8.0)))
+            if t >= phase_end:
+                t, on = phase_end, not on
+                phase_end += 0.05 if on else 0.2
+            else:
+                out.append(t)
+        arr = np.asarray(out)
+    rows = rng.integers(0, qn.shape[0], size=n)
+    cls_of = ["interactive" if rng.random() < args.interactive_frac
+              else "batch" for _ in range(n)]
+    door = sv.FrontDoor(engines, classes)
+    t0 = time.perf_counter()
+    futs = []
+    for t_arr, row, cls in zip(arr, rows, cls_of):
+        lag = t_arr - (time.perf_counter() - t0)
+        if lag > 0:
+            time.sleep(lag)
+        futs.append((int(row), cls, door.submit(qn[row], cls=cls)))
+    door.close(wait=True, timeout=600)
+    wall = time.perf_counter() - t0
+    gt = np.asarray(gt_i)
+    print(f"[serve] front door: {n} requests in {wall:.2f}s "
+          f"({n / wall:.1f} qps, offered {args.qps:.0f}, "
+          f"arrival={args.arrival})")
+    for c in classes:
+        rs = [(row, f.result(timeout=0)) for row, cls, f in futs
+              if cls == c.name]
+        lat = [r.latency * 1e3 for _, r in rs if r.status != "shed"]
+        ok = [(row, r) for row, r in rs if r.status == "ok"]
+        counts: dict[str, int] = {}
+        for _, r in rs:
+            counts[r.status] = counts.get(r.status, 0) + 1
+        rec = (float(np.mean([np.isin(r.ids, gt[row][: args.k]).mean()
+                              for row, r in ok])) if ok else float("nan"))
+        bud = (float(np.mean([r.budget for _, r in ok
+                              if r.budget is not None]))
+               if ok else float("nan"))
+        hops = (float(np.mean([r.hops for _, r in ok
+                               if r.hops is not None]))
+                if ok else float("nan"))
+        p50 = float(np.percentile(lat, 50)) if lat else float("nan")
+        p99 = float(np.percentile(lat, 99)) if lat else float("nan")
+        print(f"[serve] class {c.name}: {counts} "
+              f"lat p50={p50:.1f}ms p99={p99:.1f}ms "
+              f"(deadline {c.deadline_s * 1e3:.0f}ms) "
+              f"recall@{args.k}={rec:.4f} meanL={bud:.1f} hops={hops:.1f}")
+    st = door.stats()
+    print(f"[serve] admission: submitted={st['submitted']} "
+          f"admitted={st['admitted']} shed={st['shed']} "
+          f"dispatches={st['dispatches']} "
+          f"max_open={st['max_open_lanes']}/{door.max_queue}")
 
 
 def buckets_arg(value: str):
@@ -176,6 +318,29 @@ def main() -> None:
                          "held-out queries")
     ap.add_argument("--recall-target", type=float, default=0.95)
     ap.add_argument("--calib-sample", type=int, default=256)
+    ap.add_argument("--serve", action="store_true",
+                    help="closed-loop front-door serving (QoS classes, "
+                         "deadlines, load shedding) instead of the batch "
+                         "benchmark; requires --adaptive")
+    ap.add_argument("--qps", type=float, default=200.0,
+                    help="with --serve: offered arrival rate")
+    ap.add_argument("--requests", type=int, default=256,
+                    help="with --serve: total requests to pace in")
+    ap.add_argument("--interactive-frac", type=float, default=0.5,
+                    help="with --serve: fraction of requests in the "
+                         "interactive class (rest are batch)")
+    ap.add_argument("--deadline-ms", type=float, default=100.0,
+                    help="with --serve: interactive-class deadline")
+    ap.add_argument("--batch-deadline-ms", type=float, default=2000.0,
+                    help="with --serve: batch-class deadline")
+    ap.add_argument("--arrival", default="poisson",
+                    choices=("poisson", "bursty"),
+                    help="with --serve: arrival process (bursty = on/off "
+                         "modulated Poisson)")
+    ap.add_argument("--interactive-recall-target", type=float, default=0.85,
+                    help="with --serve --calibrate: interactive class's "
+                         "recall target (--recall-target is the batch "
+                         "class's)")
     ap.add_argument("--distributed", type=int, default=0, metavar="N",
                     help="shard over N virtual host devices and serve "
                          "scatter-gather (staged at engine parity with "
@@ -195,6 +360,15 @@ def main() -> None:
                  "engine; pass --adaptive as well")
     if args.joint and not args.calibrate:
         ap.error("--joint refines --calibrate; pass both")
+    if args.serve and not args.adaptive:
+        ap.error("--serve runs per-class budget-law engines (and deadline "
+                 "hedges need the staged probe); pass --adaptive")
+    if args.serve and args.distributed:
+        ap.error("--serve is the single-host front door (the distributed "
+                 "backend has no host probe view for deadline partials)")
+    if args.serve and args.pipeline:
+        ap.error("--pipeline is the batch-stream benchmark mode; --serve "
+                 "paces individual requests through the front door")
     if args.per_shard and not (args.calibrate and args.distributed):
         ap.error("--per-shard refines --calibrate for --distributed serving;"
                  " pass all three")
@@ -278,6 +452,12 @@ def main() -> None:
                   f"pinned={slow_tier.stats()['pinned_nodes']}" + hot_part)
         backend = serving.TieredBackend(index, slow_tier=slow_tier,
                                         step_kernel=args.kernel)
+        if args.serve:
+            _serve_front_door(args, backend, index, queries, gt_i,
+                              budget_cfg, num_buckets)
+            if args.disk:
+                _report_disk_tier(backend, model)
+            return
         if args.adaptive:
             engine = serving.SearchEngine(backend, budget_cfg, k=args.k,
                                           num_buckets=num_buckets)
@@ -351,22 +531,7 @@ def main() -> None:
           f"batch_lat p50={np.percentile(lat_ms,50):.1f}ms "
           f"p99={np.percentile(lat_ms,99):.1f}ms" + ssd_part)
     if not args.distributed and args.disk:
-        st = backend.slow_tier.stats()
-        lat = backend.slow_tier.fetch_latency_us()
-        print(f"[serve] disk tier: hit_rate={st['hit_rate']:.3f} "
-              f"(hits={st['cache_hits']} misses={st['cache_misses']}) "
-              f"blocks_read={st['blocks_read']} "
-              f"measured_read={st['measured_read_us']:.1f}us vs "
-              f"modelled={model.read_latency_us:.1f}us "
-              f"fetch p50={lat['fetch_p50_us']:.0f}us "
-              f"p99={lat['fetch_p99_us']:.0f}us")
-        if "hot_capacity" in st:
-            print(f"[serve] hot tier: resident={st['hot_nodes']}"
-                  f"/{st['hot_capacity']} hot_hits={st['hot_hits']} "
-                  f"promotions={st['promotions']} "
-                  f"demotions={st['demotions']} "
-                  f"ticks={st['promotion_ticks']} "
-                  f"promotion_io_blocks={st['promotion_io_blocks']}")
+        _report_disk_tier(backend, model)
 
 
 if __name__ == "__main__":

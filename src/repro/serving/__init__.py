@@ -79,6 +79,20 @@ Live reconfiguration: ``SearchEngine.recalibrate`` refits the budget law
 (lam, optionally jointly with l_min) against a recall target and deploys it
 in place; ``SearchEngine.update_backend`` swaps refreshed index arrays after
 Online-MCGI inserts.  Neither rebuilds the engine.
+
+The serving front door (:mod:`repro.serving.server`) is the layer live
+traffic talks to: a bounded admission queue with load shedding, per-class
+lane coalescing into engine dispatches, per-request deadlines with QoS
+classes (one engine — one calibrated (lam, l_min) — per class over a shared
+backend), and a deadline-hedged gather that serves best-so-far partials
+from the probe horizon (``SearchEngine.partial_result``).  All timing flows
+through an injectable clock/scheduler seam (``WallClock`` in production,
+``VirtualClock`` in tests — every interleaving replayable bit-exactly) and
+engine execution through a dispatcher seam (``ThreadDispatcher`` /
+``VirtualDispatcher``).  Stage graph above the engine:
+
+    submit -> bounded queue -> class flush -> engine begin -> finish/hedge
+    (shed when full)  (deadline timers complete queued/late lanes)
 """
 from repro.serving.engine import (  # noqa: F401
     BatchResult,
@@ -93,4 +107,15 @@ from repro.serving.pipeline import (  # noqa: F401
     bucketed_continue,
     pad_bucket_size,
     partition_by_bucket,
+)
+from repro.serving.server import (  # noqa: F401
+    FrontDoor,
+    QoSClass,
+    RequestFuture,
+    ServedResult,
+    ThreadDispatcher,
+    VirtualClock,
+    VirtualDispatcher,
+    WallClock,
+    drain_virtual,
 )

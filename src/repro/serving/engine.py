@@ -53,10 +53,40 @@ target on held-out queries and swaps the fitted config into the live engine.
 Online-MCGI inserts shift the LID population, so an index refresh calls
 :meth:`SearchEngine.update_backend` + ``recalibrate`` instead of rebuilding
 the engine; jit caches are keyed on shapes and survive both.
+
+The serving front door (:mod:`repro.serving.server`) sits *above* this
+module and owns what the engine deliberately doesn't: arrival, queueing,
+deadlines, and overload.  Its request path is admission (bounded queue,
+shed when full) -> per-class lane coalescing -> engine dispatch -> deadline
+gather.  Three engine hooks carry it:
+
+* :meth:`SearchEngine.begin` — the dispatch stage alone (admission + probe,
+  or the whole monolithic program), returning the in-flight handle without
+  blocking.  The front door begins a flight the moment a class's lanes
+  flush, so device work starts while the completion is still queued behind
+  older batches.
+* :meth:`SearchEngine.finish_from` — the remaining stages of a begun flight
+  (schedule / prefetch / gather).  ``begin`` + ``finish_from`` is exactly
+  :meth:`SearchEngine.search` — bit-identical results — just split at a
+  seam the front door can put a scheduler between.
+* :meth:`SearchEngine.partial_result` — the *deadline-aware gather*: the
+  probe state's beam reranked through the normal finish path, a servable
+  best-so-far answer for a request whose deadline expired mid-continue.
+  Never consumes the flight; a later ``finish_from`` still yields the full
+  result.  Available on staged single-host backends (the distributed probe
+  state is a mesh checkpoint with no host-side beam view; see
+  :attr:`SearchEngine.supports_partial`).
+
+Per-QoS-class budget laws need no engine feature at all: the front door
+simply holds one engine per class (sharing one backend — jit caches are
+keyed on config + shapes, so classes don't trample each other), each with
+its own calibrated (lam, l_min)
+(:func:`repro.core.calibrate.calibrate_budget_law_per_class`).
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Any, Callable, Iterable, Iterator
 
 import jax
@@ -114,6 +144,17 @@ class _StagedRerankMixin:
 
     def schedule_budgets(self, budgets_np: np.ndarray) -> np.ndarray:
         return budgets_np
+
+    def partial_parts(self, probe_state) -> tuple:
+        """The probe-horizon view of the walk — (beam_ids, beam_d, hops,
+        evals) sliced straight out of the warm probe state, the same part
+        layout :meth:`finish` reranks.  The serving front door's deadline
+        gather serves these as a best-so-far result when a request's
+        deadline expires mid-continue (:meth:`SearchEngine.partial_result`).
+        Unfilled beam slots are INVALID/inf and the rerank masks them, so a
+        partial is always servable once the probe ran."""
+        beam_ids, beam_d, _beam_exp, _visited, hops, evals = probe_state
+        return beam_ids, beam_d, hops, evals
 
     def finish_extras(self) -> dict[str, Any]:
         """Per-batch observability payload (backends override)."""
@@ -785,6 +826,8 @@ class SearchEngine:
         # extra compile shapes.
         self.pad_quantum = pad_quantum
         self.coalesce_lanes = coalesce_lanes
+        self._close_lock = threading.Lock()
+        self._closed = False
         backend_budget = getattr(backend, "beam_budget", None)
         if (budget_cfg is not None and backend_budget is not None
                 and budget_cfg != backend_budget):
@@ -899,6 +942,64 @@ class SearchEngine:
             res = advance()
             if res is not None:
                 yield res
+
+    # -------------------------------------------- front-door dispatch seam
+
+    def begin(self, queries) -> _InFlight:
+        """Dispatch one batch and return its in-flight handle without
+        blocking — the front half of :meth:`search`, split out so the
+        serving front door (:mod:`repro.serving.server`) can start device
+        work at flush time and finish it on its own scheduler.  Pair with
+        :meth:`finish_from` (full result) and :meth:`partial_result`
+        (best-so-far at a deadline)."""
+        return self._dispatch(queries)
+
+    def finish_from(self, f: _InFlight) -> BatchResult:
+        """Run the remaining stages of a :meth:`begin` flight and gather
+        the batch.  ``begin`` + ``finish_from`` executes exactly the stage
+        sequence of :meth:`search` — same compiled programs, same inputs,
+        bit-identical results."""
+        if self._staged() and f.dispatched is None:
+            if self._walk_prefetching() and f.walk_prefetch is None:
+                f = self._walk_prefetch(f)
+            f = self._schedule(f)
+            if self._prefetching() and f.prefetch is None:
+                f = self._prefetch(f)
+        return self._gather(f)
+
+    @property
+    def supports_partial(self) -> bool:
+        """Whether :meth:`partial_result` can serve a best-so-far answer:
+        a staged engine whose backend exposes a host-side probe view
+        (``partial_parts``).  The distributed probe state is a whole-mesh
+        checkpoint — its beams live shard-local with no host reassembly
+        short of the merge program — so the front door falls back to plain
+        timeouts there."""
+        return (self._staged()
+                and hasattr(self.backend, "partial_parts"))
+
+    def partial_result(self, f: _InFlight) -> BatchResult:
+        """Best-so-far gather at the probe horizon — the deadline-aware
+        gather of the serving front door.  The probe state's beam is
+        reranked through the backend's normal finish path (slow-tier fetch
+        included, synchronously — a deadline hedge has no later stage to
+        hide I/O behind), so a partial is a real servable result: valid
+        ids, true distances, just from a shorter walk.  The flight is not
+        consumed — :meth:`finish_from` can still run afterwards and sees
+        the same probe state.  ``extras["partial"]`` marks the result."""
+        if not self.supports_partial:
+            raise ValueError(
+                "partial results need a staged engine over a backend with "
+                "a host-side probe view (partial_parts); the distributed "
+                "mesh state has none")
+        parts = tuple(np.asarray(a)
+                      for a in self.backend.partial_parts(f.probe_state))
+        budgets_np = (f.budgets_np if f.budgets_np is not None
+                      else np.asarray(f.budgets))
+        res = self.backend.finish(f.queries, parts, self.k, q_lid=f.q_lid,
+                                  budgets_np=budgets_np)
+        res.extras["partial"] = True
+        return res
 
     # ------------------------------------------------- pipeline stage thirds
 
@@ -1106,7 +1207,17 @@ class SearchEngine:
 
     def close(self) -> None:
         """Release backend-owned resources (disk slow tiers own a worker
-        thread).  Idempotent; backends without resources are a no-op."""
+        thread).  Idempotent and safe to call concurrently — from any
+        thread, including while a ``search_batches`` stream is in flight:
+        exactly one caller runs the backend teardown, and a closed disk
+        tier keeps serving synchronous reads (its prefetch degrades
+        gracefully; see :meth:`repro.index.disk.BlockSlowTier.close`), so
+        in-flight batches complete with bit-identical results.  Backends
+        without resources are a no-op."""
+        with self._close_lock:
+            if self._closed:
+                return
+            self._closed = True
         close = getattr(self.backend, "close", None)
         if close is not None:
             close()

@@ -322,6 +322,83 @@ def scenario_staged_engine():
     print(json.dumps(out))
 
 
+def scenario_front_door():
+    """The serving front door over the staged distributed backend: served
+    lanes bit-identical to a direct engine dispatch, a mid-stream shard
+    loss (``set_shard_ok`` between dispatches) excludes the dead shard from
+    later served results, and a wedged mesh dispatch completes as timeout
+    (the distributed backend has no host probe view, so no partials) while
+    the open-lane bound sheds and every future completes."""
+    import math
+
+    from repro import serving
+    from repro.core import build
+    from repro.core.search import AdaptiveBeamBudget
+    from repro.distributed import sharded_search as ss
+    from repro.serving import server as sv
+
+    mesh = make_mesh()
+    n_shards = mesh.devices.size
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (1024, 16), jnp.float32)
+    q = np.asarray(jax.random.normal(jax.random.fold_in(key, 1), (32, 16),
+                                     jnp.float32))
+    cfg = build.BuildConfig(degree=8, beam_width=16, iters=1, batch=128,
+                            max_hops=32)
+    arrays, per = ss.build_sharded_arrays(x, mesh, build_cfg=cfg, m_pq=4)
+    budget = AdaptiveBeamBudget(l_min=8, l_max=16, lam=0.35, center=8.0)
+    fb = serving.DistributedBackend(
+        mesh, arrays, beam_width=16, max_hops=32, k=5, query_chunk=8,
+        beam_budget=budget, budget_buckets=4)
+    eng = serving.SearchEngine(fb, budget, k=5, num_buckets=None)
+    out = {"supports_partial": bool(eng.supports_partial)}
+
+    clock = sv.VirtualClock()
+    door = sv.FrontDoor(
+        {"c": eng},
+        [sv.QoSClass("c", deadline_s=60.0, batch_window_s=0.01,
+                     max_lanes=8)],
+        clock=clock, dispatcher=sv.VirtualDispatcher(clock))
+    ref = eng.search(q[:8])
+    futs = [door.submit(q[i]) for i in range(8)]        # flush at max_lanes
+    clock.advance(0.1)
+    rows = [f.result(timeout=0) for f in futs]
+    out["served_ok"] = all(r.status == "ok" for r in rows)
+    out["bit_identical"] = all(
+        bool((r.ids == np.asarray(ref.ids)[i]).all()
+             and (r.d2 == np.asarray(ref.d2)[i]).all())
+        for i, r in enumerate(rows))
+
+    # Shard loss between the front door's dispatches: the next served
+    # batch must exclude the dead shard (per-lane extras carry shard ids).
+    fb.set_shard_ok(jnp.ones((n_shards,), jnp.bool_).at[3].set(False))
+    futs2 = [door.submit(q[8 + i]) for i in range(8)]
+    clock.advance(0.1)
+    rows2 = [f.result(timeout=0) for f in futs2]
+    out["post_flip_ok"] = all(r.status == "ok" for r in rows2)
+    out["post_flip_no_dead"] = all(
+        bool((np.asarray(r.extras["shard_ids"]) != 3).all()) for r in rows2)
+
+    # Wedged mesh dispatch: deadline hedges find no partial support and
+    # complete as timeout; the open-lane bound converts overload to sheds.
+    clock2 = sv.VirtualClock()
+    door2 = sv.FrontDoor(
+        {"c": eng},
+        [sv.QoSClass("c", deadline_s=0.5, batch_window_s=0.0, max_lanes=4)],
+        max_queue=8, clock=clock2,
+        dispatcher=sv.VirtualDispatcher(clock2, service_time=math.inf,
+                                        probe_time=0.001))
+    futs3 = [door2.submit(q[i % 16]) for i in range(12)]
+    clock2.advance(1.0)
+    st = door2.stats()
+    out["wedge_timeout_no_partials"] = (st["timeout"] == 8
+                                        and st["partial"] == 0)
+    out["wedge_shed_at_bound"] = (st["shed"] == 4
+                                  and st["max_open_lanes"] <= 8)
+    out["wedge_all_futures_done"] = all(f.done() for f in futs3)
+    print(json.dumps(out))
+
+
 def scenario_cells_lower():
     from repro.launch import cells as cells_mod
 
@@ -356,5 +433,7 @@ if __name__ == "__main__":
         scenario_merge_modes()
     elif scen == "staged_engine":
         scenario_staged_engine()
+    elif scen == "front_door":
+        scenario_front_door()
     else:
         raise SystemExit(f"unknown scenario {scen}")

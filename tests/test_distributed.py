@@ -91,6 +91,21 @@ def test_staged_engine_parity():
 
 
 @pytest.mark.slow
+def test_front_door_over_distributed_backend():
+    """The async front door serving the staged distributed backend under a
+    virtual clock: served lanes bit-identical to direct dispatch, a shard
+    lost between dispatches vanishes from later served results, and a
+    wedged mesh dispatch degrades to timeout (no host probe view, so no
+    partial support) with the open-lane bound shedding overload."""
+    r = _run("front_door")
+    assert not r["supports_partial"], r
+    for key in ("served_ok", "bit_identical", "post_flip_ok",
+                "post_flip_no_dead", "wedge_timeout_no_partials",
+                "wedge_shed_at_bound", "wedge_all_futures_done"):
+        assert r[key], (key, r)
+
+
+@pytest.mark.slow
 def test_staged_fault_injection_mid_stream():
     """set_shard_ok flipped between batches of a pipelined stream: later
     batches exclude the dead shard, recall loss is bounded by its data

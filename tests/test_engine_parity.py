@@ -332,8 +332,9 @@ def test_backend_close_shuts_down_tier():
     eng.close()
     assert t.closed
     eng.close()                                   # idempotent
-    with pytest.raises(RuntimeError, match="closed"):
-        t.prefetch(np.zeros((1, 2), np.int32))
+    # Post-close prefetches degrade to synchronous completed futures (an
+    # in-flight stream racing close must still complete with real data).
+    assert t.prefetch(np.zeros((1, 2), np.int32)).done()
     # Backends without resources are a no-op close.
     serving.SearchEngine(serving.ExactBackend(
         np.asarray(fx.built()[0]), idx.adj, idx.entry), fx.BUDGET).close()
