@@ -1,0 +1,215 @@
+"""Live-mutation churn: staleness, recall-under-churn, merge cost.
+
+The delta tier (:mod:`repro.index.delta`) turns the read-only serving
+stack into a mutable one; this benchmark prices what that costs and pins
+what it guarantees under a sustained insert/delete/search mix:
+
+* **bounded staleness** — a vector must be findable by the search that
+  runs right after ``insert`` returns, and gone right after ``delete``
+  returns.  Both are counted as hard violations (must be 0): the delta
+  scan is exact, so staleness is a correctness property here, not a lag
+  distribution;
+* **recall under churn** — recall@k of the fan-out search (base engine
+  with in-graph tombstone exclusion + exact delta scan + merged rerank)
+  against brute force over the *current live content*, tracked per round
+  as the delta grows and across merge boundaries;
+* **merge boundaries** — merges run mid-stream (auto-threshold), and the
+  smoke additionally asserts the post-merge results are bit-identical to
+  a freshly built index of the same live rows (the ISSUE's acceptance
+  property);
+* **cost** — insert latency per vector (the combined-graph rewire),
+  search latency per query, and merge wall time per generation.
+
+``--smoke`` is the CI gate: tiny corpus, tmpdir store, hard asserts.
+Both entry points write ``BENCH_mutation_churn.json``.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import build
+from repro.index.delta import LiveIndex
+
+JSON_PATH = pathlib.Path("BENCH_mutation_churn.json")
+
+
+def _brute_topk(x_live: np.ndarray, ext_of: np.ndarray, q: np.ndarray,
+                k: int) -> np.ndarray:
+    """External-id ground truth over the current live rows."""
+    diff = q[:, None, :] - x_live[None]
+    d2 = np.einsum("qnd,qnd->qn", diff, diff, dtype=np.float32)
+    return ext_of[np.argsort(d2, axis=1)[:, :k]]
+
+
+def churn(li: LiveIndex, fresh: np.ndarray, q: np.ndarray, *, rounds: int,
+          insert_per_round: int, delete_per_round: int, k: int,
+          rng: np.random.Generator) -> dict:
+    """Drive ``rounds`` of insert -> delete -> search; returns metrics.
+
+    ``fresh`` supplies the insert stream.  Deletes pick random live
+    external ids.  Every round checks the staleness bounds and measures
+    live recall; merges fire whenever the delta crosses the index's
+    threshold (counted via the generation number)."""
+    qn = np.asarray(q, np.float32)
+    stale_miss = ghost_hits = 0
+    recalls, ins_us, search_us = [], [], []
+    cursor = 0
+    gen0 = li.generation
+    merge_wall = 0.0
+    for _r in range(rounds):
+        batch = fresh[cursor: cursor + insert_per_round]
+        cursor += insert_per_round
+        t0 = time.perf_counter()
+        g_before = li.generation
+        new_ids = li.insert(batch)                 # may auto-merge
+        t1 = time.perf_counter()
+        if li.generation != g_before:
+            merge_wall += t1 - t0                  # merge rode this insert
+        else:
+            ins_us.append((t1 - t0) / max(1, batch.shape[0]) * 1e6)
+        # Staleness bound 1: inserted vectors findable by their own query.
+        ext, _ = li.search(batch[: min(8, batch.shape[0])], 1)
+        stale_miss += int((ext[:, 0] != new_ids[: ext.shape[0]]).sum())
+        # Deletes: random live ids (spare this round's probes).
+        st = li._state
+        live_ext = st.ext_of[st.delta.live_mask]
+        pool = live_ext[~np.isin(live_ext, new_ids[:8])]
+        dels = rng.choice(pool, size=min(delete_per_round, pool.size),
+                          replace=False)
+        li.delete(dels)
+        # Staleness bound 2 + recall: serve the fixed query set.
+        t2 = time.perf_counter()
+        ext_q, _ = li.search(qn, k)
+        search_us.append((time.perf_counter() - t2) / qn.shape[0] * 1e6)
+        ghost_hits += int(np.isin(ext_q, dels).sum())
+        st = li._state
+        gt = _brute_topk(np.asarray(st.delta.x)[st.delta.live_mask],
+                         st.ext_of[st.delta.live_mask], qn, k)
+        recalls.append(float(np.mean([
+            np.isin(ext_q[i], gt[i]).mean() for i in range(qn.shape[0])])))
+    return {
+        "rounds": rounds,
+        "staleness_violations": int(stale_miss),
+        "ghost_results": int(ghost_hits),
+        "recall_mean": float(np.mean(recalls)),
+        "recall_min": float(np.min(recalls)),
+        "recall_per_round": [round(r, 4) for r in recalls],
+        "merges": int(li.generation - gen0),
+        "merge_wall_s": merge_wall,
+        "insert_us_per_vec": float(np.mean(ins_us)) if ins_us else 0.0,
+        "search_us_per_query": float(np.mean(search_us)),
+        "n_live_final": li.n_live,
+    }
+
+
+def _emit_json(config: dict, metrics: dict) -> None:
+    JSON_PATH.write_text(json.dumps(
+        {"bench": "mutation_churn", "config": config, "metrics": metrics},
+        indent=2, sort_keys=True))
+
+
+def run(csv: common.Csv, scale: str = "small"):
+    x, q, _gt = common.dataset("gist-proxy", scale)
+    xn, qn = np.asarray(x, np.float32), np.asarray(q, np.float32)[:64]
+    n_base = int(xn.shape[0] * 0.7)
+    cfg = build.BuildConfig(degree=24, beam_width=48, iters=1, batch=256,
+                            max_hops=96)
+    config = dict(scale=scale, n_base=n_base, d=int(xn.shape[1]),
+                  rounds=8, insert_per_round=150, delete_per_round=60,
+                  merge_threshold=600, k=10)
+    t0 = time.perf_counter()
+    li = LiveIndex(xn[:n_base], cfg, k=10, beam_width=48, max_hops=96,
+                   m_pq=8, merge_threshold=config["merge_threshold"])
+    build_s = time.perf_counter() - t0
+    try:
+        li.search(qn, 10)                          # warm the compile cache
+        m = churn(li, xn[n_base:], qn, rounds=config["rounds"],
+                  insert_per_round=config["insert_per_round"],
+                  delete_per_round=config["delete_per_round"], k=10,
+                  rng=np.random.default_rng(11))
+    finally:
+        li.close()
+    csv.add("mutation_churn/insert", m["insert_us_per_vec"] / 1e6,
+            f"per-vector combined-graph rewire ({config['insert_per_round']}"
+            f"/round)")
+    csv.add("mutation_churn/search", m["search_us_per_query"] / 1e6,
+            f"fan-out under churn; recall@10 mean={m['recall_mean']:.4f} "
+            f"min={m['recall_min']:.4f}")
+    csv.add("mutation_churn/merge", (m["merge_wall_s"] / m["merges"]
+                                     if m["merges"] else 0.0),
+            f"{m['merges']} merges over {m['rounds']} rounds "
+            f"(base build was {build_s:.1f}s); staleness_violations="
+            f"{m['staleness_violations']} ghost_results={m['ghost_results']}")
+    _emit_json(config, m)
+    return m
+
+
+def smoke() -> None:
+    """CI smoke: tiny corpus, tmpdir block store, hard asserts — zero
+    staleness violations, zero ghost (deleted) results, a recall floor
+    under churn, at least one mid-stream merge, and post-merge bit-identity
+    against a fresh build of the same live rows."""
+    from repro.data import make_dataset
+
+    x, q = make_dataset("tiny-mixture", seed=0)
+    xn = np.asarray(x, np.float32)[:900]
+    qn = np.asarray(q, np.float32)[:24]
+    cfg = build.BuildConfig(degree=16, beam_width=32, iters=1, batch=128,
+                            max_hops=64)
+    config = dict(scale="smoke", n_base=600, d=int(xn.shape[1]), rounds=4,
+                  insert_per_round=60, delete_per_round=25,
+                  merge_threshold=150, k=10)
+    with tempfile.TemporaryDirectory() as td:
+        li = LiveIndex(xn[:600], cfg, k=10, beam_width=32, max_hops=64,
+                       m_pq=4, store_dir=td, nodes_per_block=4,
+                       merge_threshold=config["merge_threshold"])
+        li2 = None
+        try:
+            li.search(qn, 10)
+            m = churn(li, xn[600:], qn, rounds=config["rounds"],
+                      insert_per_round=config["insert_per_round"],
+                      delete_per_round=config["delete_per_round"], k=10,
+                      rng=np.random.default_rng(5))
+            assert m["staleness_violations"] == 0, m
+            assert m["ghost_results"] == 0, m
+            assert m["recall_min"] >= 0.85, m
+            assert m["merges"] >= 1, m
+            # Merge to a boundary, then: bit-identity vs a fresh build.
+            li.merge()
+            st = li._state
+            ext, d2 = li.search(qn, 10)
+            li2 = LiveIndex(np.asarray(st.delta.x), cfg, k=10,
+                            beam_width=32, max_hops=64, m_pq=4,
+                            merge_threshold=10 ** 9)
+            extf, d2f = li2.search(qn, 10)
+            np.testing.assert_array_equal(
+                np.where(extf >= 0, st.ext_of[np.maximum(extf, 0)], -1),
+                ext)
+            np.testing.assert_array_equal(d2f, d2)
+        finally:
+            li.close()
+            if li2 is not None:
+                li2.close()
+    _emit_json(config, m)
+    print(f"# smoke ok: {m['rounds']} churn rounds, {m['merges']} live "
+          f"merges, staleness_violations=0 ghost_results=0; recall@10 "
+          f"mean={m['recall_mean']:.4f} min={m['recall_min']:.4f}; "
+          f"post-merge bit-identical to fresh build; insert "
+          f"{m['insert_us_per_vec']:.0f}us/vec search "
+          f"{m['search_us_per_query']:.0f}us/query")
+
+
+if __name__ == "__main__":
+    if "--smoke" in sys.argv:
+        smoke()
+    else:
+        csv = common.Csv()
+        print("name,us_per_call,derived")
+        run(csv, scale="small")

@@ -29,6 +29,7 @@ def main() -> None:
         kernel_bench,
         latency,
         lid_accuracy,
+        mutation_churn,
         pipeline_throughput,
         recall_qps,
         recall_vs_L,
@@ -48,6 +49,7 @@ def main() -> None:
         "disk_io": disk_io.run,                 # measured vs modelled slow tier
         "cache_skew": cache_skew.run,           # freq-aware hot tier vs static
         "serving_load": serving_load.run,       # front door: QPS at p99 SLO
+        "mutation_churn": mutation_churn.run,   # delta tier under write mix
         "kernels": kernel_bench.run,            # hot-op microbench
     }
     if args.only:

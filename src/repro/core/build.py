@@ -134,13 +134,26 @@ def _reverse_pairs(
 
 
 def _insert_reverse(
-    x: Array, adj: Array, alpha: Array, dest: Array, cand: Array, cfg: BuildConfig
+    x: Array, adj: Array, alpha: Array, dest: Array, cand: Array, cfg: BuildConfig,
+    valid: Array | None = None,
 ) -> Array:
     """Merge reverse candidates into destination adjacency lists, re-pruning
-    overfull nodes with their own alpha(v)."""
+    overfull nodes with their own alpha(v).
+
+    ``valid`` (optional, (B,) bool) marks real lanes in a shape-padded batch.
+    Pad lanes repeat a live destination id (keeping jit shapes fixed), so
+    without the mask their re-pruned rows — computed from an all-INVALID
+    candidate pool, hence generally *different* from the real lane's row —
+    would reach the scatter under a duplicate index, where the winner is
+    unspecified.  Masked lanes scatter to row N instead, which ``mode="drop"``
+    discards.
+    """
     pool = jnp.concatenate([adj[dest], cand], axis=1)
     rows, _ = prune_mod.robust_prune_batch(x, dest, pool, alpha[dest], cfg.degree)
-    return adj.at[dest].set(rows)
+    if valid is None:
+        return adj.at[dest].set(rows)
+    dest = jnp.where(valid, dest, adj.shape[0])
+    return adj.at[dest].set(rows, mode="drop")
 
 
 def build_with_alpha(

@@ -85,27 +85,43 @@ def build_online_mcgi(
         perm = np.asarray(jax.random.permutation(jax.random.fold_in(key, it + 1), n))
         for start in range(0, n, cfg.batch):
             ids_np = perm[start : start + cfg.batch]
-            if ids_np.size < cfg.batch:
-                ids_np = np.concatenate([ids_np, perm[: cfg.batch - ids_np.size]])
+            real = ids_np.size
+            if real < cfg.batch:
+                # Wrap-around pad keeps the jitted rewire shape fixed; the pad
+                # lanes recompute nodes already refined earlier this round, so
+                # everything below scatters only the real prefix — otherwise
+                # the padded scatter would carry duplicate ids (and for small
+                # n, duplicate ids with rows from different adj snapshots),
+                # making the build depend on the scatter's unspecified
+                # duplicate-index winner.
+                ids_np = np.concatenate([ids_np, perm[: cfg.batch - real]])
             node_ids = jnp.asarray(ids_np)
             rows, _, alpha_u, lid_u = rewire(x, adj, mu, sigma, entry, node_ids, cfg)
-            adj = adj.at[node_ids].set(rows)
-            alpha_final = alpha_final.at[node_ids].set(alpha_u)
-            lid_final = lid_final.at[node_ids].set(lid_u)
+            keep = node_ids[:real]
+            adj = adj.at[keep].set(rows[:real])
+            alpha_final = alpha_final.at[keep].set(alpha_u[:real])
+            lid_final = lid_final.at[keep].set(lid_u[:real])
             dest, cand = build_mod._reverse_pairs(
-                ids_np, np.asarray(rows), cfg.reverse_cap
+                ids_np[:real], np.asarray(rows)[:real], cfg.reverse_cap
             )
             for ds in range(0, dest.shape[0], cfg.batch):
                 dslice = dest[ds : ds + cfg.batch]
                 cslice = cand[ds : ds + cfg.batch]
+                dvalid = None
                 if dslice.size < cfg.batch:
                     pad = cfg.batch - dslice.size
+                    # Pad destinations repeat a live node; mark them so the
+                    # insert drops their scatter lanes (their re-pruned rows
+                    # come from an all-INVALID pool and would race the real
+                    # lane's row under a duplicate index).
+                    dvalid = jnp.asarray(np.arange(cfg.batch) < dslice.size)
                     dslice = np.concatenate([dslice, dslice[:1].repeat(pad)])
                     cslice = np.concatenate(
                         [cslice, np.full((pad, cfg.reverse_cap), INVALID, np.int32)]
                     )
                 adj = build_mod._insert_reverse(
-                    x, adj, alpha_final, jnp.asarray(dslice), jnp.asarray(cslice), cfg
+                    x, adj, alpha_final, jnp.asarray(dslice), jnp.asarray(cslice),
+                    cfg, valid=dvalid,
                 )
         if progress:
             progress(f"online refinement round {it + 1}/{cfg.iters} done")

@@ -43,6 +43,7 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Array = jax.Array
 INVALID = -1
@@ -119,18 +120,88 @@ def _beam_merge(
 
 
 def _init_state(query_ctx: Array, entry: Array, eval_dists: DistEval,
-                n: int, beam_width: int):
+                n: int, beam_width: int, excl_words: Array | None = None):
     """Fresh search state for one query: entry node in the beam, visited set
-    seeded. State tuple: (beam_ids, beam_d, beam_exp, visited, hops, evals)."""
+    seeded. State tuple: (beam_ids, beam_d, beam_exp, visited, hops, evals).
+
+    ``excl_words`` (optional, (ceil(n/32),) uint32) is a per-query attribute
+    filter: set bits mark *excluded* nodes.  Seeding the visited set with it
+    makes the filter an in-graph lane mask — excluded neighbours fail the
+    seen-check in :func:`_expand_frontier` exactly like INVALID lanes, so
+    they never enter the beam and the walk only ever ranks in-filter nodes.
+    The hop kernels (reference and fused Pallas alike) consume the state
+    unchanged.  The entry node is force-seeded to start the walk; when it is
+    itself excluded its beam distance is set to inf so it can only be
+    traversed *through*, and :func:`scrub_excluded` drops it from the beam
+    at walk exit.  Without a filter the code path is byte-identical to the
+    historical one.
+    """
     nw = (n + 31) // 32
     entry_d = eval_dists(query_ctx, entry[None], jnp.ones((1,), dtype=bool))[0]
+    word = entry >> 5
+    bit = jnp.uint32(1) << (entry.astype(jnp.uint32) & 31)
+    if excl_words is None:
+        visited = jnp.zeros((nw,), dtype=jnp.uint32).at[word].set(bit)
+    else:
+        entry_d = jnp.where((excl_words[word] & bit) != 0, jnp.inf, entry_d)
+        visited = excl_words.at[word].set(excl_words[word] | bit)
     beam_ids = jnp.full((beam_width,), INVALID, dtype=jnp.int32).at[0].set(entry)
     beam_d = jnp.full((beam_width,), jnp.inf, dtype=jnp.float32).at[0].set(entry_d)
     beam_exp = jnp.zeros((beam_width,), dtype=bool)
-    visited = jnp.zeros((nw,), dtype=jnp.uint32).at[entry >> 5].set(
-        jnp.uint32(1) << (entry.astype(jnp.uint32) & 31)
-    )
     return beam_ids, beam_d, beam_exp, visited, jnp.int32(0), jnp.int32(0)
+
+
+def pack_filter(allowed, n: int) -> Array:
+    """Pack a boolean *allowed* mask into per-query exclusion bitset words.
+
+    ``allowed`` is (n,) or (Q, n) bool — True for nodes the query may return
+    (a tenant namespace, an attribute predicate, live non-tombstoned rows).
+    Returns (Q, ceil(n/32)) uint32 words whose set bits mark *excluded*
+    nodes, the form :func:`_init_state` seeds the visited bitset with (bit
+    ``j`` of word ``w`` is node ``w * 32 + j``, matching the walk's packing).
+    Host-side numpy; a (n,) mask packs once and broadcasts over queries.
+    """
+    allowed = np.atleast_2d(np.asarray(allowed, dtype=bool))
+    q, n_mask = allowed.shape
+    assert n_mask == n, (n_mask, n)
+    nw = (n + 31) // 32
+    padded = np.zeros((q, nw * 32), dtype=bool)
+    padded[:, :n] = ~allowed
+    bits = padded.reshape(q, nw, 32).astype(np.uint32)
+    words = (bits << np.arange(32, dtype=np.uint32)).sum(
+        axis=2, dtype=np.uint32)
+    return jnp.asarray(words)
+
+
+def scrub_excluded(beam_ids: Array, beam_d: Array, excl_words: Array):
+    """Drop excluded ids from final beams: (Q, L) ids/d2 + (Q, nw) words.
+
+    The walk's visited pre-seed keeps excluded nodes out of the beam, with
+    one exception — the force-seeded entry node (inf distance, so it sits
+    behind every real candidate).  Scrubbing it to INVALID/inf at walk exit
+    means every downstream consumer (top-k slice, slow-tier rerank, partial
+    results) sees the standard empty-lane convention and can never surface
+    an out-of-filter id.  Beams stay distance-sorted (the scrubbed lane was
+    already at inf).
+    """
+    safe = jnp.maximum(beam_ids, 0)
+    bit = jnp.uint32(1) << (safe.astype(jnp.uint32) & 31)
+    words = jnp.take_along_axis(excl_words, safe >> 5, axis=1)
+    blocked = (beam_ids != INVALID) & ((words & bit) != 0)
+    return (jnp.where(blocked, INVALID, beam_ids),
+            jnp.where(blocked, jnp.inf, beam_d))
+
+
+_scrub_excluded_jit = jax.jit(scrub_excluded)
+
+
+def _scrub_state(probe_state, excl_words: Array):
+    """Apply :func:`scrub_excluded` to a full search-state tuple."""
+    ids, d = scrub_excluded(probe_state[0], probe_state[1], excl_words)
+    return (ids, d) + tuple(probe_state[2:])
+
+
+_scrub_state_jit = jax.jit(_scrub_state)
 
 
 def _select_frontier(state, in_budget: Array):
@@ -380,6 +451,7 @@ def fixed_search_batch(
     beam_width: int,
     max_hops: int,
     step_kernel: "str | BeamStepKernel | None" = None,
+    excl: Array | None = None,
 ) -> tuple[Array, Array, SearchStats]:
     """Batched fixed-beam walk through the pluggable step kernel.
 
@@ -387,13 +459,24 @@ def fixed_search_batch(
     results): init every lane, then hand the batch to the step kernel's
     ``run_batch`` — which is exactly the historical vmapped loop for the
     reference kernel, or one fused launch per hop for the Pallas one.
+
+    ``excl`` ((Q, ceil(n/32)) uint32 from :func:`pack_filter`) runs the walk
+    filtered in-graph: excluded nodes never enter the beam (visited
+    pre-seed) and the exit beam is scrubbed of the forced entry seed.
     """
     kernel = resolve_step_kernel(step_kernel)
-    states = jax.vmap(
-        lambda c: _init_state(c, entry, eval_dists, n, beam_width))(ctxs)
+    if excl is None:
+        states = jax.vmap(
+            lambda c: _init_state(c, entry, eval_dists, n, beam_width))(ctxs)
+    else:
+        states = jax.vmap(
+            lambda c, e: _init_state(c, entry, eval_dists, n, beam_width,
+                                     excl_words=e))(ctxs, excl)
     hop_limits = jnp.full((ctxs.shape[0],), jnp.int32(max_hops))
     beam_ids, beam_d, _, _, hops, evals = kernel.run_batch(
         states, ctxs, adj, eval_dists, beam_width, hop_limits)
+    if excl is not None:
+        beam_ids, beam_d = scrub_excluded(beam_ids, beam_d, excl)
     return beam_ids, beam_d, SearchStats(hops=hops, dist_evals=evals)
 
 
@@ -478,11 +561,18 @@ def ooc_hop_batch(states, u: Array, active: Array, rows: Array, ctxs: Array,
 
 @functools.partial(jax.jit, static_argnames=("n", "beam_width"))
 def ooc_init_pq(codes: Array, ctxs: Array, entry: Array, n: int,
-                beam_width: int):
+                beam_width: int, excl: Array | None = None):
     """Fresh per-lane states for a PQ-steered out-of-core walk (entry node's
-    ADC distance comes from the device-resident codes)."""
+    ADC distance comes from the device-resident codes).  ``excl`` seeds the
+    per-lane visited bitsets with the filter, exactly as in
+    :func:`fixed_search_batch`."""
+    if excl is None:
+        return jax.vmap(
+            lambda c: _init_state(c, entry, _pq_eval(codes), n,
+                                  beam_width))(ctxs)
     return jax.vmap(
-        lambda c: _init_state(c, entry, _pq_eval(codes), n, beam_width))(ctxs)
+        lambda c, e: _init_state(c, entry, _pq_eval(codes), n, beam_width,
+                                 excl_words=e))(ctxs, excl)
 
 
 @functools.partial(jax.jit, static_argnames=("beam_width",))
@@ -590,6 +680,7 @@ def adaptive_probe_batch(
     lam: Array | None = None,
     l_min: Array | None = None,
     step_kernel: "str | BeamStepKernel | None" = None,
+    excl: Array | None = None,
 ):
     """Phases 1-2 of the adaptive engine: probe walk + budget grant.
 
@@ -606,18 +697,31 @@ def adaptive_probe_batch(
 
     Returns (probe_state, budgets, hop_limits, q_lid); ``probe_state`` is the
     warm per-query search state the continue phase resumes from.
+
+    ``excl`` ((Q, ceil(n/32)) uint32 from :func:`pack_filter`) makes the
+    probe walk filtered in-graph; the returned probe state is already
+    scrubbed of the forced entry seed, so the continue phase (which only
+    ever admits nodes past the pre-seeded visited set) and every partial
+    rerank of the probe beam need no filter awareness of their own.
     """
     l_max = budget_cfg.l_max
     l_min_ = budget_cfg.l_min if l_min is None else l_min
 
     kernel = resolve_step_kernel(step_kernel)
-    states = jax.vmap(
-        lambda c: _init_state(c, entry, eval_dists, n, l_max))(ctxs)
+    if excl is None:
+        states = jax.vmap(
+            lambda c: _init_state(c, entry, eval_dists, n, l_max))(ctxs)
+    else:
+        states = jax.vmap(
+            lambda c, e: _init_state(c, entry, eval_dists, n, l_max,
+                                     excl_words=e))(ctxs, excl)
     nq = ctxs.shape[0]
     probe_state = kernel.run_batch(
         states, ctxs, adj, eval_dists, l_max,
         hop_limits=jnp.full((nq,), jnp.int32(budget_cfg.probe_hops)),
         budgets=jnp.broadcast_to(jnp.int32(l_min_), (nq,)))
+    if excl is not None:
+        probe_state = _scrub_state(probe_state, excl)
     budgets, hop_limits, q_lid = grant_budgets(
         probe_state, budget_cfg, max_hops, lam=lam, l_min=l_min)
     return probe_state, budgets, hop_limits, q_lid
@@ -659,6 +763,7 @@ def adaptive_search_batch(
     lam: Array | None = None,
     l_min: Array | None = None,
     step_kernel: "str | BeamStepKernel | None" = None,
+    excl: Array | None = None,
 ) -> tuple[Array, Array, SearchStats, AdaptiveStats]:
     """The per-query adaptive-beam engine (Prop. 4.2 deployed in-graph).
 
@@ -690,7 +795,7 @@ def adaptive_search_batch(
     """
     probe_state, budgets, hop_limits, q_lid = adaptive_probe_batch(
         ctxs, adj, entry, eval_dists, n, budget_cfg, max_hops,
-        lam=lam, l_min=l_min, step_kernel=step_kernel)
+        lam=lam, l_min=l_min, step_kernel=step_kernel, excl=excl)
     if bucket_ceilings is not None:
         _, budgets = quantize_budgets(budgets, bucket_ceilings)
         hop_limits = _bucket_hop_limits(budget_cfg, budgets, max_hops)
@@ -741,16 +846,19 @@ def beam_search_exact(
     max_hops: int = 2048,
     k: int = 10,
     step_kernel: str | None = None,
+    excl: Array | None = None,
 ) -> tuple[Array, Array, SearchStats]:
     """Exact-distance beam search, batched over (Q, D) queries.
 
     Returns (ids, d2, stats): (Q, k) ascending results + per-query counters.
+    ``excl`` (from :func:`pack_filter`) runs the walk attribute-filtered
+    in-graph; out-of-filter results come back INVALID/inf, never ids.
     """
     n = x.shape[0]
     eval_dists = _exact_eval(x)
     beam_ids, beam_d, stats = fixed_search_batch(
         queries, adj, entry, eval_dists, n, beam_width, max_hops,
-        step_kernel=step_kernel)
+        step_kernel=step_kernel, excl=excl)
     return beam_ids[:, :k], beam_d[:, :k], stats
 
 
@@ -770,6 +878,7 @@ def beam_search_pq(
     k: int = 10,
     rerank: bool = True,
     step_kernel: str | None = None,
+    excl: Array | None = None,
 ) -> tuple[Array, Array, SearchStats]:
     """PQ-routed beam search + optional full-precision re-rank.
 
@@ -781,12 +890,15 @@ def beam_search_pq(
         the final beam re-rank (one batched read of ``beam_width`` nodes,
         mirroring DiskANN's read-along-the-path + rerank).
       adj:    (N, R) graph.
+      excl:   optional (Q, ceil(n/32)) filter words from :func:`pack_filter`;
+        the walk runs filtered in-graph and the rerank sees a pre-scrubbed
+        beam (INVALID lanes rank at inf), so it needs no filter awareness.
     """
     n = codes.shape[0]
     eval_dists = _pq_eval(codes)
     beam_ids, beam_d, stats = fixed_search_batch(
         luts, adj, entry, eval_dists, n, beam_width, max_hops,
-        step_kernel=step_kernel)
+        step_kernel=step_kernel, excl=excl)
 
     if rerank:
         ids, d2 = _rerank_slow_tier(beam_ids, x_slow, queries, k)
@@ -823,21 +935,22 @@ def _rerank_from_vecs(beam_ids, vecs, queries, k):
 @functools.partial(jax.jit, static_argnames=("budget_cfg", "k", "step_kernel"))
 def _beam_search_exact_adaptive_jit(
     x, adj, queries, entry, budget_cfg: AdaptiveBeamBudget, k: int = 10,
-    step_kernel: str | None = None,
+    step_kernel: str | None = None, excl: Array | None = None,
 ):
     """Single-program adaptive path: probe + continue in one compiled call."""
     beam_ids, beam_d, stats, astats = adaptive_search_batch(
         queries, adj, entry, _exact_eval(x), x.shape[0], budget_cfg,
-        step_kernel=step_kernel)
+        step_kernel=step_kernel, excl=excl)
     return beam_ids[:, :k], beam_d[:, :k], stats, astats
 
 
 @functools.partial(jax.jit, static_argnames=("budget_cfg", "step_kernel"))
 def _probe_exact_jit(x, adj, queries, entry, budget_cfg: AdaptiveBeamBudget,
-                     step_kernel: str | None = None):
+                     step_kernel: str | None = None,
+                     excl: Array | None = None):
     return adaptive_probe_batch(
         queries, adj, entry, _exact_eval(x), x.shape[0], budget_cfg,
-        step_kernel=step_kernel)
+        step_kernel=step_kernel, excl=excl)
 
 
 @functools.partial(jax.jit, static_argnames=("budget_cfg", "step_kernel"))
@@ -851,10 +964,11 @@ def _continue_exact_jit(x, adj, probe_state, ctxs, budgets, hop_limits,
 
 @functools.partial(jax.jit, static_argnames=("budget_cfg", "step_kernel"))
 def _probe_pq_jit(codes, adj, luts, entry, budget_cfg: AdaptiveBeamBudget,
-                  step_kernel: str | None = None):
+                  step_kernel: str | None = None,
+                  excl: Array | None = None):
     return adaptive_probe_batch(
         luts, adj, entry, _pq_eval(codes), codes.shape[0], budget_cfg,
-        step_kernel=step_kernel)
+        step_kernel=step_kernel, excl=excl)
 
 
 @functools.partial(jax.jit, static_argnames=("budget_cfg", "step_kernel"))
@@ -900,6 +1014,7 @@ def beam_search_exact_adaptive(
     k: int = 10,
     num_buckets: int | None = None,
     step_kernel: str | None = None,
+    excl: Array | None = None,
 ) -> tuple[Array, Array, SearchStats, AdaptiveStats]:
     """Exact-distance adaptive-beam search (probe -> budget -> continue).
 
@@ -911,12 +1026,18 @@ def beam_search_exact_adaptive(
     execution (:func:`_bucketed_continue`): queries are grouped by granted
     budget and each bucket runs to its own ceiling, so converged lanes free
     real compute. Results are identical to the single-program path.
+
+    ``excl`` filters the walk in-graph (see :func:`pack_filter`); only the
+    probe needs it — the continue phase resumes a scrubbed probe state whose
+    visited bitset already carries the filter.
     """
     if num_buckets is None or num_buckets <= 1:
         return _beam_search_exact_adaptive_jit(
-            x, adj, queries, entry, budget_cfg, k=k, step_kernel=step_kernel)
+            x, adj, queries, entry, budget_cfg, k=k, step_kernel=step_kernel,
+            excl=excl)
     probe_state, budgets, hop_limits, q_lid = _probe_exact_jit(
-        x, adj, queries, entry, budget_cfg, step_kernel=step_kernel)
+        x, adj, queries, entry, budget_cfg, step_kernel=step_kernel,
+        excl=excl)
     ceilings = budget_bucket_ceilings(
         budget_cfg.l_min, budget_cfg.l_max, num_buckets)
     cont = functools.partial(_continue_exact_jit, x, adj,
@@ -933,11 +1054,11 @@ def beam_search_exact_adaptive(
 def _beam_search_pq_adaptive_jit(
     codes, luts, x_slow, adj, queries, entry,
     budget_cfg: AdaptiveBeamBudget, k: int = 10, rerank: bool = True,
-    step_kernel: str | None = None,
+    step_kernel: str | None = None, excl: Array | None = None,
 ):
     beam_ids, beam_d, stats, astats = adaptive_search_batch(
         luts, adj, entry, _pq_eval(codes), codes.shape[0], budget_cfg,
-        step_kernel=step_kernel)
+        step_kernel=step_kernel, excl=excl)
     if rerank:
         ids, d2 = _rerank_slow_tier(beam_ids, x_slow, queries, k)
         return ids, d2, stats, astats
@@ -960,6 +1081,7 @@ def beam_search_pq_adaptive(
     rerank: bool = True,
     num_buckets: int | None = None,
     step_kernel: str | None = None,
+    excl: Array | None = None,
 ) -> tuple[Array, Array, SearchStats, AdaptiveStats]:
     """PQ-routed adaptive-beam search + optional full-precision re-rank.
 
@@ -968,14 +1090,17 @@ def beam_search_pq_adaptive(
     reads. Shapes as in :func:`beam_search_pq`. ``num_buckets`` >= 2 enables
     budget-bucketed continue execution (see
     :func:`beam_search_exact_adaptive`); the final rerank stays one batched
-    slow-tier read over the whole batch.
+    slow-tier read over the whole batch.  ``excl`` filters the walk in-graph
+    (probe only — the continue phase inherits the filter via the visited
+    bitset, see :func:`beam_search_exact_adaptive`).
     """
     if num_buckets is None or num_buckets <= 1:
         return _beam_search_pq_adaptive_jit(
             codes, luts, x_slow, adj, queries, entry, budget_cfg,
-            k=k, rerank=rerank, step_kernel=step_kernel)
+            k=k, rerank=rerank, step_kernel=step_kernel, excl=excl)
     probe_state, budgets, hop_limits, q_lid = _probe_pq_jit(
-        codes, adj, luts, entry, budget_cfg, step_kernel=step_kernel)
+        codes, adj, luts, entry, budget_cfg, step_kernel=step_kernel,
+        excl=excl)
     ceilings = budget_bucket_ceilings(
         budget_cfg.l_min, budget_cfg.l_max, num_buckets)
     cont = functools.partial(_continue_pq_jit, codes, adj,

@@ -1,0 +1,505 @@
+"""Live index mutation: the in-memory delta-graph tier + merge lifecycle.
+
+The serving stack of PRs 3-9 is read-only: an index is built offline
+(:func:`repro.core.build.build_mcgi` / :func:`repro.core.online.build_online_mcgi`),
+published to a block store, and served immutably.  This module adds the
+write path as an LSM-style two-tier structure:
+
+  base tier   : the last *published* index — immutable; served by the normal
+                :class:`repro.serving.SearchEngine` (PQ-routed walk +
+                slow-tier rerank, :class:`~repro.index.disk.BlockSlowTier`
+                keeps serving reads throughout).
+  delta tier  : an in-memory overlay (:class:`DeltaTier`) absorbing inserts
+                and deletes.  Inserts are wired into a private *combined*
+                graph (base adjacency + rows for the new nodes) through
+                Online-MCGI's ``_rewire_batch_online`` — each inserted
+                node's neighbourhood is found by a greedy search towards its
+                own vector, its LID estimated on the fly from that candidate
+                pool, and its edges alpha-pruned with the node-specific
+                ``alpha(u)``; new edges are mirrored with re-pruning of the
+                destinations (:func:`repro.core.build._insert_reverse`).
+                This is the NSG/Vamana lesson applied online: edge *quality*
+                is repaired as the graph mutates, never just appended.
+                Deletes are a tombstone set — nothing is unlinked eagerly.
+
+Searches fan out over both tiers (:meth:`LiveIndex.search`): the base
+engine runs with the base tombstones excluded *in-graph* (the packed filter
+pre-seeds the walk's visited bitset — see
+:func:`repro.core.search.pack_filter`), the delta tier contributes its
+exact top-k over the live inserted vectors (a memtable scan — exact and
+deterministic, the right call while the delta is merge-bounded), and the
+two candidate pools — disjoint by construction — merge through the normal
+full-precision rerank (:func:`repro.core.search._rerank_from_vecs`).
+
+Periodic merge (:meth:`LiveIndex.merge`) compacts live content into a new
+base: a deterministic from-scratch :func:`build_online_mcgi` over the live
+rows in insertion order (bit-reproducible — the ragged-batch scatters are
+pad-masked), a fresh PQ fast tier, a block-aware
+:func:`~repro.core.prune.greedy_block_pack` layout, and an atomic
+tmp-rename store publish (:func:`repro.index.blockstore.write_block_store`)
+under a *generation-numbered* path — readers of the old store are never
+torn.  The live engine swaps via ``update_backend`` (each in-flight request
+finishes against its dispatch-time backend snapshot; see
+:class:`repro.serving.engine._InFlight`), with an optional drift-triggered
+``recalibrate`` when the merged population's mean LID moved.  At a merge
+boundary (empty delta, no tombstones) :meth:`LiveIndex.search` serves the
+engine's result directly, so it is bit-identical to a freshly built index
+of the same live content.
+
+External ids are stable across merges: every insert gets a monotonically
+increasing id; compaction keeps live rows in insertion order, so the
+``ext_of`` map stays sorted and delete-by-external-id is a binary search.
+"""
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+import threading
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build as build_mod
+from repro.core import online as online_mod
+from repro.core import search as search_mod
+from repro.core.types import GraphIndex
+
+Array = jax.Array
+INVALID = build_mod.INVALID
+
+
+class DeltaTier:
+    """In-memory mutable overlay over an immutable base :class:`GraphIndex`.
+
+    Holds the *combined* state: base vectors + appended delta vectors, base
+    adjacency + rows for the delta nodes (wired by the online rewire), the
+    per-node alpha/LID the rewire computed, and the tombstone mask.  The
+    base arrays are never mutated in place — the tier owns copies-on-extend
+    (jnp concatenation), so the published index keeps serving unchanged.
+
+    The population statistics (mu, sigma) and the entry medoid are frozen
+    from the base build (Algorithm 2's bootstrap: per-node LID is estimated
+    on the fly, the population calibration is not re-run per insert).
+    """
+
+    def __init__(self, x_base: Array, graph: GraphIndex,
+                 cfg: build_mod.BuildConfig):
+        self.cfg = cfg
+        self.n_base = int(np.asarray(x_base).shape[0])
+        self.x = jnp.asarray(x_base)
+        self.adj = jnp.asarray(graph.adj)
+        self.alpha = jnp.asarray(graph.alpha)
+        self.lid = jnp.asarray(graph.lid)
+        self.mu = jnp.asarray(graph.mu)
+        self.sigma = jnp.asarray(graph.sigma)
+        self.entry = jnp.asarray(graph.entry)
+        self.tombstone = np.zeros((self.n_base,), dtype=bool)
+
+    # ------------------------------------------------------------ properties
+
+    @property
+    def n(self) -> int:
+        """Combined node count (base + delta, tombstones included)."""
+        return int(self.x.shape[0])
+
+    @property
+    def n_delta(self) -> int:
+        return self.n - self.n_base
+
+    @property
+    def live_mask(self) -> np.ndarray:
+        return ~self.tombstone
+
+    def live_base_mask(self) -> np.ndarray | None:
+        """Allowed mask over *base* nodes for the base engine's in-graph
+        filter — None when no base node is tombstoned (the unfiltered walk
+        is byte-identical to the historical path, so don't filter for
+        nothing)."""
+        base = self.tombstone[: self.n_base]
+        return None if not base.any() else ~base
+
+    # ------------------------------------------------------------- mutation
+
+    def insert(self, vecs) -> np.ndarray:
+        """Absorb a batch of vectors; returns their combined-local ids.
+
+        Each ``cfg.batch``-sized chunk is wired by one
+        ``_rewire_batch_online`` step against the *current* combined graph
+        (new rows start edge-less, exactly like Algorithm 2's refinement of
+        an un-refined node), then mirrored into its destinations with
+        re-pruning.  Chunks smaller than ``cfg.batch`` wrap-pad their id
+        list and scatter only the real prefix — the same masked-scatter
+        discipline as the deterministic online build.
+        """
+        vecs = np.asarray(vecs, dtype=np.float32)
+        if vecs.ndim == 1:
+            vecs = vecs[None]
+        m = vecs.shape[0]
+        if m == 0:
+            return np.empty((0,), np.int64)
+        first = self.n
+        cfg = self.cfg
+        for lo in range(0, m, cfg.batch):
+            chunk = vecs[lo: lo + cfg.batch]
+            ids = np.arange(self.n, self.n + chunk.shape[0], dtype=np.int32)
+            real = ids.size
+            # Extend the combined state: new rows enter edge-less (INVALID
+            # adjacency) with placeholder alpha/LID that the rewire below
+            # overwrites for the real lanes.
+            self.x = jnp.concatenate([self.x, jnp.asarray(chunk)])
+            self.adj = jnp.concatenate([
+                self.adj,
+                jnp.full((real, self.adj.shape[1]), INVALID, jnp.int32)])
+            mid_alpha = 0.5 * (cfg.alpha_min + cfg.alpha_max)
+            self.alpha = jnp.concatenate(
+                [self.alpha, jnp.full((real,), mid_alpha, jnp.float32)])
+            self.lid = jnp.concatenate(
+                [self.lid, jnp.full((real,), self.mu, jnp.float32)])
+
+            ids_np = np.resize(ids, cfg.batch)  # wrap-pad to the jit shape
+            node_ids = jnp.asarray(ids_np)
+            rows, _, alpha_u, lid_u = online_mod._rewire_batch_online(
+                self.x, self.adj, self.mu, self.sigma, self.entry,
+                node_ids, cfg)
+            keep = node_ids[:real]
+            self.adj = self.adj.at[keep].set(rows[:real])
+            self.alpha = self.alpha.at[keep].set(alpha_u[:real])
+            self.lid = self.lid.at[keep].set(lid_u[:real])
+            dest, cand = build_mod._reverse_pairs(
+                ids_np[:real], np.asarray(rows)[:real], cfg.reverse_cap)
+            for ds in range(0, dest.shape[0], cfg.batch):
+                dslice = dest[ds: ds + cfg.batch]
+                cslice = cand[ds: ds + cfg.batch]
+                dvalid = None
+                if dslice.size < cfg.batch:
+                    pad = cfg.batch - dslice.size
+                    dvalid = jnp.asarray(np.arange(cfg.batch) < dslice.size)
+                    dslice = np.concatenate([dslice, dslice[:1].repeat(pad)])
+                    cslice = np.concatenate([
+                        cslice,
+                        np.full((pad, cfg.reverse_cap), INVALID, np.int32)])
+                self.adj = build_mod._insert_reverse(
+                    self.x, self.adj, self.alpha, jnp.asarray(dslice),
+                    jnp.asarray(cslice), cfg, valid=dvalid)
+        self.tombstone = np.concatenate(
+            [self.tombstone, np.zeros((m,), dtype=bool)])
+        return np.arange(first, first + m, dtype=np.int64)
+
+    def delete(self, local_ids) -> None:
+        """Tombstone combined-local ids (base or delta).  Edges are left in
+        place — a tombstoned node stays *navigable* (the filtered walk
+        traverses it, it just can't be returned), which is what keeps the
+        graph connected without eager unlinking."""
+        self.tombstone[np.asarray(local_ids, dtype=np.int64)] = True
+
+    # -------------------------------------------------------------- queries
+
+    def delta_topk(self, queries, k: int) -> tuple[np.ndarray, np.ndarray]:
+        """Exact top-k over the *live delta* vectors (the memtable scan).
+
+        Returns (ids (Q, k) combined-local, d2 (Q, k)) — INVALID/inf padded
+        when fewer than k delta nodes are live.  Exact and deterministic:
+        the bounded-staleness guarantee (an inserted vector is findable the
+        moment ``insert`` returns) rests on this scan, not on walk luck.
+        """
+        queries = np.asarray(queries, dtype=np.float32)
+        nq = queries.shape[0]
+        live = np.flatnonzero(~self.tombstone[self.n_base:]) + self.n_base
+        ids = np.full((nq, k), INVALID, np.int64)
+        d2 = np.full((nq, k), np.inf, np.float32)
+        if live.size == 0:
+            return ids, d2
+        xd = np.asarray(self.x[jnp.asarray(live)])
+        diff = queries[:, None, :] - xd[None]
+        dist = np.einsum("qnd,qnd->qn", diff, diff, dtype=np.float32)
+        take = min(k, live.size)
+        order = np.argsort(dist, axis=1)[:, :take]
+        ids[:, :take] = live[order]
+        d2[:, :take] = np.take_along_axis(dist, order, axis=1)
+        return ids, d2
+
+    def search_exact(self, queries, *, beam_width: int, k: int,
+                     max_hops: int = 2048):
+        """Exact in-graph walk over the live combined graph — the quality
+        view of the incremental edge repair (what the churn benchmark's
+        recall-under-churn measures), with tombstones excluded in-graph.
+
+        This is Online-MCGI serving its own mutating graph: base and delta
+        nodes rank in one beam over the rewired adjacency.  Returns
+        (ids, d2, stats) in combined-local ids.
+        """
+        queries = jnp.asarray(queries)
+        excl = None
+        if self.tombstone.any():
+            excl = search_mod.pack_filter(
+                np.broadcast_to(self.live_mask,
+                                (queries.shape[0], self.n)), self.n)
+        return search_mod.beam_search_exact(
+            self.x, self.adj, queries, self.entry, beam_width=beam_width,
+            max_hops=max_hops, k=k, excl=excl)
+
+
+@dataclasses.dataclass
+class _LiveState:
+    """One generation's consistent (delta, ext_of) pair — replaced atomically
+    at merge publish, so a search that grabbed the old state keeps a
+    consistent view while the swap happens."""
+
+    delta: DeltaTier
+    ext_of: np.ndarray          # combined-local id -> stable external id
+    generation: int
+
+
+class LiveIndex:
+    """Mutable serving front: base engine + delta tier + merge compaction.
+
+    One object owns the whole lifecycle: build the initial base, serve
+    fan-out searches under mutation, and compact the delta back into a
+    published base when it grows past ``merge_threshold``.
+
+    ``store_dir`` switches the base engine's slow tier to a block store
+    (:class:`~repro.index.disk.BlockSlowTier`): each merge publishes a new
+    *generation-numbered* store file by atomic tmp-rename and swaps it in
+    with ``update_backend`` — readers of the old generation (in-flight
+    requests holding their dispatch-time backend snapshot) finish against a
+    closed-but-readable tier.  Without it the slow tier is in-memory rows.
+
+    ``calib`` (queries array) arms drift-triggered recalibration: when a
+    merge moves the population's mean LID by more than ``drift_threshold``,
+    the engine's budget law is refit against the new content
+    (:meth:`repro.serving.SearchEngine.recalibrate` with brute-force ground
+    truth over the merged rows).
+    """
+
+    def __init__(self, x0, cfg: build_mod.BuildConfig, *,
+                 budget_cfg=None, k: int = 10, beam_width: int = 48,
+                 max_hops: int = 2048, m_pq: int = 8, pq_seed: int = 0,
+                 store_dir: str | pathlib.Path | None = None,
+                 nodes_per_block: int = 4, merge_threshold: int = 256,
+                 calib=None, recall_target: float = 0.95,
+                 drift_threshold: float = 0.25, engine_kw: dict | None = None):
+        from repro.serving import engine as engine_mod
+
+        self.cfg = cfg
+        self.k = k
+        self.beam_width = beam_width
+        self.max_hops = max_hops
+        self.m_pq = m_pq
+        self.pq_seed = pq_seed
+        self.budget_cfg = budget_cfg
+        self.store_dir = None if store_dir is None else pathlib.Path(store_dir)
+        self.nodes_per_block = nodes_per_block
+        self.merge_threshold = merge_threshold
+        self.calib = None if calib is None else np.asarray(calib, np.float32)
+        self.recall_target = recall_target
+        self.drift_threshold = drift_threshold
+        self._engine_mod = engine_mod
+        self._engine_kw = dict(engine_kw or {})
+        self._merge_lock = threading.Lock()
+        self._next_ext = 0
+        self.lineage: dict[str, Any] = {"generation": 0, "merges": 0,
+                                        "inserts": 0, "deletes": 0}
+
+        x0 = np.asarray(x0, dtype=np.float32)
+        graph, index, slow_tier = self._build_base(x0, generation=0)
+        backend = engine_mod.TieredBackend(index, slow_tier=slow_tier)
+        self.engine = engine_mod.SearchEngine(
+            backend, budget_cfg, k=k, beam_width=beam_width,
+            max_hops=max_hops, **self._engine_kw)
+        self._state = _LiveState(
+            delta=DeltaTier(x0, graph, cfg),
+            ext_of=np.arange(x0.shape[0], dtype=np.int64), generation=0)
+        self._next_ext = x0.shape[0]
+
+    # ------------------------------------------------------------- plumbing
+
+    def _build_base(self, x_new: np.ndarray, generation: int):
+        """Deterministic base build + (optionally) store publish for one
+        generation's live rows.  The block store gets the block-aware packed
+        layout and lands under a generation-numbered name via the atomic
+        tmp-rename publish of ``write_block_store``."""
+        from repro.index import disk as disk_mod
+
+        graph = online_mod.build_online_mcgi(jnp.asarray(x_new), self.cfg)
+        index = disk_mod.build_tiered_index(
+            jnp.asarray(x_new), graph, m_pq=self.m_pq, seed=self.pq_seed)
+        slow_tier = None
+        if self.store_dir is not None:
+            slot_of = build_mod.block_layout(graph, self.nodes_per_block)
+            slow_tier = disk_mod.open_or_build_slow_tier(
+                self.store_dir / f"live.g{generation}.blocks", index,
+                nodes_per_block=self.nodes_per_block, slot_of=slot_of)
+        return graph, index, slow_tier
+
+    @property
+    def generation(self) -> int:
+        return self._state.generation
+
+    @property
+    def delta_size(self) -> int:
+        st = self._state
+        return int(st.delta.n_delta + st.delta.tombstone.sum())
+
+    @property
+    def n_live(self) -> int:
+        return int(self._state.delta.live_mask.sum())
+
+    def _locate(self, ext_ids) -> np.ndarray:
+        """External ids -> combined-local ids (``ext_of`` stays sorted:
+        compaction preserves insertion order, inserts append)."""
+        st = self._state
+        ext_ids = np.asarray(ext_ids, dtype=np.int64)
+        loc = np.searchsorted(st.ext_of, ext_ids)
+        ok = (loc < st.ext_of.size) & (st.ext_of[np.minimum(
+            loc, st.ext_of.size - 1)] == ext_ids)
+        if not ok.all():
+            raise KeyError(f"unknown/deleted external ids "
+                           f"{ext_ids[~ok][:8].tolist()}")
+        return loc
+
+    # ------------------------------------------------------------- mutation
+
+    def insert(self, vecs, *, auto_merge: bool = True) -> np.ndarray:
+        """Insert vectors; returns their stable external ids.  With
+        ``auto_merge`` the delta compacts once it crosses
+        ``merge_threshold`` (the periodic-merge policy inlined at the write
+        path — callers wanting a background merge call
+        :meth:`merge_async` themselves)."""
+        st = self._state
+        local = st.delta.insert(vecs)
+        ext = np.arange(self._next_ext, self._next_ext + local.size,
+                        dtype=np.int64)
+        self._next_ext += local.size
+        st.ext_of = np.concatenate([st.ext_of, ext])
+        self.lineage["inserts"] += int(local.size)
+        if auto_merge and self.delta_size >= self.merge_threshold:
+            self.merge()
+        return ext
+
+    def delete(self, ext_ids) -> None:
+        """Tombstone by external id — excluded from every search from now
+        on (in-graph on the base tier, masked on the delta scan), reclaimed
+        at the next merge."""
+        st = self._state
+        st.delta.delete(self._locate(ext_ids))
+        self.lineage["deletes"] += int(np.asarray(ext_ids).size)
+
+    # -------------------------------------------------------------- serving
+
+    def search(self, queries, k: int | None = None):
+        """Fan-out search over base + delta; returns (ext_ids, d2).
+
+        At a merge boundary (empty delta, no tombstones) this is *exactly*
+        the engine's result — same compiled programs, no extra ops — so it
+        is bit-identical to serving a freshly built index of the same live
+        content.  Otherwise: base engine with tombstones excluded in-graph,
+        exact delta scan, and the normal full-precision rerank merging the
+        two (disjoint) candidate pools.
+        """
+        k = self.k if k is None else k
+        st = self._state
+        queries = np.asarray(queries, dtype=np.float32)
+        if st.delta.n_delta == 0 and not st.delta.tombstone.any():
+            res = self.engine.search(queries)
+            ids = res.ids.astype(np.int64)
+            ext = np.where(ids >= 0, st.ext_of[np.maximum(ids, 0)], INVALID)
+            return ext, res.d2
+        res = self.engine.search(queries, filter=st.delta.live_base_mask())
+        base_ids = res.ids.astype(np.int64)
+        delta_ids, _delta_d2 = st.delta.delta_topk(queries, k)
+        cand = np.concatenate([base_ids, delta_ids], axis=1)
+        safe = np.maximum(cand, 0)
+        vecs = np.asarray(st.delta.x)[safe]
+        ids_l, d2 = search_mod._rerank_from_vecs_jit(
+            jnp.asarray(cand), jnp.asarray(vecs), jnp.asarray(queries), k=k)
+        ids_l = np.asarray(ids_l)
+        ext = np.where(ids_l >= 0, st.ext_of[np.maximum(ids_l, 0)], INVALID)
+        return ext, np.asarray(d2)
+
+    def search_local(self, queries, k: int | None = None):
+        """Like :meth:`search` but in combined-local ids (test plumbing for
+        bit-identity against a fresh build of the same rows)."""
+        ext, d2 = self.search(queries, k)
+        st = self._state
+        loc = np.where(ext >= 0,
+                       np.searchsorted(st.ext_of, np.maximum(ext, 0)),
+                       INVALID)
+        return loc, d2
+
+    # ---------------------------------------------------------------- merge
+
+    def merge(self) -> int:
+        """Compact live content into a new published base generation.
+
+        Deterministic from-scratch rebuild over the live rows in insertion
+        order, fresh PQ tier, packed block layout, atomic store publish,
+        live engine swap (``update_backend`` — in-flight requests finish on
+        their dispatch-time snapshot), optional drift-triggered
+        recalibration, delta re-base.  Returns the new generation number.
+        Serialised: concurrent calls run one merge at a time.
+        """
+        with self._merge_lock:
+            st = self._state
+            gen = st.generation + 1
+            live = np.flatnonzero(st.delta.live_mask)
+            x_new = np.asarray(st.delta.x)[live]
+            old_mu = float(np.asarray(st.delta.mu))
+            graph, index, slow_tier = self._build_base(x_new, generation=gen)
+            if self.store_dir is not None:
+                self.engine.update_backend(index, slow_tier=slow_tier)
+            else:
+                self.engine.update_backend(index, slow_tier=None)
+            new_mu = float(np.asarray(graph.mu))
+            if (self.budget_cfg is not None and self.calib is not None
+                    and abs(new_mu - old_mu) > self.drift_threshold):
+                gt = _brute_force_gt(x_new, self.calib, self.k)
+                self.engine.recalibrate(self.calib, gt,
+                                        recall_target=self.recall_target)
+                self.lineage["recalibrations"] = (
+                    self.lineage.get("recalibrations", 0) + 1)
+            self.lineage.update(generation=gen,
+                                merges=self.lineage["merges"] + 1,
+                                live=int(x_new.shape[0]),
+                                mu=new_mu)
+            # Atomic re-base: one assignment publishes the new (delta,
+            # ext_of) pair; readers holding the old state stay consistent.
+            self._state = _LiveState(
+                delta=DeltaTier(x_new, graph, self.cfg),
+                ext_of=st.ext_of[live].copy(), generation=gen)
+            return gen
+
+    def merge_async(self) -> threading.Thread:
+        """Run :meth:`merge` on a background thread (the periodic-merge
+        deployment shape); traffic keeps flowing — the engine swap inside
+        is snapshot-consistent for in-flight requests.  Join the returned
+        thread to wait for the publish."""
+        t = threading.Thread(target=self.merge, name="delta-merge",
+                             daemon=True)
+        t.start()
+        return t
+
+    def save(self, path) -> None:
+        """Persist the current *base* generation with the delta/merge
+        lineage riding in the index manifest (see
+        :func:`repro.index.serializer.save_index`)."""
+        from repro.index import serializer
+
+        serializer.save_index(
+            path, self.engine.backend.index,
+            version=2 if self.store_dir is not None else 1,
+            nodes_per_block=(self.nodes_per_block
+                             if self.store_dir is not None else 1),
+            lineage=dict(self.lineage))
+
+    def close(self) -> None:
+        self.engine.close()
+
+
+def _brute_force_gt(x: np.ndarray, queries: np.ndarray,
+                    k: int) -> np.ndarray:
+    """Exact top-k ids over ``x`` for recalibration ground truth."""
+    diff = queries[:, None, :].astype(np.float32) - x[None].astype(np.float32)
+    d2 = np.einsum("qnd,qnd->qn", diff, diff)
+    return np.argsort(d2, axis=1)[:, :k]

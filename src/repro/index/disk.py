@@ -96,6 +96,29 @@ budget grant finish, so the engine submits those adjacency block reads
 tier's cache while other batches' device programs run, exactly like the
 rerank prefetch stage hides the final beam fetch.
 
+Live mutation (the delta tier)
+------------------------------
+Everything above serves an *immutable* published index.  Inserts and
+deletes land in :mod:`repro.index.delta`: an in-memory delta tier absorbs
+writes (each inserted node wired into a private combined graph by
+Online-MCGI's incremental rewire — greedy search to the vector, on-the-fly
+LID, per-node alpha prune, mirrored reverse edges; deletes are tombstones)
+while the :class:`BlockSlowTier` here keeps serving reads untouched.
+Searches fan out: the base engine runs with tombstoned base nodes excluded
+*in-graph* (the packed filter of :func:`repro.core.search.pack_filter`
+pre-seeds the walk's visited bitset, so an excluded node is never expanded
+— it stays navigable, which keeps the graph connected without eager
+unlinking... it just can't be returned), the delta contributes its exact
+top-k over the live inserted rows, and both pools merge through the normal
+full-precision rerank.  A periodic merge compacts live content into a new
+base generation: deterministic rebuild, packed block layout, atomic
+tmp-rename store publish under a generation-numbered path, live
+``update_backend`` swap (in-flight flights finish on their dispatch-time
+backend snapshot — a closed tier's reads degrade to synchronous, bytes
+unchanged), and an optional drift-triggered ``recalibrate``.  At a merge
+boundary the live index's results are bit-identical to a freshly built
+index of the same content.
+
 Serving architecture: the functions below (:func:`search_tiered`,
 :func:`search_tiered_adaptive`) are the kernel-level entry points over one
 tiered index; production serving lowers through
@@ -226,13 +249,19 @@ def search_tiered(
     max_hops: int = 2048,
     rerank: bool = True,
     step_kernel: str | None = None,
+    excl: Array | None = None,
 ) -> tuple[Array, Array, search_mod.SearchStats]:
-    """PQ-routed beam search with slow-tier rerank (the deployed path)."""
+    """PQ-routed beam search with slow-tier rerank (the deployed path).
+
+    ``excl`` ((Q, ceil(n/32)) words from ``search.pack_filter``) runs the
+    walk attribute-filtered in-graph; the rerank consumes a pre-scrubbed
+    beam, so no out-of-filter id can surface.
+    """
     luts = _query_luts(index, queries)
     return search_mod.beam_search_pq(
         index.codes, luts, index.vectors, index.graph.adj, queries,
         index.graph.entry, beam_width=beam_width, max_hops=max_hops,
-        k=k, rerank=rerank, step_kernel=step_kernel,
+        k=k, rerank=rerank, step_kernel=step_kernel, excl=excl,
     )
 
 
@@ -244,6 +273,7 @@ def search_tiered_adaptive(
     rerank: bool = True,
     num_buckets: int | None = None,
     step_kernel: str | None = None,
+    excl: Array | None = None,
 ) -> tuple[Array, Array, search_mod.SearchStats, search_mod.AdaptiveStats]:
     """Per-query adaptive-beam serving path (Prop. 4.2 in the engine).
 
@@ -262,7 +292,7 @@ def search_tiered_adaptive(
     return search_mod.beam_search_pq_adaptive(
         index.codes, luts, index.vectors, index.graph.adj, queries,
         index.graph.entry, budget_cfg=budget_cfg, k=k, rerank=rerank,
-        num_buckets=num_buckets, step_kernel=step_kernel,
+        num_buckets=num_buckets, step_kernel=step_kernel, excl=excl,
     )
 
 
@@ -824,21 +854,29 @@ def ooc_walk(codes: Array, states, ctxs: Array, budgets: Array,
 def ooc_probe(codes: Array, ctxs: Array, entry, n: int,
               budget_cfg: search_mod.AdaptiveBeamBudget,
               tier: BlockSlowTier, max_hops: int | None = None,
-              io_groups: int = 2):
+              io_groups: int = 2, excl: Array | None = None):
     """Out-of-core probe + budget grant: the host-driven counterpart of
     ``search._probe_pq_jit`` (bit-identical outputs for the same inputs).
+
+    ``excl`` filters the probe walk in-graph via the init-time visited
+    pre-seed; the returned probe state is scrubbed of the forced entry seed
+    before the budget grant, matching ``adaptive_probe_batch`` op-for-op so
+    filtered budgets stay bit-identical across the in-graph and out-of-core
+    drivers.
 
     Returns (probe_state, budgets, hop_limits, q_lid).
     """
     l_max = budget_cfg.l_max
     nq = int(ctxs.shape[0])
     states = search_mod.ooc_init_pq(codes, ctxs, jnp.asarray(entry), n,
-                                    l_max)
+                                    l_max, excl=excl)
     probe_state = ooc_walk(
         codes, states, ctxs,
         jnp.full((nq,), jnp.int32(budget_cfg.l_min)),
         jnp.full((nq,), jnp.int32(budget_cfg.probe_hops)),
         l_max, tier, io_groups)
+    if excl is not None:
+        probe_state = search_mod._scrub_state_jit(probe_state, excl)
     budgets, hop_limits, q_lid = search_mod._grant_budgets_jit(
         probe_state, budget_cfg, max_hops)
     return probe_state, budgets, hop_limits, q_lid

@@ -20,8 +20,8 @@ Two on-disk formats:
   :class:`~repro.index.disk.BlockSlowTier` so serving never materialises the
   slow tier in host memory.
 
-The optional manifest riders (``disk_model``, ``shard_laws``) ride in both
-formats unchanged.
+The optional manifest riders (``disk_model``, ``shard_laws``, ``lineage``)
+ride in both formats unchanged.
 """
 from __future__ import annotations
 
@@ -54,6 +54,7 @@ def save_index(
     version: int = 1,
     nodes_per_block: int = 1,
     slot_of=None,
+    lineage: dict | None = None,
 ) -> None:
     """Write one index shard; ``disk_model`` (the slow-tier latency model the
     index was benchmarked/SLO'd under) rides along in the manifest so a
@@ -68,6 +69,12 @@ def save_index(
     tier (vector + adjacency per node, block-aligned + checksummed) in the
     ``<path>.blocks`` sidecar — what :func:`load_slow_tier` serves from
     disk.  ``version=1`` keeps the historical single-npz format.
+
+    ``lineage`` — an optional JSON-serialisable dict recording the index's
+    mutation history (generation number, merge/insert/delete counters,
+    population drift — see :class:`repro.index.delta.LiveIndex`) — rides in
+    the manifest so a reloaded deployment knows which live-index generation
+    it is resuming from.
 
     ``nodes_per_block`` / ``slot_of`` (v2 only) select the sidecar's
     block-aware record layout (see
@@ -98,6 +105,8 @@ def save_index(
             "lam": [float(v) for v in np.asarray(lam)],
             "l_min": [int(v) for v in np.asarray(l_min)],
         }
+    if lineage is not None:
+        manifest["lineage"] = json.loads(json.dumps(lineage))  # must be JSON
     arrays = dict(
         adj=np.asarray(index.graph.adj),
         entry=np.asarray(index.graph.entry),
@@ -158,6 +167,13 @@ def load_shard_laws(path: str | pathlib.Path):
         return None
     return (np.asarray(laws["lam"], np.float32),
             np.asarray(laws["l_min"], np.int32))
+
+
+def load_lineage(path: str | pathlib.Path) -> dict | None:
+    """The live-index mutation lineage stored alongside the index, or None
+    for indexes saved outside the delta-tier lifecycle (the manifest key is
+    optional, like ``disk_model``)."""
+    return _read_manifest(pathlib.Path(path)).get("lineage")
 
 
 def load_index(path: str | pathlib.Path) -> TieredIndex:

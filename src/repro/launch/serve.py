@@ -51,6 +51,15 @@ the production wall-clock seam (:class:`repro.serving.server.WallClock` +
 ``ThreadDispatcher``); the deterministic virtual-clock twin of this loop is
 ``benchmarks/serving_load.py``.
 
+``--filter-frac F`` serves a multi-tenant workload: the corpus is split
+into ~``1/F`` namespaces and every query carries an *allowed* mask for its
+namespace, enforced in-graph (the packed filter pre-seeds the walk's
+visited bitset — excluded nodes are never expanded and never returned, no
+post-filtering). Recall is reported against the per-namespace ground truth
+and the report counts out-of-filter results (must be 0). Single-host only:
+the distributed backend has no global-id view for the bitset (see ROADMAP
+carry-overs).
+
 ``--distributed N`` shards the dataset over N virtual host devices (one
 locally built sub-graph per shard) and serves scatter-gather through a
 ``DistributedBackend``. With ``--adaptive`` the distributed step runs
@@ -318,6 +327,11 @@ def main() -> None:
                          "held-out queries")
     ap.add_argument("--recall-target", type=float, default=0.95)
     ap.add_argument("--calib-sample", type=int, default=256)
+    ap.add_argument("--filter-frac", type=float, default=None, metavar="F",
+                    help="multi-tenant filtered serving: split the corpus "
+                         "into ~1/F namespaces and enforce each query's "
+                         "namespace in-graph (recall measured against the "
+                         "filtered ground truth)")
     ap.add_argument("--serve", action="store_true",
                     help="closed-loop front-door serving (QoS classes, "
                          "deadlines, load shedding) instead of the batch "
@@ -375,6 +389,16 @@ def main() -> None:
     if args.distributed and args.calibrate and not args.per_shard:
         ap.error("distributed calibration is per-shard (shard geometry "
                  "differs); pass --per-shard")
+    if args.filter_frac is not None:
+        if not (0.0 < args.filter_frac <= 1.0):
+            ap.error("--filter-frac must be in (0, 1]")
+        if args.distributed:
+            ap.error("--filter-frac is single-host: the filter bitset is "
+                     "indexed by global node id, which the sharded walk "
+                     "has no view of")
+        if args.serve:
+            ap.error("--filter-frac drives the batch benchmark; the front "
+                     "door paces unfiltered requests")
     if args.distributed and (args.index or args.online or args.vamana):
         ap.error("--distributed builds per-shard sub-graphs in process; "
                  "--index/--online/--vamana apply to single-host serving")
@@ -485,12 +509,43 @@ def main() -> None:
             for _ in range(args.num_batches)]
     qn = np.asarray(queries)
     batches = [qn[s] for s in sels]
+    xn = np.asarray(x)
+    masks = None
+    gts = [np.asarray(gt_i)[s] for s in sels]
+    out_of_filter = 0
+    if args.filter_frac is not None:
+        # Multi-tenant namespaces: each node lives in one of ~1/F tenants,
+        # each query is allowed exactly its tenant's nodes.  Ground truth is
+        # recomputed per batch inside the namespace — unfiltered gt would
+        # mis-score a correctly filtered answer.
+        tenants = max(2, round(1.0 / args.filter_frac))
+        ns_rng = np.random.default_rng(1)
+        node_ns = ns_rng.integers(0, tenants, size=xn.shape[0])
+        masks, gts = [], []
+        for s, qb in zip(sels, batches):
+            q_ns = ns_rng.integers(0, tenants, size=qb.shape[0])
+            allowed = node_ns[None, :] == q_ns[:, None]
+            d2 = np.einsum("qnd,qnd->qn", qb[:, None] - xn[None],
+                           qb[:, None] - xn[None], dtype=np.float32)
+            d2[~allowed] = np.inf
+            masks.append(allowed)
+            gts.append(np.argsort(d2, axis=1)[:, : args.k])
+        print(f"[serve] filtered serving: {tenants} namespaces "
+              f"(~{xn.shape[0] // tenants} nodes each), masks enforced "
+              f"in-graph")
+        _ = engine.search(batches[0], filter=masks[0])  # warm filtered path
     lat_ms, recalls, ios, budgets = [], [], [], []
 
-    def account(res, sel, t0):
+    def account(res, sel, t0, bi):
+        nonlocal out_of_filter
         lat_ms.append((time.perf_counter() - t0) * 1e3)
         recalls.append(float(distance.recall_at_k(
-            jnp.asarray(res.ids), gt_i[sel])))
+            jnp.asarray(res.ids), jnp.asarray(gts[bi]))))
+        if masks is not None:
+            ids = np.asarray(res.ids)
+            ok = masks[bi][np.arange(ids.shape[0])[:, None],
+                           np.maximum(ids, 0)] | (ids < 0)
+            out_of_filter += int((~ok).sum())
         if res.stats is not None:
             ios.append(float(np.mean(np.asarray(res.stats.hops))))
         if res.astats is not None:
@@ -501,13 +556,15 @@ def main() -> None:
         # Double-buffered stream: per-batch latency is completion-to-
         # completion (the pipeline hides the probe sync inside it).
         t0 = t_all
-        for res, sel in zip(engine.search_batches(batches), sels):
-            account(res, sel, t0)
+        stream = engine.search_batches(batches, filter=masks)
+        for bi, (res, sel) in enumerate(zip(stream, sels)):
+            account(res, sel, t0, bi)
             t0 = time.perf_counter()
     else:
-        for qb, sel in zip(batches, sels):
+        for bi, (qb, sel) in enumerate(zip(batches, sels)):
             t0 = time.perf_counter()
-            account(engine.search(qb), sel, t0)
+            flt = None if masks is None else masks[bi]
+            account(engine.search(qb, filter=flt), sel, t0, bi)
     total = time.perf_counter() - t_all
     if args.pipeline and len(lat_ms) > 1:
         # The first completion spans the whole pipeline fill (two batches
@@ -530,6 +587,9 @@ def main() -> None:
           f"{io_part}{extra}({mode}) "
           f"batch_lat p50={np.percentile(lat_ms,50):.1f}ms "
           f"p99={np.percentile(lat_ms,99):.1f}ms" + ssd_part)
+    if masks is not None:
+        print(f"[serve] filter enforcement: out_of_filter={out_of_filter} "
+              f"(in-graph, must be 0)")
     if not args.distributed and args.disk:
         _report_disk_tier(backend, model)
 

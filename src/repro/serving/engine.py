@@ -85,6 +85,7 @@ its own calibrated (lam, l_min)
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 import threading
 from typing import Any, Callable, Iterable, Iterator
@@ -195,13 +196,16 @@ class ExactBackend(_StagedRerankMixin):
         the backend."""
         self.step_kernel = step_kernel
 
+    def num_nodes(self) -> int:
+        return int(self.x.shape[0])
+
     def admit(self, queries: Array) -> Array:
         return jnp.asarray(queries)
 
-    def probe(self, ctxs, budget_cfg):
+    def probe(self, ctxs, budget_cfg, excl=None):
         return search_mod._probe_exact_jit(
             self.x, self.adj, ctxs, self.entry, budget_cfg,
-            step_kernel=self.step_kernel)
+            step_kernel=self.step_kernel, excl=excl)
 
     def continue_fn(self, budget_cfg):
         import functools
@@ -213,10 +217,11 @@ class ExactBackend(_StagedRerankMixin):
     def rerank(self, beam_ids, beam_d, queries, k: int, prefetch=None):
         return beam_ids[:, :k], beam_d[:, :k]
 
-    def fixed(self, queries, *, beam_width: int, max_hops: int, k: int):
+    def fixed(self, queries, *, beam_width: int, max_hops: int, k: int,
+              excl=None):
         ids, d2, stats = search_mod.beam_search_exact(
             self.x, self.adj, queries, self.entry, beam_width=beam_width,
-            max_hops=max_hops, k=k, step_kernel=self.step_kernel)
+            max_hops=max_hops, k=k, step_kernel=self.step_kernel, excl=excl)
         return ids, d2, stats, None
 
     def recall_eval(self, queries, gt_ids, *, k, sample, seed, base_cfg):
@@ -296,16 +301,19 @@ class TieredBackend(_StagedRerankMixin):
         return (self.do_rerank and self.slow_tier is not None
                 and self.slow_tier.is_disk)
 
+    def num_nodes(self) -> int:
+        return int(self.index.codes.shape[0])
+
     def admit(self, queries: Array) -> Array:
         from repro.index.disk import _query_luts
 
         return _query_luts(self.index, jnp.asarray(queries))
 
-    def probe(self, ctxs, budget_cfg):
+    def probe(self, ctxs, budget_cfg, excl=None):
         return search_mod._probe_pq_jit(
             self.index.codes, self.index.graph.adj, ctxs,
             self.index.graph.entry, budget_cfg,
-            step_kernel=self.step_kernel)
+            step_kernel=self.step_kernel, excl=excl)
 
     def continue_fn(self, budget_cfg):
         import functools
@@ -351,7 +359,8 @@ class TieredBackend(_StagedRerankMixin):
         tick = getattr(self.slow_tier, "promotion_tick", None)
         return tick() if tick is not None else None
 
-    def fixed(self, queries, *, beam_width: int, max_hops: int, k: int):
+    def fixed(self, queries, *, beam_width: int, max_hops: int, k: int,
+              excl=None):
         from repro.index.disk import rerank_with_slow_tier, search_tiered
 
         if self.prefetches:
@@ -361,13 +370,14 @@ class TieredBackend(_StagedRerankMixin):
             beam_ids, _beam_d, stats = search_tiered(
                 self.index, queries, beam_width=beam_width,
                 max_hops=max_hops, k=beam_width, rerank=False,
-                step_kernel=self.step_kernel)
+                step_kernel=self.step_kernel, excl=excl)
             ids, d2 = rerank_with_slow_tier(
                 self.slow_tier, np.asarray(beam_ids), queries, k)
             return ids, d2, stats, None
         ids, d2, stats = search_tiered(
             self.index, queries, beam_width=beam_width, max_hops=max_hops,
-            k=k, rerank=self.do_rerank, step_kernel=self.step_kernel)
+            k=k, rerank=self.do_rerank, step_kernel=self.step_kernel,
+            excl=excl)
         return ids, d2, stats, None
 
     def recall_eval(self, queries, gt_ids, *, k, sample, seed, base_cfg):
@@ -465,12 +475,16 @@ class OutOfCoreBackend(_StagedRerankMixin):
             q = jnp.pad(q, ((0, 0), (0, d_book - q.shape[1])))
         return build_lut(q, self.codebook.centroids)
 
-    def probe(self, ctxs, budget_cfg):
+    def num_nodes(self) -> int:
+        return int(self.codes.shape[0])
+
+    def probe(self, ctxs, budget_cfg, excl=None):
         from repro.index import disk as disk_mod
 
         return disk_mod.ooc_probe(
             self.codes, ctxs, self.entry, int(self.codes.shape[0]),
-            budget_cfg, self.slow_tier, io_groups=self.io_groups)
+            budget_cfg, self.slow_tier, io_groups=self.io_groups,
+            excl=excl)
 
     def continue_fn(self, budget_cfg):
         from repro.index import disk as disk_mod
@@ -519,19 +533,22 @@ class OutOfCoreBackend(_StagedRerankMixin):
         tick = getattr(self.slow_tier, "promotion_tick", None)
         return tick() if tick is not None else None
 
-    def fixed(self, queries, *, beam_width: int, max_hops: int, k: int):
+    def fixed(self, queries, *, beam_width: int, max_hops: int, k: int,
+              excl=None):
         from repro.index import disk as disk_mod
 
         ctxs = self.admit(queries)
         nq = int(ctxs.shape[0])
         states = search_mod.ooc_init_pq(
             self.codes, ctxs, self.entry, int(self.codes.shape[0]),
-            beam_width)
+            beam_width, excl=excl)
         state = disk_mod.ooc_walk(
             self.codes, states, ctxs,
             jnp.full((nq,), jnp.int32(beam_width)),
             jnp.full((nq,), jnp.int32(max_hops)),
             beam_width, self.slow_tier, self.io_groups)
+        if excl is not None:
+            state = search_mod._scrub_state_jit(state, excl)
         ids, d2 = disk_mod.rerank_with_slow_tier(
             self.slow_tier, np.asarray(state[0]), queries, k)
         stats = search_mod.SearchStats(hops=np.asarray(state[4]),
@@ -688,7 +705,13 @@ class DistributedBackend:
     def admit(self, queries) -> Array:
         return jnp.asarray(queries)
 
-    def probe(self, ctxs, budget_cfg):
+    def probe(self, ctxs, budget_cfg, excl=None):
+        if excl is not None:
+            raise NotImplementedError(
+                "filtered search is not supported on the distributed "
+                "backend: the filter bitset is indexed by global node id "
+                "while the mesh programs checkpoint shard-local walks with "
+                "no global-id view (see ROADMAP carry-overs)")
         if budget_cfg != self.beam_budget:
             raise ValueError(
                 "staged distributed serving needs the engine's budget_cfg "
@@ -736,9 +759,21 @@ class DistributedBackend:
 
 @dataclasses.dataclass
 class _InFlight:
-    """One admitted batch whose device programs are dispatched, not collected."""
+    """One admitted batch whose device programs are dispatched, not collected.
+
+    ``backend`` is the flight's *snapshot* of the engine's backend, taken at
+    dispatch (a shallow ``copy.copy``): every post-dispatch stage runs
+    against it, so a concurrent :meth:`SearchEngine.update_backend` (the
+    delta-tier merge publishing a new index + block store) never mixes two
+    index versions inside one flight.  The shallow copy freezes the
+    attribute *bindings* (index, codes, slow tier); a replaced disk tier is
+    closed by ``update`` but a closed tier still serves synchronous reads,
+    so the snapshot stays fully functional until its last gather.
+    """
 
     queries: Any
+    backend: Any = None
+    excl: Any = None           # packed filter words ((Q, nw) uint32) or None
     ctxs: Any = None
     probe_state: Any = None
     budgets: Any = None
@@ -838,9 +873,18 @@ class SearchEngine:
 
     # ------------------------------------------------------------- serving
 
-    def search(self, queries) -> BatchResult:
-        """Serve one batch (unpipelined): all stages back to back."""
-        f = self._dispatch(queries)
+    def search(self, queries, *, filter=None) -> BatchResult:
+        """Serve one batch (unpipelined): all stages back to back.
+
+        ``filter`` is a boolean *allowed* mask over the index's nodes —
+        ``(n,)`` shared by every query or ``(Q, n)`` per query (a tenant
+        namespace, an attribute predicate, the delta tier's live set).  It
+        is enforced *in-graph*: the packed mask pre-seeds the walk's visited
+        bitset (see :func:`repro.core.search.pack_filter`), so out-of-filter
+        nodes never enter the beam and can never be returned — queries with
+        fewer than k in-filter reachable nodes pad with INVALID/inf lanes.
+        """
+        f = self._dispatch(queries, filter)
         if self._walk_prefetching():
             f = self._walk_prefetch(f)
         f = self._schedule(f)
@@ -848,7 +892,8 @@ class SearchEngine:
             f = self._prefetch(f)
         return self._gather(f)
 
-    def search_batches(self, batches: Iterable) -> Iterator[BatchResult]:
+    def search_batches(self, batches: Iterable, *,
+                       filter=None) -> Iterator[BatchResult]:
         """Serve a stream of query batches, double-buffered.
 
         Two batches are in flight (three with a disk slow tier, whose extra
@@ -865,38 +910,82 @@ class SearchEngine:
         With ``coalesce_lanes`` set, micro-batches below the threshold are
         merged before dispatch and their results split back on gather — one
         result per *input* batch either way.
+
+        ``filter`` (see :meth:`search`) is either one allowed mask shared by
+        every batch (``(n,)`` bool), or an iterable yielding one entry per
+        input batch — each ``(n,)``, ``(Q_b, n)``, or ``None`` for an
+        unfiltered batch.  Coalesced dispatches concatenate the member
+        batches' per-query masks (``None`` members expand to all-True), so
+        coalescing stays result-transparent per query.
         """
+        pairs = self._with_filters(batches, filter)
         if not self.coalesce_lanes or self.coalesce_lanes <= 1:
-            yield from self._stream(batches)
+            yield from self._stream(pairs)
             return
         groups: list[list[int]] = []   # lane counts of each merged dispatch
-        for res in self._stream(self._coalesced(batches, groups)):
+        for res in self._stream(self._coalesced(pairs, groups)):
             sizes = groups.pop(0)
             if len(sizes) == 1:
                 yield res
             else:
                 yield from _split_result(res, sizes)
 
-    def _coalesced(self, batches: Iterable, groups: list) -> Iterator:
-        """Merge consecutive batches until ``coalesce_lanes`` lanes are
-        admitted; append each flushed group's per-batch sizes to ``groups``
-        (recorded at dispatch, so the split plan is always ahead of the
-        results)."""
+    def _with_filters(self, batches: Iterable, flt) -> Iterator:
+        """Pair each query batch with its allowed mask (or None).
+
+        A single array-like ``flt`` is the shared-mask form; any other
+        non-None value is treated as an iterable of per-batch masks.
+        """
+        if flt is None:
+            for qb in batches:
+                yield np.asarray(qb), None
+            return
+        if isinstance(flt, (np.ndarray, jax.Array, list, tuple)):
+            try:
+                shared = np.asarray(flt)
+            except ValueError:       # ragged per-batch list
+                shared = None
+            if (shared is not None and shared.ndim == 1
+                    and shared.dtype != object):
+                shared = shared.astype(bool)
+                for qb in batches:
+                    yield np.asarray(qb), shared
+                return
+        for qb, m in zip(batches, flt):
+            yield np.asarray(qb), None if m is None else np.asarray(m)
+
+    def _coalesced(self, pairs: Iterable, groups: list) -> Iterator:
+        """Merge consecutive (batch, mask) pairs until ``coalesce_lanes``
+        lanes are admitted; append each flushed group's per-batch sizes to
+        ``groups`` (recorded at dispatch, so the split plan is always ahead
+        of the results)."""
         pend: list[np.ndarray] = []
+        pend_m: list = []
         lanes = 0
-        for qb in batches:
-            qb = np.asarray(qb)
+
+        def flush():
+            groups.append([b.shape[0] for b in pend])
+            qb = pend[0] if len(pend) == 1 else np.concatenate(pend)
+            if all(m is None for m in pend_m):
+                return qb, None
+            n = self.backend.num_nodes()
+            rows = [np.broadcast_to(
+                        np.ones(n, bool) if m is None else m.astype(bool),
+                        (b.shape[0], n))
+                    for b, m in zip(pend, pend_m)]
+            return qb, np.concatenate(rows)
+
+        for qb, m in pairs:
             pend.append(qb)
+            pend_m.append(m)
             lanes += qb.shape[0]
             if lanes >= self.coalesce_lanes:
-                groups.append([b.shape[0] for b in pend])
-                yield pend[0] if len(pend) == 1 else np.concatenate(pend)
-                pend, lanes = [], 0
+                yield flush()
+                pend, pend_m, lanes = [], [], 0
         if pend:
-            groups.append([b.shape[0] for b in pend])
-            yield pend[0] if len(pend) == 1 else np.concatenate(pend)
+            yield flush()
 
-    def _stream(self, batches: Iterable) -> Iterator[BatchResult]:
+    def _stream(self, pairs: Iterable) -> Iterator[BatchResult]:
         """The double-buffered pipeline core (one result per input batch).
 
         ``flight`` holds the batches between dispatch and gather as
@@ -932,8 +1021,8 @@ class SearchEngine:
                 flight.pop(0)
             return done
 
-        for qb in batches:
-            new = self._dispatch(qb)   # batch i enters the device queue first
+        for qb, flt in pairs:
+            new = self._dispatch(qb, flt)  # batch i hits the device queue first
             res = advance()
             flight.append([0, new])
             if res is not None:
@@ -945,14 +1034,16 @@ class SearchEngine:
 
     # -------------------------------------------- front-door dispatch seam
 
-    def begin(self, queries) -> _InFlight:
+    def begin(self, queries, *, filter=None) -> _InFlight:
         """Dispatch one batch and return its in-flight handle without
         blocking — the front half of :meth:`search`, split out so the
         serving front door (:mod:`repro.serving.server`) can start device
         work at flush time and finish it on its own scheduler.  Pair with
         :meth:`finish_from` (full result) and :meth:`partial_result`
-        (best-so-far at a deadline)."""
-        return self._dispatch(queries)
+        (best-so-far at a deadline).  ``filter`` as in :meth:`search`; the
+        flight carries its backend snapshot, so a backend refresh between
+        ``begin`` and ``finish_from`` never mixes index versions."""
+        return self._dispatch(queries, filter)
 
     def finish_from(self, f: _InFlight) -> BatchResult:
         """Run the remaining stages of a :meth:`begin` flight and gather
@@ -993,32 +1084,61 @@ class SearchEngine:
                 "a host-side probe view (partial_parts); the distributed "
                 "mesh state has none")
         parts = tuple(np.asarray(a)
-                      for a in self.backend.partial_parts(f.probe_state))
+                      for a in f.backend.partial_parts(f.probe_state))
         budgets_np = (f.budgets_np if f.budgets_np is not None
                       else np.asarray(f.budgets))
-        res = self.backend.finish(f.queries, parts, self.k, q_lid=f.q_lid,
-                                  budgets_np=budgets_np)
+        res = f.backend.finish(f.queries, parts, self.k, q_lid=f.q_lid,
+                               budgets_np=budgets_np)
         res.extras["partial"] = True
         return res
 
     # ------------------------------------------------- pipeline stage thirds
 
-    def _dispatch(self, queries) -> _InFlight:
+    def _pack_filter(self, flt, nq: int):
+        """Normalise an allowed mask to packed exclusion words (or None)."""
+        if flt is None:
+            return None
+        if not hasattr(self.backend, "num_nodes"):
+            raise NotImplementedError(
+                "filtered search is not supported on this backend (no "
+                "global node-id view; see DistributedBackend.probe)")
+        n = self.backend.num_nodes()
+        allowed = np.asarray(flt, dtype=bool)
+        if allowed.ndim == 1:
+            allowed = np.broadcast_to(allowed, (nq, n))
+        if allowed.shape != (nq, n):
+            raise ValueError(
+                f"filter mask shape {allowed.shape} != ({nq}, {n}) "
+                "(expected an allowed mask of (n,) or (Q, n) bool)")
+        return search_mod.pack_filter(allowed, n)
+
+    def _dispatch(self, queries, flt=None) -> _InFlight:
         """Admission + probe (staged) or the whole program (monolithic);
-        returns device handles without blocking."""
+        returns device handles without blocking.  The flight snapshots the
+        backend (shallow copy) so every later stage — including ones that
+        run after an :meth:`update_backend` — sees one consistent index
+        version."""
+        backend = copy.copy(self.backend)
+        excl = self._pack_filter(flt, int(np.asarray(queries).shape[0]))
         if not self._staged():
-            if hasattr(self.backend, "dispatch"):
-                handles = self.backend.dispatch(queries)
+            if hasattr(backend, "dispatch"):
+                if excl is not None:
+                    raise NotImplementedError(
+                        "filtered search is not supported on the "
+                        "distributed backend (no global node-id view)")
+                handles = backend.dispatch(queries)
             else:
                 q = jnp.asarray(queries)
-                handles = self.backend.fixed(
+                handles = backend.fixed(
                     q, beam_width=self.beam_width, max_hops=self.max_hops,
-                    k=self.k)
-            return _InFlight(queries=queries, handles=handles)
-        ctxs = self.backend.admit(queries)
-        probe_state, budgets, hop_limits, q_lid = self.backend.probe(
-            ctxs, self.budget_cfg)
-        return _InFlight(queries=queries, ctxs=ctxs, probe_state=probe_state,
+                    k=self.k, excl=excl)
+            return _InFlight(queries=queries, backend=backend, excl=excl,
+                             handles=handles)
+        ctxs = backend.admit(queries)
+        probe_state, budgets, hop_limits, q_lid = backend.probe(
+            ctxs, self.budget_cfg, excl=excl)
+        return _InFlight(queries=queries, backend=backend, excl=excl,
+                         ctxs=ctxs, probe_state=probe_state,
                          budgets=budgets, hop_limits=hop_limits, q_lid=q_lid)
 
     def _schedule(self, f: _InFlight) -> _InFlight:
@@ -1036,9 +1156,9 @@ class SearchEngine:
             return f
         cfg = self.budget_cfg
         f.budgets_np = np.asarray(f.budgets)
-        sched = self.backend.schedule_budgets(f.budgets_np)
+        sched = f.backend.schedule_budgets(f.budgets_np)
         f.ceilings = self._resolve_ceilings(sched, cfg)
-        cont = self.backend.continue_fn(cfg)
+        cont = f.backend.continue_fn(cfg)
         if f.ceilings is None or len(f.ceilings) <= 1:
             f.dispatched = cont(f.probe_state, f.ctxs, f.budgets,
                                 f.hop_limits)
@@ -1056,7 +1176,7 @@ class SearchEngine:
         tier's cache while other batches' device programs run.  Pure cache
         warm-up; results never depend on it."""
         if self._staged():
-            f.walk_prefetch = self.backend.prefetch_walk(
+            f.walk_prefetch = f.backend.prefetch_walk(
                 f.probe_state, f.budgets, f.hop_limits)
         return f
 
@@ -1069,7 +1189,7 @@ class SearchEngine:
         backend's slow tier is disk-backed."""
         if self._staged():
             f.parts = self._continue_parts(f)
-            f.prefetch = self.backend.prefetch_rerank(f.parts)
+            f.prefetch = f.backend.prefetch_rerank(f.parts)
         return f
 
     def _continue_parts(self, f: _InFlight) -> tuple:
@@ -1097,17 +1217,17 @@ class SearchEngine:
 
     def _collect(self, f: _InFlight) -> BatchResult:
         if not self._staged():
-            if hasattr(self.backend, "collect"):
-                return self.backend.collect(f.handles)
+            if hasattr(f.backend, "collect"):
+                return f.backend.collect(f.handles)
             ids, d2, stats, astats = f.handles
             return BatchResult(
                 ids=np.asarray(ids), d2=np.asarray(d2), stats=stats,
                 astats=astats,
-                extras=getattr(self.backend, "finish_extras", dict)())
+                extras=getattr(f.backend, "finish_extras", dict)())
         parts = self._continue_parts(f)
-        res = self.backend.finish(f.queries, parts, self.k, q_lid=f.q_lid,
-                                  budgets_np=f.budgets_np,
-                                  prefetch=f.prefetch)
+        res = f.backend.finish(f.queries, parts, self.k, q_lid=f.q_lid,
+                               budgets_np=f.budgets_np,
+                               prefetch=f.prefetch)
         res.ceilings = f.ceilings
         return res
 

@@ -43,6 +43,16 @@ backend) the request completes as ``"timeout"``.  The full result, when it
 eventually lands, never overwrites a completed future — futures complete
 exactly once.
 
+**Live index swaps.**  The front door never pins the backend: every
+dispatch goes through :meth:`SearchEngine.begin`, which snapshots the
+backend's bindings into the flight, and ``finish_from`` /
+``partial_result`` run against that snapshot.  So a live
+``engine.update_backend(...)`` — e.g. the delta tier publishing a merged
+generation (:class:`repro.index.delta.LiveIndex`) — is safe under traffic:
+requests in flight at the swap complete against the index they were
+dispatched on, requests admitted after it serve the new one, and nothing
+observes a half-swapped backend.
+
 **The clock seam.**  All timing flows through an injectable clock/scheduler:
 :class:`WallClock` (a daemon timer thread over ``time.monotonic``) in
 production, :class:`VirtualClock` in tests.  The virtual clock is a manual

@@ -1,0 +1,268 @@
+"""Live mutation: delta tier, merge lifecycle, online-build determinism.
+
+Pinned here:
+
+* ``build_online_mcgi`` is bit-deterministic when ``n % batch != 0`` — the
+  ragged-tail regression: wrap-padded batches must scatter only their real
+  prefix, and the reverse-insert pad lanes (repeated live destinations with
+  all-INVALID candidate pools) must be dropped, or duplicate scatter
+  indices make the build depend on the scatter's unspecified winner;
+* ``_insert_reverse``'s ``valid`` mask drops pad lanes exactly (the real
+  lane's row survives a duplicated destination);
+* bounded staleness: a vector is findable the moment ``insert`` returns
+  and gone the moment ``delete`` returns (base *and* delta tombstones);
+* merge-boundary bit-identity: after ``merge``, ``LiveIndex.search`` is
+  bit-identical to a freshly built index of the same live content;
+* search-during-merge consistency: a flight begun before ``merge`` (which
+  swaps the backend and closes the old disk tier) finishes bit-identical
+  to its pre-merge result — the dispatch-time backend snapshot;
+* external-id stability across insert/delete/merge cycles;
+* the ``lineage`` manifest rider round-trips through the serializer.
+"""
+from __future__ import annotations
+
+import functools
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import build as build_mod
+from repro.core import online as online_mod
+from repro.index.delta import DeltaTier, LiveIndex
+
+CFG = build_mod.BuildConfig(degree=16, beam_width=32, iters=1, batch=128,
+                            max_hops=64)
+D = 12
+
+
+@functools.lru_cache(maxsize=1)
+def _corpus():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((390, D)).astype(np.float32)   # 390 % 128 != 0
+    q = rng.standard_normal((12, D)).astype(np.float32)
+    return x, q
+
+
+def _live(x, **kw):
+    kw.setdefault("merge_threshold", 10_000)               # manual merges
+    return LiveIndex(x, CFG, k=5, beam_width=32, max_hops=64, m_pq=4, **kw)
+
+
+# --------------------------------------------------------------- determinism
+
+def test_online_build_ragged_batch_deterministic():
+    """Two builds over a ragged-tail n agree bit for bit — the regression
+    pin for the wrap-pad duplicate-id scatters (refine + reverse-insert)."""
+    x, _q = _corpus()
+    assert x.shape[0] % CFG.batch != 0, "fixture must exercise the pad path"
+    a = online_mod.build_online_mcgi(jnp.asarray(x), CFG)
+    b = online_mod.build_online_mcgi(jnp.asarray(x), CFG)
+    np.testing.assert_array_equal(np.asarray(a.adj), np.asarray(b.adj))
+    np.testing.assert_array_equal(np.asarray(a.alpha), np.asarray(b.alpha))
+    np.testing.assert_array_equal(np.asarray(a.lid), np.asarray(b.lid))
+    assert int(a.entry) == int(b.entry)
+
+
+def test_insert_reverse_valid_mask_drops_pad_lanes():
+    """A pad lane repeating a live destination with an all-INVALID pool must
+    lose to the real lane: the masked call equals the single-lane call."""
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((40, D)).astype(np.float32))
+    adj = build_mod.random_graph(40, CFG.degree, jax.random.PRNGKey(0))
+    alpha = jnp.full((40,), 1.1, jnp.float32)
+    dest1 = jnp.asarray(np.array([3], np.int32))
+    cand1 = jnp.asarray(np.arange(10, 10 + CFG.reverse_cap,
+                                  dtype=np.int32)[None])
+    ref = build_mod._insert_reverse(x, adj, alpha, dest1, cand1, CFG)
+
+    pad_cand = jnp.full((1, CFG.reverse_cap), build_mod.INVALID, jnp.int32)
+    dest2 = jnp.concatenate([dest1, dest1])          # duplicated destination
+    cand2 = jnp.concatenate([cand1, pad_cand])
+    valid = jnp.asarray(np.array([True, False]))
+    got = build_mod._insert_reverse(x, adj, alpha, dest2, cand2, CFG,
+                                    valid=valid)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+
+
+def test_delta_insert_deterministic():
+    """The delta tier's ragged insert chunks reuse the same masked-scatter
+    discipline: two identical insert sequences produce identical graphs."""
+    x, _q = _corpus()
+    graph = online_mod.build_online_mcgi(jnp.asarray(x), CFG)
+    rng = np.random.default_rng(2)
+    vecs = rng.standard_normal((150, D)).astype(np.float32)  # 150 % 128 != 0
+    tiers = []
+    for _ in range(2):
+        t = DeltaTier(jnp.asarray(x), graph, CFG)
+        t.insert(vecs)
+        tiers.append(t)
+    np.testing.assert_array_equal(np.asarray(tiers[0].adj),
+                                  np.asarray(tiers[1].adj))
+    np.testing.assert_array_equal(np.asarray(tiers[0].alpha),
+                                  np.asarray(tiers[1].alpha))
+
+
+# ---------------------------------------------------------- staleness bounds
+
+def test_bounded_staleness_insert_findable_immediately():
+    x, q = _corpus()
+    li = _live(x)
+    try:
+        for r in range(3):                        # property over rounds
+            rng = np.random.default_rng(100 + r)
+            near = q[:6] + 0.01 * rng.standard_normal((6, D)).astype(
+                np.float32)
+            ids = li.insert(near, auto_merge=False)
+            ext, _d2 = li.search(q[:6])
+            for i in range(6):
+                assert ids[i] in ext[i], (r, i)
+    finally:
+        li.close()
+
+
+def test_delete_tombstones_base_and_delta():
+    x, q = _corpus()
+    li = _live(x)
+    try:
+        ids = li.insert(q[:4] + 1e-3, auto_merge=False)
+        ext, _ = li.search(q[:4])
+        assert np.isin(ids, ext).any()
+        li.delete(ids)                            # delta tombstones
+        ext2, _ = li.search(q[:4])
+        assert not np.isin(ext2, ids).any()
+        base_hit = int(ext2[0, 0])                # base tombstone, in-graph
+        li.delete([base_hit])
+        ext3, _ = li.search(q[:4])
+        assert not (ext3 == base_hit).any()
+        with pytest.raises(KeyError):
+            li.delete([10 ** 9])
+    finally:
+        li.close()
+
+
+# ----------------------------------------------------------- merge lifecycle
+
+def test_merge_boundary_bit_identity():
+    """Post-merge searches are bit-identical to a fresh LiveIndex built over
+    the same live rows — the acceptance property of the ISSUE."""
+    x, q = _corpus()
+    li = _live(x)
+    li2 = None
+    try:
+        rng = np.random.default_rng(3)
+        ids = li.insert(rng.standard_normal((40, D)).astype(np.float32),
+                        auto_merge=False)
+        li.delete(ids[:10])
+        li.delete(np.arange(5))                   # base deletes too
+        assert li.merge() == 1
+        ext, d2 = li.search(q)
+        st = li._state
+        li2 = _live(np.asarray(st.delta.x))       # fresh build, same rows
+        extf, d2f = li2.search(q)
+        mapped = np.where(extf >= 0, st.ext_of[np.maximum(extf, 0)], -1)
+        np.testing.assert_array_equal(mapped, ext)
+        np.testing.assert_array_equal(d2f, d2)
+    finally:
+        li.close()
+        if li2 is not None:
+            li2.close()
+
+
+def test_search_during_merge_snapshot(tmp_path):
+    """A flight begun before the merge finishes bit-identical to its
+    pre-merge result, across the backend swap *and* the old block store's
+    tier being closed (reads degrade to synchronous, bytes unchanged)."""
+    x, q = _corpus()
+    li = _live(x, store_dir=tmp_path, nodes_per_block=4)
+    try:
+        rng = np.random.default_rng(4)
+        ids = li.insert(rng.standard_normal((30, D)).astype(np.float32),
+                        auto_merge=False)
+        li.delete(ids[:5])
+        flt = li._state.delta.live_base_mask()
+        pre = li.engine.search(q, filter=flt)
+        flight = li.engine.begin(q, filter=flt)
+        li.merge()
+        got = li.engine.finish_from(flight)
+        np.testing.assert_array_equal(got.ids, pre.ids)
+        np.testing.assert_array_equal(got.d2, pre.d2)
+        # The new generation's store was published atomically.
+        names = sorted(p.name for p in tmp_path.iterdir())
+        assert any("g1" in n for n in names) and not any(
+            n.endswith(".tmp") for n in names)
+        ext, _ = li.search(q)
+        assert (ext >= 0).all()
+    finally:
+        li.close()
+
+
+def test_ext_ids_stable_across_merges():
+    x, q = _corpus()
+    li = _live(x)
+    try:
+        rng = np.random.default_rng(5)
+        probe = rng.standard_normal((1, D)).astype(np.float32)
+        pid = int(li.insert(probe, auto_merge=False)[0])
+        for cycle in range(2):
+            li.insert(rng.standard_normal((20, D)).astype(np.float32),
+                      auto_merge=False)
+            li.delete(li.insert(rng.standard_normal((3, D)).astype(
+                np.float32), auto_merge=False))
+            li.merge()
+            ext, _ = li.search(probe, 1)
+            assert int(ext[0, 0]) == pid, cycle   # same id, both generations
+        assert li.generation == 2
+    finally:
+        li.close()
+
+
+def test_auto_merge_threshold_and_lineage(tmp_path):
+    x, _q = _corpus()
+    li = _live(x, merge_threshold=32)
+    try:
+        rng = np.random.default_rng(6)
+        li.insert(rng.standard_normal((40, D)).astype(np.float32))
+        assert li.generation == 1                 # crossed the threshold
+        assert li.delta_size == 0
+        p = tmp_path / "live.npz"
+        li.save(p)
+        from repro.index import serializer
+
+        lin = serializer.load_lineage(p)
+        assert lin["generation"] == 1 and lin["inserts"] == 40
+        assert serializer.load_lineage(_plain_index(tmp_path)) is None
+    finally:
+        li.close()
+
+
+def _plain_index(tmp_path: pathlib.Path) -> pathlib.Path:
+    """An index saved outside the delta lifecycle (no lineage rider)."""
+    from repro.index import build_tiered_index, save_index
+
+    x, _q = _corpus()
+    graph = online_mod.build_online_mcgi(jnp.asarray(x), CFG)
+    p = tmp_path / "plain.npz"
+    save_index(p, build_tiered_index(jnp.asarray(x), graph, m_pq=4))
+    return p
+
+
+def test_merge_async_under_traffic():
+    x, q = _corpus()
+    li = _live(x)
+    try:
+        rng = np.random.default_rng(7)
+        li.insert(rng.standard_normal((25, D)).astype(np.float32),
+                  auto_merge=False)
+        t = li.merge_async()
+        for _ in range(4):
+            ext, _ = li.search(q)
+            assert (ext >= 0).all()
+        t.join(timeout=300)
+        assert not t.is_alive() and li.generation == 1
+        ext, _ = li.search(q)
+        assert (ext >= 0).all()
+    finally:
+        li.close()

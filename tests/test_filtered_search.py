@@ -1,0 +1,184 @@
+"""In-graph per-query filtered search: enforcement + parity matrix.
+
+The filter is a boolean *allowed* mask packed into exclusion bitset words
+(:func:`repro.core.search.pack_filter`) that pre-seed the walk's visited
+bitset — excluded nodes are never expanded, never ranked, never returned.
+Pinned here:
+
+* packing layout (bit j of word w is node w*32+j, the walk's own packing);
+* an all-True filter is *bit-identical* to no filter on every single-host
+  backend (the packed words are all zero, so every traced value matches);
+* zero out-of-filter ids across the engine-parity matrix (staged adaptive
+  and fixed-beam), under shared-(n,) and per-query-(Q,n) masks;
+* shared mask vs its tiled per-query form: bit-identical;
+* the batch stream (``search_batches(filter=)``) with ragged per-batch
+  masks (including None members) matches the per-batch ``search`` calls;
+* filtered recall against the *restricted* brute force (the correctness
+  anchor: filtering is semantics, not just masking);
+* the distributed backend refuses filters loudly (no global-id view).
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import search
+from tests import _backend_fixtures as fx
+
+K = 10
+
+
+def _tenant_masks(n: int, nq: int, tenants: int = 3, seed: int = 7):
+    """A per-query namespace workload: node -> tenant, query -> tenant,
+    allowed = same tenant."""
+    rng = np.random.default_rng(seed)
+    node_t = rng.integers(0, tenants, size=n)
+    q_t = rng.integers(0, tenants, size=nq)
+    return node_t[None, :] == q_t[:, None]        # (Q, n) bool
+
+
+def _assert_in_filter(ids: np.ndarray, allowed: np.ndarray):
+    ids = np.asarray(ids)
+    ok = allowed[np.arange(ids.shape[0])[:, None], np.maximum(ids, 0)]
+    ok |= ids < 0
+    assert ok.all(), f"{int((~ok).sum())} out-of-filter ids returned"
+
+
+def test_pack_filter_bit_layout():
+    n = 70                                         # spans 3 words, ragged
+    allowed = np.ones((2, n), dtype=bool)
+    allowed[0, 0] = False                          # word 0, bit 0
+    allowed[0, 33] = False                         # word 1, bit 1
+    allowed[1, 69] = False                         # word 2, bit 5
+    words = np.asarray(search.pack_filter(allowed, n))
+    assert words.shape == (2, 3) and words.dtype == np.uint32
+    assert words[0, 0] == 1 and words[0, 1] == 2 and words[0, 2] == 0
+    assert words[1, 2] == 1 << 5 and words[1, 0] == 0
+    # Shared (n,) mask packs to one row.
+    shared = np.asarray(search.pack_filter(allowed[0], n))
+    np.testing.assert_array_equal(shared, words[:1])
+
+
+@pytest.mark.parametrize("variant", fx.SINGLE_HOST)
+def test_all_true_filter_bit_identical(variant):
+    """Filter that excludes nothing must not perturb a single bit — the
+    packed words are zero, so the filtered programs compute the exact same
+    values as the unfiltered ones."""
+    _x, q, _gt, _idx, _t = fx.built()
+    eng = fx.engine(variant)
+    plain = eng.search(q)
+    ones = eng.search(q, filter=np.ones(eng.backend.num_nodes(), bool))
+    fx.assert_bit_identical(plain, ones)
+
+
+@pytest.mark.parametrize("variant", fx.SINGLE_HOST)
+def test_zero_out_of_filter_adaptive(variant):
+    x, q, _gt, _idx, _t = fx.built()
+    allowed = _tenant_masks(x.shape[0], q.shape[0])
+    res = fx.engine(variant).search(q, filter=allowed)
+    _assert_in_filter(res.ids, allowed)
+    assert (np.asarray(res.ids) >= 0).any(), "filtered search returned nothing"
+
+
+@pytest.mark.parametrize("variant", ("exact", "tiered", "disk"))
+def test_zero_out_of_filter_fixed_beam(variant):
+    """The monolithic fixed-beam path (budget_cfg=None) enforces the same
+    mask through ``backend.fixed``."""
+    from repro import serving
+
+    x, q, _gt, _idx, _t = fx.built()
+    allowed = _tenant_masks(x.shape[0], q.shape[0])
+    eng = serving.SearchEngine(fx._make_backend(variant, fx.BUDGET), None,
+                               k=K, beam_width=48)
+    res = eng.search(q, filter=allowed)
+    _assert_in_filter(res.ids, allowed)
+    assert (np.asarray(res.ids) >= 0).any()
+
+
+def test_shared_mask_matches_tiled():
+    x, q, _gt, _idx, _t = fx.built()
+    rng = np.random.default_rng(3)
+    shared = rng.random(x.shape[0]) < 0.5          # one namespace for all
+    eng = fx.engine("tiered")
+    a = eng.search(q, filter=shared)
+    b = eng.search(q, filter=np.broadcast_to(shared, (q.shape[0],
+                                                      x.shape[0])))
+    fx.assert_bit_identical(a, b)
+    _assert_in_filter(a.ids, np.broadcast_to(shared,
+                                             (q.shape[0], x.shape[0])))
+
+
+def test_filtered_recall_vs_restricted_brute_force():
+    """Semantics anchor: with a roomy namespace the filtered walk finds the
+    *within-namespace* nearest neighbours, not merely in-namespace ids."""
+    x, q, _gt, _idx, _t = fx.built()
+    rng = np.random.default_rng(11)
+    shared = rng.random(x.shape[0]) < 0.5
+    res = fx.engine("exact").search(q, filter=shared)
+    xn, qn = np.asarray(x), np.asarray(q)
+    d2 = np.einsum("qnd,qnd->qn", qn[:, None] - xn[None],
+                   qn[:, None] - xn[None], dtype=np.float32)
+    d2[:, ~shared] = np.inf
+    gt = np.argsort(d2, axis=1)[:, :K]
+    hits = np.mean([np.isin(np.asarray(res.ids)[i], gt[i]).mean()
+                    for i in range(qn.shape[0])])
+    assert hits >= 0.8, f"filtered recall {hits:.3f} below floor"
+
+
+def test_search_batches_per_batch_masks():
+    """The stream path with ragged per-batch masks — (n,), (Q,n) and a None
+    member — matches the per-batch ``search`` results bit for bit."""
+    x, q, _gt, _idx, _t = fx.built()
+    eng = fx.engine("tiered")
+    batches = fx.split(q, 16)
+    rng = np.random.default_rng(5)
+    masks = [rng.random(x.shape[0]) < 0.6,
+             _tenant_masks(x.shape[0], batches[1].shape[0], seed=9),
+             None][: len(batches)]
+    streamed = list(eng.search_batches(batches, filter=masks))
+    assert len(streamed) == len(batches)
+    for qb, m, res in zip(batches, masks, streamed):
+        fx.assert_bit_identical(res, eng.search(qb, filter=m))
+        if m is not None:
+            am = np.broadcast_to(m, (qb.shape[0], x.shape[0]))
+            _assert_in_filter(res.ids, am)
+
+
+def test_search_batches_filtered_coalescing():
+    """Sub-quantum batches coalesce into one dispatch with their per-query
+    masks concatenated (a None member expands to all-allowed rows); results
+    still match the uncoalesced per-batch reference."""
+    x, q, _gt, _idx, _t = fx.built()
+    eng = fx.engine("tiered", coalesce_lanes=32)
+    ref = fx.engine("tiered")
+    batches = [q[:8], q[8:16], q[16:24]]
+    masks = [_tenant_masks(x.shape[0], 8, seed=13), None,
+             _tenant_masks(x.shape[0], 8, seed=17)]
+    out = list(eng.search_batches(batches, filter=masks))
+    for qb, m, res in zip(batches, masks, out):
+        # Per-query bit-identity (pinned budget center); ceilings are a
+        # batch-composition property, so the merged dispatch may pick a
+        # different bucket family — same discipline as the unfiltered
+        # coalescing parity test.
+        r = ref.search(qb, filter=m)
+        np.testing.assert_array_equal(res.ids, r.ids)
+        np.testing.assert_array_equal(res.d2, r.d2)
+        np.testing.assert_array_equal(np.asarray(res.stats.hops),
+                                      np.asarray(r.stats.hops))
+        np.testing.assert_array_equal(np.asarray(res.astats.budget),
+                                      np.asarray(r.astats.budget))
+
+
+@pytest.mark.skipif(not fx.has_mesh(), reason="needs >= 8 devices")
+def test_distributed_rejects_filter():
+    _mesh, _arrays, _per, q, _gt = fx.built_dist()
+    eng = fx.engine("dist")
+    with pytest.raises(NotImplementedError, match="node-id view"):
+        eng.search(q[:8], filter=np.ones(8, bool))
+
+
+def test_engine_filter_shape_checks():
+    _x, q, _gt, _idx, _t = fx.built()
+    eng = fx.engine("tiered")
+    with pytest.raises(ValueError):
+        eng.search(q, filter=np.ones((q.shape[0], 7), bool))
